@@ -1,0 +1,147 @@
+"""Benchmark harness: one entry per paper table/figure + kernel
+microbenchmarks + the roofline summary table from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run table4 fig8 # subset
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def _rows(title, rows, keys=None):
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    keys = keys or list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in keys))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def bench_table4():
+    from benchmarks import paper_tables
+    _rows("Table 4: fully-encrypted aggregation vs plaintext",
+          paper_tables.table4())
+
+
+def bench_table6():
+    from benchmarks import paper_tables
+    _rows("Table 6: crypto parameter sweep", paper_tables.table6())
+
+
+def bench_table7():
+    from benchmarks import paper_tables
+    _rows("Table 7: selective-encryption ratio sweep (ViT-sized)",
+          paper_tables.table7())
+
+
+def bench_fig7():
+    from benchmarks import paper_tables
+    _rows("Figure 7: overhead vs selection ratio", paper_tables.fig7())
+
+
+def bench_fig8():
+    from benchmarks import paper_tables
+    _rows("Figure 8: training-cycle decomposition (SAR bandwidth)",
+          paper_tables.fig8())
+
+
+def bench_fig14a():
+    from benchmarks import paper_tables
+    _rows("Figure 14a: aggregation cost vs clients", paper_tables.fig14a())
+
+
+def bench_dp():
+    from benchmarks import paper_tables
+    _rows("Remarks 3.12-3.14: privacy-budget laws",
+          paper_tables.dp_advantage())
+
+
+def bench_kernels():
+    """Microbenchmark the HE kernels (ref backend on CPU; Pallas interpret
+    parity is asserted in tests)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.ckks import params as ckks_params
+    from repro.kernels import ref
+
+    rows = []
+    for n_poly in (2048, 8192):
+        ctx = ckks_params.make_context(n_poly=n_poly, n_limbs=2,
+                                       delta_bits=26)
+        lc = ctx.limbs[0]
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(rng.randint(0, lc.q, size=(64, n_poly))
+                        .astype(np.uint32))
+        tw = jnp.asarray(lc.psi_rev_mont)
+        f = jax.jit(lambda x: ref.ntt_fwd(x, tw, jnp.uint32(lc.q),
+                                          jnp.uint32(lc.qinv_neg)))
+        f(x).block_until_ready()
+        t0 = time.time()
+        for _ in range(5):
+            out = f(x)
+        out.block_until_ready()
+        dt = (time.time() - t0) / 5
+        rows.append({"kernel": "ntt_fwd", "N": n_poly, "batch": 64,
+                     "us_per_poly": dt / 64 * 1e6})
+    _rows("Kernel microbenchmarks (ref backend, CPU)", rows)
+
+
+def bench_roofline():
+    """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
+    art_dir = os.path.join(os.path.dirname(__file__), "artifacts")
+    rows = []
+    if os.path.isdir(art_dir):
+        for fn in sorted(os.listdir(art_dir)):
+            if not fn.endswith(".json"):
+                continue
+            a = json.load(open(os.path.join(art_dir, fn)))
+            r = a["roofline"]
+            rows.append({
+                "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+                "tag": a.get("tag", ""),
+                "compute_ms": r["compute_s"] * 1e3,
+                "memory_ms": r["memory_s"] * 1e3,
+                "collective_ms": r["collective_s"] * 1e3,
+                "dominant": r["dominant"],
+                "flops_ratio": r["flops_ratio"],
+                "roofline_frac": r["roofline_fraction"],
+            })
+    _rows("Roofline terms from dry-run artifacts", rows)
+
+
+ALL = {
+    "table4": bench_table4,
+    "table6": bench_table6,
+    "table7": bench_table7,
+    "fig7": bench_fig7,
+    "fig8": bench_fig8,
+    "fig14a": bench_fig14a,
+    "dp": bench_dp,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    for n in names:
+        t0 = time.time()
+        ALL[n]()
+        print(f"[{n} done in {time.time()-t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

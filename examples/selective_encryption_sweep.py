@@ -1,0 +1,57 @@
+"""Reproduce the paper's key trade-off curves on a real model:
+overhead vs selection ratio (Table 7 / Figure 7) and the privacy-budget
+advantage of sensitivity-ordered selection (Remarks 3.12-3.14), using an
+actual sensitivity map from a trained LM client.
+
+    PYTHONPATH=src python examples/selective_encryption_sweep.py
+"""
+import dataclasses
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.core import dp, packing, selection
+from repro.core.ckks import params as ckks_params
+from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
+from repro.data import make_client_streams
+from repro.fl import ClientConfig, FLClient
+from repro.models import build_model
+
+
+def main():
+    cfg = dataclasses.replace(configs.get_config("qwen1.5-0.5b", smoke=True),
+                              vocab=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    streams = make_client_streams(1, cfg.vocab, seq_len=32, batch_size=4)
+    client = FLClient(0, model, streams[0],
+                      ClientConfig(sensitivity_probes=4))
+    print("computing per-parameter sensitivity map "
+          f"({cfg.param_count()/1e3:.0f}k params)...")
+    sens = client.sensitivity_map(params)
+    print(f"sensitivity: min={sens.min():.2e} max={sens.max():.2e} "
+          f"p99/p50={np.percentile(sens,99)/max(np.percentile(sens,50),1e-12):.1f} "
+          "(heavily imbalanced, Figure 5)")
+
+    ctx = ckks_params.make_context(n_poly=2048, n_limbs=2, delta_bits=24)
+    print(f"\n{'p':>5} {'cts':>6} {'comm_MB':>8} {'ratio':>6} "
+          f"{'eps_sel/J':>10} {'eps_rnd/J':>10}")
+    j = dp.epsilon_all_plaintext(sens, b=1.0)
+    for p in (0.0, 0.05, 0.1, 0.3, 0.5, 1.0):
+        agg = SelectiveHEAggregator.build(
+            ctx, params, sens, AggregatorConfig(p_ratio=p))
+        rep = agg.overhead_report()
+        adv = dp.selection_advantage(sens, p, b=1.0) if 0 < p < 1 else None
+        es = adv["eps_selective"] / j if adv else (1.0 if p == 0 else 0.0)
+        er = adv["eps_random"] / j if adv else (1.0 if p == 0 else 0.0)
+        print(f"{p:5.2f} {rep['n_ciphertexts']:6d} "
+              f"{rep['bytes_total']/1e6:8.2f} {rep['comm_ratio']:6.2f} "
+              f"{es:10.3f} {er:10.3f}")
+    print("\nsensitivity-ordered selection spends quadratically less "
+          "privacy budget than random selection at equal overhead "
+          "(Remark 3.14).")
+
+
+if __name__ == "__main__":
+    main()

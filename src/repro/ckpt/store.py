@@ -1,0 +1,98 @@
+"""Fault-tolerant pytree checkpointing (npz payload + json manifest).
+
+Atomicity: payload is written to a temp dir then os.replace'd into place —
+a crash mid-write never corrupts the latest checkpoint.  Rotation keeps the
+last ``keep`` steps.  FL round boundaries are natural checkpoint points
+(repro/fl/orchestrator.py) so a restarted job resumes at the last round.
+
+Sharded arrays: leaves are gathered to host (np.asarray) before writing;
+restore hands back numpy arrays to be re-sharded by the caller's pjit
+in_shardings (device_put against the target sharding).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(path: str, step: int, tree, extra: dict | None = None):
+    """Atomic write of one checkpoint at `path/step_<N>/`."""
+    names, leaves, _ = _flatten_with_names(tree)
+    final = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_ckpt_")
+    try:
+        arrays = {f"a{i}": np.asarray(l) for i, l in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "payload.npz"), **arrays)
+        manifest = {"step": step, "names": names,
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, tree_like, step: int | None = None):
+    """Returns (tree, step, extra) or (None, None, None) when absent."""
+    step = latest_step(path) if step is None else step
+    if step is None:
+        return None, None, None
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    payload = np.load(os.path.join(d, "payload.npz"))
+    leaves = [payload[f"a{i}"] for i in range(len(manifest["names"]))]
+    _, treedef = jax.tree_util.tree_flatten(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"], manifest["extra"]
+
+
+class CheckpointManager:
+    """Rotation + resume policy around save/restore."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        out = save_checkpoint(self.path, step, tree, extra)
+        self._rotate()
+        return out
+
+    def restore(self, tree_like, step: int | None = None):
+        return restore_checkpoint(self.path, tree_like, step)
+
+    def _rotate(self):
+        if not os.path.isdir(self.path):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.path)
+                       if d.startswith("step_"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)

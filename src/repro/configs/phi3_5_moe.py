@@ -1,0 +1,17 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 16 experts top-2.
+Source: hf:microsoft/Phi-3.5-MoE-instruct (hf tier).
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064, MoE 16e top-2."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=6400,
+    vocab=32064, n_experts=16, top_k=2, capacity_factor=1.25,
+    dtype="bfloat16", param_dtype="float32", remat=True,
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+    vocab=257, n_experts=4, top_k=2, capacity_factor=2.0, attn_chunk=16,
+)

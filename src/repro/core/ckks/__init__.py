@@ -1,0 +1,7 @@
+from repro.core.ckks.params import CkksContext, make_context, make_test_context
+from repro.core.ckks.cipher import (
+    Ciphertext, keygen, encrypt_values, encrypt_coeffs, decrypt_values,
+    decrypt_values_np, decrypt_to_coeffs, add, mul_plain_scalar,
+    mul_plain_vec, weighted_sum, rescale,
+)
+from repro.core.ckks import encoding, threshold

@@ -1,0 +1,237 @@
+"""RNS-CKKS cipher: keygen / encrypt / decrypt / homomorphic ops.
+
+Everything here is jittable (jax.random + the u32 kernel ops); ciphertexts are
+u32[..., L, 2, N] tensors in bit-reversed NTT domain, wrapped with their scale.
+
+Scale discipline (depth-1, the paper's setting):
+  fresh ct: scale = delta
+  ct (*) plain-scalar weight: scale = delta**2   (no rescale — lazy; decode
+  divides by the ct scale, saving one iNTT+NTT per limb per round. `rescale`
+  is still provided and tested.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ckks import encoding
+from repro.core.ckks.params import CkksContext
+from repro.kernels import ops, ref as _ref
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Ciphertext:
+    """data: u32[..., L, 2, N] NTT domain; scale: encoding scale."""
+
+    data: Any
+    scale: float = dataclasses.field(metadata=dict(static=True), default=1.0)
+
+    @property
+    def n_limbs(self):
+        return self.data.shape[-3]
+
+    @property
+    def c0(self):
+        return self.data[..., 0, :]
+
+    @property
+    def c1(self):
+        return self.data[..., 1, :]
+
+
+# ---------------------------------------------------------------------------
+# sampling helpers (all jittable)
+# ---------------------------------------------------------------------------
+
+def _ternary_residues(key, shape, ctx: CkksContext):
+    """Uniform ternary {-1,0,1} -> per-limb residues u32[..., L, N]."""
+    t = jax.random.randint(key, shape, 0, 3)  # 0,1,2 ~ {-1,0,1}
+    out = []
+    for q in ctx.primes:
+        r = jnp.where(t == 0, np.uint32(q - 1),
+                      jnp.where(t == 1, np.uint32(0), np.uint32(1)))
+        out.append(r.astype(jnp.uint32))
+    return jnp.stack(out, axis=-2)  # [..., L, N]
+
+
+def _gaussian_residues(key, shape, ctx: CkksContext, sigma: float | None = None):
+    sigma = float(sigma if sigma is not None else ctx.error_sigma)
+    e = jnp.rint(sigma * jax.random.normal(key, shape)).astype(jnp.int32)
+    out = [_ref.mod_reduce_centered(e, np.uint32(q)) for q in ctx.primes]
+    return jnp.stack(out, axis=-2)
+
+
+def _uniform_residues(key, shape, ctx: CkksContext):
+    outs = []
+    for i, q in enumerate(ctx.primes):
+        k = jax.random.fold_in(key, i)
+        outs.append(jax.random.randint(k, shape, 0, q, dtype=jnp.uint32))
+    return jnp.stack(outs, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# key generation
+# ---------------------------------------------------------------------------
+
+def keygen(ctx: CkksContext, key) -> tuple[dict, dict]:
+    """Returns (sk, pk).
+
+    sk = {"s_mont": u32[L, N]}           NTT-domain Montgomery secret
+    pk = {"pk0_mont", "pk1_mont": u32[L, N]}  b = -(a s) + e, a
+    """
+    k_s, k_a, k_e = jax.random.split(key, 3)
+    n = ctx.n_poly
+    s = ops.ntt_fwd(_ternary_residues(k_s, (n,), ctx), ctx)       # [L, N]
+    s_mont = ops.to_mont(s, ctx)
+    a = _uniform_residues(k_a, (n,), ctx)                         # NTT domain
+    e = ops.ntt_fwd(_gaussian_residues(k_e, (n,), ctx), ctx)
+    a_s = ops.mont_mul(a, s_mont, ctx)
+    pk0 = ops.mod_add(ops.mod_neg(a_s, ctx), e, ctx)
+    return (
+        {"s_mont": s_mont},
+        {"pk0_mont": ops.to_mont(pk0, ctx), "pk1_mont": ops.to_mont(a, ctx)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# encrypt / decrypt
+# ---------------------------------------------------------------------------
+
+def encrypt_coeffs(ctx: CkksContext, pk: dict, m_coeff, key,
+                   scale: float | None = None) -> Ciphertext:
+    """m_coeff: u32[B, L, N] coefficient-domain residues (from encode)."""
+    scale = float(scale if scale is not None else ctx.delta)
+    b = m_coeff.shape[0]
+    n = ctx.n_poly
+    k_u, k_e0, k_e1 = jax.random.split(key, 3)
+    m = ops.ntt_fwd(m_coeff, ctx)
+    u = ops.ntt_fwd(_ternary_residues(k_u, (b, n), ctx), ctx)
+    e0 = ops.ntt_fwd(_gaussian_residues(k_e0, (b, n), ctx), ctx)
+    e1 = ops.ntt_fwd(_gaussian_residues(k_e1, (b, n), ctx), ctx)
+    c0 = ops.mul_add(u, pk["pk0_mont"][None], ops.mod_add(e0, m, ctx), ctx)
+    c1 = ops.mul_add(u, pk["pk1_mont"][None], e1, ctx)
+    return Ciphertext(data=jnp.stack([c0, c1], axis=-2), scale=scale)
+
+
+def encrypt_values(ctx: CkksContext, pk: dict, values, key) -> Ciphertext:
+    """values: f32[B, slots] -> fresh ciphertext (jnp encode path)."""
+    return encrypt_coeffs(ctx, pk, encoding.encode_jnp(values, ctx), key)
+
+
+def decrypt_to_coeffs(ctx: CkksContext, sk: dict, ct: Ciphertext):
+    """-> u32[B, L, N] coefficient-domain residues of m + noise.
+    Handles rescaled ciphertexts (fewer limbs than the context)."""
+    s = sk["s_mont"][: ct.n_limbs]
+    phase = ops.mul_add(ct.c1, s[None], ct.c0, ctx)
+    return ops.ntt_inv(phase, ctx)
+
+
+def decrypt_values(ctx: CkksContext, sk: dict, ct: Ciphertext):
+    """-> f32[B, slots] (jnp decode path, 2-limb)."""
+    return encoding.decode_jnp(decrypt_to_coeffs(ctx, sk, ct), ctx, ct.scale)
+
+
+def decrypt_values_np(ctx: CkksContext, sk: dict, ct: Ciphertext) -> np.ndarray:
+    """High-precision host decode (any limb count)."""
+    coeffs = np.asarray(decrypt_to_coeffs(ctx, sk, ct))
+    return encoding.decode_np(coeffs, ctx, ct.scale)
+
+
+# ---------------------------------------------------------------------------
+# homomorphic ops
+# ---------------------------------------------------------------------------
+
+def _limbs_to_minus2(data):
+    """[..., L, 2, N] -> [..., 2, L, N]: ops.* helpers broadcast per-limb
+    constants over axis -2, so the limb axis must sit there."""
+    return jnp.moveaxis(data, -3, -2)
+
+
+def _limbs_to_minus3(data):
+    return jnp.moveaxis(data, -2, -3)
+
+
+def add(ctx: CkksContext, a: Ciphertext, b: Ciphertext) -> Ciphertext:
+    assert abs(a.scale - b.scale) < 1e-6 * a.scale
+    out = ops.mod_add(_limbs_to_minus2(a.data), _limbs_to_minus2(b.data), ctx)
+    return Ciphertext(data=_limbs_to_minus3(out), scale=a.scale)
+
+
+def mul_plain_scalar(ctx: CkksContext, ct: Ciphertext, w: float) -> Ciphertext:
+    """ct x plaintext scalar (encoded at delta): one multiplicative depth."""
+    w_mont = encoding.encode_scalar_residues(w, ctx)   # u32[L]
+    wb = jnp.asarray(w_mont)[:, None]                  # [L, N->bcast]
+    out = ops.mont_mul(_limbs_to_minus2(ct.data), wb, ctx)
+    return Ciphertext(data=_limbs_to_minus3(out), scale=ct.scale * ctx.delta)
+
+
+def mul_plain_vec(ctx: CkksContext, ct: Ciphertext, pt_mont) -> Ciphertext:
+    """ct x plaintext vector; pt_mont: u32[L, N] NTT-domain Montgomery."""
+    out = ops.mont_mul(_limbs_to_minus2(ct.data), pt_mont, ctx)
+    return Ciphertext(data=_limbs_to_minus3(out), scale=ct.scale * ctx.delta)
+
+
+def weighted_sum(ctx: CkksContext, cts: Ciphertext, weights) -> Ciphertext:
+    """Fused FedAvg aggregation: sum_i w_i * ct_i over the leading axis.
+
+    cts.data: u32[C, ..., L, 2, N]; weights: python floats len C.
+    Uses the fused kernel (single pass over client ciphertexts).
+    """
+    w_mont = np.stack([encoding.encode_scalar_residues(float(w), ctx)
+                       for w in weights], axis=0)     # [C, L]
+    # fold the (c0,c1) component axis into batch: [C, ..., L, 2, N] ->
+    # [C, ..., 2, L, N] so the kernel sees limbs at axis -2.
+    x = jnp.moveaxis(cts.data, -3, -2)
+    out = ops.weighted_sum(x, jnp.asarray(w_mont), ctx)
+    return Ciphertext(data=jnp.moveaxis(out, -2, -3),
+                      scale=cts.scale * ctx.delta)
+
+
+def rescale(ctx: CkksContext, ct: Ciphertext) -> Ciphertext:
+    """Drop the last RNS limb: c'_j = (c_j - lift(c_last)) * q_last^{-1} mod q_j.
+
+    Needs a domain switch for the last limb (iNTT under q_last, re-NTT under
+    each remaining q_j) because NTT evaluation points differ per prime.
+    """
+    l = ct.n_limbs
+    assert l >= 2
+    q_last = ctx.primes[l - 1]
+    lc_last = ctx.limbs[l - 1]
+    # last limb to coefficient domain (exact)
+    c_last_ntt = ct.data[..., l - 1, :, :]
+    flat = c_last_ntt.reshape((-1, ctx.n_poly))
+    c_last = _ref.ntt_inv(flat, jnp.asarray(lc_last.psi_inv_rev_mont),
+                          np.asarray(lc_last.n_inv_mont),
+                          np.uint32(q_last), np.uint32(lc_last.qinv_neg))
+    new_limbs = []
+    for j in range(l - 1):
+        qj = ctx.primes[j]
+        lcj = ctx.limbs[j]
+        # centered lift of v in [0, q_last) into Z_qj: primes are within 2x of
+        # each other, so v mod qj needs at most one conditional subtract.
+        half = np.uint32(q_last // 2)
+        if q_last > qj:
+            v_mod = jnp.where(c_last >= np.uint32(qj), c_last - np.uint32(qj),
+                              c_last)
+        else:
+            v_mod = c_last
+        lifted = jnp.where(
+            c_last > half,
+            _ref.mod_sub(v_mod, np.uint32(q_last % qj), np.uint32(qj)),
+            v_mod,
+        )
+        lifted_ntt = _ref.ntt_fwd(lifted, jnp.asarray(lcj.psi_rev_mont),
+                                  np.uint32(qj), np.uint32(lcj.qinv_neg))
+        cj = ct.data[..., j, :, :].reshape((-1, ctx.n_poly))
+        diff = _ref.mod_sub(cj, lifted_ntt, np.uint32(qj))
+        inv_mont = np.uint32(pow(q_last, -1, qj) * (1 << 32) % qj)
+        outj = _ref.mont_mul(diff, jnp.broadcast_to(inv_mont, diff.shape),
+                             np.uint32(qj), np.uint32(lcj.qinv_neg))
+        new_limbs.append(outj.reshape(ct.data[..., j, :, :].shape))
+    data = jnp.stack(new_limbs, axis=-3)
+    return Ciphertext(data=data, scale=ct.scale / q_last)

@@ -1,0 +1,250 @@
+"""CKKS (RNS) parameter generation for the TPU-native u32 backend.
+
+All ring arithmetic downstream is u32-only Montgomery (R = 2**32): primes are
+NTT-friendly (q == 1 mod 2N) and < 2**30 so every Montgomery bound holds with
+16-bit limb decomposition (see repro/kernels/ref.py).
+
+Everything here is host-side Python/numpy executed once per context; the
+resulting tables are plain numpy arrays handed to jitted code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# number theory (host-side, python ints)
+# ---------------------------------------------------------------------------
+
+_SMALL_PRIMES = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37]
+
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller-Rabin for n < 3.3e24 (we only use n < 2**31)."""
+    if n < 2:
+        return False
+    for p in _SMALL_PRIMES:
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def find_ntt_primes(n_poly: int, count: int, max_bits: int = 30) -> list[int]:
+    """Largest `count` primes q < 2**max_bits with q == 1 (mod 2*n_poly)."""
+    step = 2 * n_poly
+    q = ((1 << max_bits) - 1) // step * step + 1
+    primes: list[int] = []
+    while len(primes) < count and q > (1 << 20):
+        if is_prime(q):
+            primes.append(q)
+        q -= step
+    if len(primes) < count:
+        raise ValueError(f"could not find {count} NTT primes for N={n_poly}")
+    return primes
+
+
+def _primitive_root(q: int) -> int:
+    """Smallest primitive root modulo prime q."""
+    phi = q - 1
+    factors = set()
+    m = phi
+    d = 2
+    while d * d <= m:
+        while m % d == 0:
+            factors.add(d)
+            m //= d
+        d += 1
+    if m > 1:
+        factors.add(m)
+    for g in range(2, q):
+        if all(pow(g, phi // f, q) != 1 for f in factors):
+            return g
+    raise ValueError("no primitive root")
+
+
+def root_of_unity(q: int, order: int) -> int:
+    """A primitive `order`-th root of unity mod q (order | q-1)."""
+    assert (q - 1) % order == 0
+    g = _primitive_root(q)
+    w = pow(g, (q - 1) // order, q)
+    assert pow(w, order, q) == 1 and pow(w, order // 2, q) != 1
+    return w
+
+
+def bit_reverse(x: int, bits: int) -> int:
+    out = 0
+    for _ in range(bits):
+        out = (out << 1) | (x & 1)
+        x >>= 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-prime (limb) Montgomery + NTT tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LimbContext:
+    """All constants for one RNS limb prime q (< 2**30)."""
+
+    q: int
+    # Montgomery constants, R = 2**32
+    qinv_neg: int        # -q^{-1} mod 2**32
+    r2: int              # R^2 mod q  (to_mont multiplicand)
+    one_mont: int        # R mod q
+    # negacyclic NTT tables (Longa-Naehrig layout), in Montgomery form
+    psi_rev_mont: np.ndarray      # [N] u32, psi^bitrev(i) * R mod q
+    psi_inv_rev_mont: np.ndarray  # [N] u32
+    n_inv_mont: np.ndarray        # scalar u32 array, N^{-1} * R mod q
+
+    def to_mont_scalar(self, x: int) -> int:
+        """x -> x*R mod q (host-side)."""
+        return (x % self.q) * (1 << 32) % self.q
+
+
+@functools.lru_cache(maxsize=64)
+def make_limb_context(q: int, n_poly: int) -> LimbContext:
+    assert q < (1 << 30), "Montgomery u32 bounds require q < 2**30"
+    assert (q - 1) % (2 * n_poly) == 0
+    logn = n_poly.bit_length() - 1
+    r = 1 << 32
+    qinv = pow(q, -1, r)
+    qinv_neg = (-qinv) % r
+    r2 = r * r % q
+    psi = root_of_unity(q, 2 * n_poly)   # primitive 2N-th root (negacyclic)
+    psi_inv = pow(psi, -1, q)
+
+    def mont(x: int) -> int:
+        return x * r % q
+
+    psi_rev = np.zeros(n_poly, dtype=np.uint32)
+    psi_inv_rev = np.zeros(n_poly, dtype=np.uint32)
+    for i in range(n_poly):
+        j = bit_reverse(i, logn)
+        psi_rev[i] = mont(pow(psi, j, q))
+        psi_inv_rev[i] = mont(pow(psi_inv, j, q))
+    n_inv = pow(n_poly, -1, q)
+    return LimbContext(
+        q=q,
+        qinv_neg=qinv_neg,
+        r2=r2,
+        one_mont=r % q,
+        psi_rev_mont=psi_rev,
+        psi_inv_rev_mont=psi_inv_rev,
+        n_inv_mont=np.asarray(mont(n_inv), dtype=np.uint32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# full CKKS context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CkksContext:
+    """RNS-CKKS context, depth-1 chain (the paper's setting).
+
+    Ciphertext tensor layout everywhere: u32[..., n_limbs, 2, N] in
+    (bit-reversed) NTT domain.  `delta` is the encoding scale; after the one
+    ct x plain weighting the scale is delta**2 and we *lazily* skip rescale
+    (divide at decode) — see DESIGN.md §3.
+    """
+
+    n_poly: int                 # ring degree N (slots = N/2)
+    primes: tuple[int, ...]     # RNS limb primes, big -> small
+    delta_bits: int             # encoding scale = 2**delta_bits
+    security_lambda: int = 128  # nominal; N>=8192 & logQ<=60 clears 128-bit
+    error_sigma: float = 3.2    # RLWE noise stddev
+    hamming_weight: int = 0     # 0 => uniform ternary secret
+
+    @property
+    def n_limbs(self) -> int:
+        return len(self.primes)
+
+    @property
+    def slots(self) -> int:
+        return self.n_poly // 2
+
+    @property
+    def delta(self) -> float:
+        return float(2 ** self.delta_bits)
+
+    @property
+    def big_q(self) -> int:
+        out = 1
+        for q in self.primes:
+            out *= q
+        return out
+
+    @property
+    def log_q(self) -> float:
+        return math.log2(self.big_q)
+
+    @functools.cached_property
+    def limbs(self) -> tuple[LimbContext, ...]:
+        return tuple(make_limb_context(q, self.n_poly) for q in self.primes)
+
+    # -- serialized-size model (for the paper's communication tables) -------
+    def ciphertext_bytes(self, packed: bool = True) -> int:
+        """Bytes to ship one ciphertext.
+
+        packed=True models entropy-optimal serialization (ceil(log2 q) bits
+        per coefficient, what PALISADE approximates); packed=False is the raw
+        u32 wire format this implementation would DMA.
+        """
+        if packed:
+            bits = sum(q.bit_length() for q in self.primes) * 2 * self.n_poly
+            return (bits + 7) // 8
+        return self.n_limbs * 2 * self.n_poly * 4
+
+    def plaintext_bytes(self, n_values: int) -> int:
+        return 4 * n_values  # f32 wire format
+
+    def num_ciphertexts(self, n_values: int) -> int:
+        return max(0, -(-n_values // self.slots))
+
+    def encrypted_bytes(self, n_values: int, packed: bool = True) -> int:
+        return self.num_ciphertexts(n_values) * self.ciphertext_bytes(packed)
+
+
+def make_context(
+    n_poly: int = 8192,
+    n_limbs: int = 2,
+    delta_bits: int = 26,
+    max_prime_bits: int = 30,
+) -> CkksContext:
+    """Build a context. Defaults mirror the paper: packing batch 4096 slots
+    (N=8192), multiplicative depth 1, 128-bit security."""
+    assert n_poly & (n_poly - 1) == 0, "N must be a power of two"
+    primes = tuple(find_ntt_primes(n_poly, n_limbs, max_prime_bits))
+    # depth-1 headroom: values*delta**2 must stay below Q/2 at decode
+    headroom_bits = sum(q.bit_length() for q in primes) - 2 * delta_bits - 1
+    if headroom_bits < 4:
+        raise ValueError(
+            f"insufficient modulus headroom: logQ~{sum(q.bit_length() for q in primes)}"
+            f" vs 2*delta_bits={2 * delta_bits}; add limbs or shrink delta"
+        )
+    return CkksContext(n_poly=n_poly, primes=primes, delta_bits=delta_bits)
+
+
+# Small context for tests/examples on CPU.
+def make_test_context(n_poly: int = 256, n_limbs: int = 2, delta_bits: int = 20):
+    return make_context(n_poly=n_poly, n_limbs=n_limbs, delta_bits=delta_bits)

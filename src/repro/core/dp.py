@@ -1,0 +1,77 @@
+"""Laplace-mechanism DP accounting for partially-encrypted FL (paper §3).
+
+The paper's analysis: encrypting parameter i spends 0 privacy budget
+(Theorem 3.9); leaving it plaintext with Laplace(b) noise spends
+eps_i = Delta f_i / b (Lemma 3.8); budgets add by sequential composition
+(Lemma 3.10), so a partial encryption scheme spends
+
+    eps_total = sum_{i not in S} Delta f_i / b          (Theorem 3.11)
+
+Under Delta f ~ U(0,1): all-plaintext J, random-p (1-p) J, and sensitivity-
+ordered top-p selection (1-p)^2 J (Remarks 3.12-3.14).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def laplace_noise_tree(tree, key, b: float):
+    """Add Laplace(0, b) to every leaf (the optional DP step in Alg. 1)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [l + b * jax.random.laplace(k, l.shape, dtype=l.dtype)
+              for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def laplace_noise_vec(vec, key, b: float):
+    return vec + b * jax.random.laplace(key, vec.shape, dtype=vec.dtype)
+
+
+# ---------------------------------------------------------------------------
+# epsilon accounting
+# ---------------------------------------------------------------------------
+
+
+def epsilon_total(sens_vec: np.ndarray, mask: np.ndarray, b: float) -> float:
+    """Theorem 3.11: sum of Delta f_i / b over UNENCRYPTED parameters."""
+    s = np.abs(np.asarray(sens_vec, dtype=np.float64).ravel())
+    m = np.asarray(mask, dtype=bool).ravel()
+    return float(s[~m].sum() / b)
+
+
+def epsilon_all_plaintext(sens_vec: np.ndarray, b: float) -> float:
+    """Remark 3.12: J = sum_i Delta f_i / b."""
+    return float(np.abs(np.asarray(sens_vec, dtype=np.float64)).sum() / b)
+
+
+def epsilon_uniform_random(j_total: float, p: float) -> float:
+    """Remark 3.13 closed form (Delta f ~ U(0,1)): (1-p) J."""
+    return (1.0 - p) * j_total
+
+
+def epsilon_uniform_selective(j_total: float, p: float) -> float:
+    """Remark 3.14 closed form (Delta f ~ U(0,1)): (1-p)^2 J.
+
+    Top-p selection removes the largest mass: residual = integral of the
+    lowest (1-p) quantile of U(0,1) = (1-p)^2 / 2, vs total mass 1/2.
+    """
+    return (1.0 - p) ** 2 * j_total
+
+
+def selection_advantage(sens_vec: np.ndarray, p: float, b: float,
+                        seed: int = 0) -> dict:
+    """Empirical eps for {selective, random, none} at ratio p (paper's key
+    observation, used by benchmarks and tests)."""
+    from repro.core import selection
+
+    s = np.asarray(sens_vec, dtype=np.float64).ravel()
+    sel = selection.top_p_mask(s, p)
+    rnd = selection.random_mask(p, s.size, seed=seed)
+    return {
+        "eps_none": epsilon_all_plaintext(s, b),
+        "eps_random": epsilon_total(s, rnd, b),
+        "eps_selective": epsilon_total(s, sel, b),
+    }

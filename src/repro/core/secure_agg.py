@@ -1,0 +1,176 @@
+"""Algorithm 1: HE-based federated aggregation with Selective Parameter
+Encryption.
+
+Data flow per round (single-key setup; threshold variant in fl/orchestrator):
+
+  client:  vec = flatten(W_i)
+           enc, plain = split_by_mask(vec, partition)         # static indices
+           ct_i = Enc(pk, encode(enc))                        # [n_chunks] cts
+           (optional) plain += Laplace(b)
+  server:  ct_glob   = sum_i alpha_i (*) ct_i                 # fused kernel
+           plain_glob = sum_i alpha_i * plain_i               # plaintext
+  client:  enc_glob = decode(Dec(sk, ct_glob))
+           W_glob = unflatten(merge(enc_glob, plain_glob))
+
+The server never sees the masked (most attack-prone) parameters in
+plaintext; weights alpha_i are plaintext by default (paper §2.3) costing the
+single multiplicative depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp, packing, selection
+from repro.core.ckks import cipher, encoding
+from repro.core.ckks.cipher import Ciphertext
+from repro.core.ckks.params import CkksContext
+from repro.core.packing import FlatSpec, MaskPartition
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ProtectedUpdate:
+    """One client's outgoing update: encrypted chunks + plaintext rest."""
+
+    ct: Ciphertext          # data u32[n_chunks, L, 2, N]
+    plain: Any              # f32[n_plain]
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorConfig:
+    p_ratio: float = 0.1
+    strategy: str = "top_p"      # top_p | random | per_layer | recipe | all | none
+    dp_b: float = 0.0            # Laplace scale on plaintext part (0 = off)
+    seed: int = 0
+
+
+class SelectiveHEAggregator:
+    """Stateful glue object owning (ctx, partition, flat spec)."""
+
+    def __init__(self, ctx: CkksContext, spec: FlatSpec,
+                 part: MaskPartition, cfg: AggregatorConfig):
+        self.ctx = ctx
+        self.spec = spec
+        self.part = part
+        self.cfg = cfg
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def build(ctx: CkksContext, params, sens_vec: np.ndarray,
+              cfg: AggregatorConfig) -> "SelectiveHEAggregator":
+        spec = packing.make_flat_spec(params)
+        n = spec.total
+        if cfg.strategy == "top_p":
+            mask = selection.top_p_mask(sens_vec, cfg.p_ratio)
+        elif cfg.strategy == "random":
+            mask = selection.random_mask(cfg.p_ratio, n, seed=cfg.seed)
+        elif cfg.strategy == "per_layer":
+            mask = selection.per_layer_top_p_mask(sens_vec, cfg.p_ratio,
+                                                  spec.offsets, spec.sizes)
+        elif cfg.strategy == "recipe":
+            mask = selection.recipe_mask(sens_vec, cfg.p_ratio,
+                                         spec.offsets, spec.sizes)
+        elif cfg.strategy == "all":
+            mask = np.ones(n, dtype=bool)
+        elif cfg.strategy == "none":
+            mask = np.zeros(n, dtype=bool)
+        else:
+            raise ValueError(cfg.strategy)
+        part = packing.make_partition(mask, ctx.slots)
+        return SelectiveHEAggregator(ctx, spec, part, cfg)
+
+    # -- client side ---------------------------------------------------------
+
+    def client_protect(self, params, pk: dict, key) -> ProtectedUpdate:
+        vec, _ = packing.flatten_params(params)
+        return self.client_protect_vec(vec, pk, key)
+
+    def client_protect_vec(self, vec, pk: dict, key) -> ProtectedUpdate:
+        enc_vals, plain = packing.split_by_mask(vec, self.part)
+        k_enc, k_dp = jax.random.split(key)
+        coeffs = encoding.encode_jnp(enc_vals, self.ctx)
+        ct = cipher.encrypt_coeffs(self.ctx, pk, coeffs, k_enc)
+        if self.cfg.dp_b > 0:
+            plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
+        return ProtectedUpdate(ct=ct, plain=plain)
+
+    def client_recover(self, agg: ProtectedUpdate, sk: dict):
+        """Decrypt + merge -> flat global vector."""
+        enc = cipher.decrypt_values(self.ctx, sk, agg.ct)
+        return packing.merge_by_mask(enc, agg.plain, self.part)
+
+    def client_recover_params(self, agg: ProtectedUpdate, sk: dict):
+        return packing.unflatten_params(self.client_recover(agg, sk), self.spec)
+
+    # -- server side ---------------------------------------------------------
+
+    def server_aggregate(self, updates: Sequence[ProtectedUpdate],
+                         weights: Sequence[float]) -> ProtectedUpdate:
+        """sum_i alpha_i [[enc_i]]  +  sum_i alpha_i plain_i."""
+        cts = Ciphertext(
+            data=jnp.stack([u.ct.data for u in updates]),
+            scale=updates[0].ct.scale)
+        ct_glob = cipher.weighted_sum(self.ctx, cts, list(weights))
+        w = jnp.asarray(np.asarray(weights, dtype=np.float32))
+        plain_glob = jnp.einsum("c,cp->p",
+                                w, jnp.stack([u.plain for u in updates]))
+        return ProtectedUpdate(ct=ct_glob, plain=plain_glob)
+
+    # -- reporting (paper's overhead tables) ---------------------------------
+
+    def overhead_report(self) -> dict:
+        part = self.part
+        ct_bytes = self.ctx.encrypted_bytes(part.n_enc)
+        pt_bytes = self.ctx.plaintext_bytes(part.n_plain)
+        return {
+            "n_total": part.n_total,
+            "n_enc": part.n_enc,
+            "ratio": part.ratio,
+            "n_ciphertexts": part.n_chunks,
+            "bytes_encrypted": ct_bytes,
+            "bytes_plain": pt_bytes,
+            "bytes_total": ct_bytes + pt_bytes,
+            "bytes_all_plain": self.ctx.plaintext_bytes(part.n_total),
+            "comm_ratio": (ct_bytes + pt_bytes)
+                          / max(1, self.ctx.plaintext_bytes(part.n_total)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# encryption-mask agreement (paper §2.4 Step 2, Figure 4)
+# ---------------------------------------------------------------------------
+
+
+def agree_mask(ctx: CkksContext, pk: dict, sk: dict,
+               local_sens_vecs: Sequence[np.ndarray],
+               weights: Sequence[float], p: float, key) -> np.ndarray:
+    """Clients encrypt local sensitivity maps; server HE-aggregates them;
+    clients decrypt the aggregate and derive the top-p mask.
+
+    (Algorithm 1 writes Select() over the ciphertext; comparisons are not
+    CKKS-evaluable, so — as the paper's own implementation must — the
+    decrypted aggregate is thresholded client-side and M becomes public FL
+    configuration.  Documented in DESIGN.md §5.)
+    """
+    n = int(local_sens_vecs[0].size)
+    slots = ctx.slots
+    n_chunks = -(-n // slots)
+    cts = []
+    for i, s in enumerate(local_sens_vecs):
+        buf = np.zeros(n_chunks * slots, dtype=np.float32)
+        buf[:n] = np.asarray(s, dtype=np.float32).ravel()
+        coeffs = jnp.asarray(encoding.encode_np(
+            buf.reshape(n_chunks, slots), ctx))
+        cts.append(cipher.encrypt_coeffs(ctx, pk, coeffs,
+                                         jax.random.fold_in(key, i)))
+    stacked = Ciphertext(data=jnp.stack([c.data for c in cts]),
+                         scale=cts[0].scale)
+    agg = cipher.weighted_sum(ctx, stacked, list(weights))
+    s_glob = cipher.decrypt_values_np(ctx, sk, agg).ravel()[:n]
+    return selection.top_p_mask(s_glob, p)

@@ -1,0 +1,71 @@
+"""Encryption-mask selection (paper §2.4 Step 2).
+
+All selectors return a flat boolean numpy mask over the flattened parameter
+vector (host-side: masks are FL *configuration*, computed once per task and
+baked into the jitted round step as static indices — see packing.py).
+
+Monotonicity: ``top_p_mask(s, p1) subset top_p_mask(s, p2)`` for p1 <= p2 is
+guaranteed by selecting along a fixed argsort order (deterministic
+tie-break by index).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _n_select(n_total: int, p: float) -> int:
+    p = float(min(max(p, 0.0), 1.0))
+    return int(round(n_total * p))
+
+
+def top_p_mask(sens_vec: np.ndarray, p: float) -> np.ndarray:
+    """Global top-p by sensitivity magnitude. Returns bool[P]."""
+    s = np.asarray(sens_vec, dtype=np.float64).ravel()
+    k = _n_select(s.size, p)
+    mask = np.zeros(s.size, dtype=bool)
+    if k > 0:
+        # stable order: sort by (-|s|, index) so masks nest across p
+        order = np.lexsort((np.arange(s.size), -np.abs(s)))
+        mask[order[:k]] = True
+    return mask
+
+
+def random_mask(p: float, n_total: int, seed: int = 0) -> np.ndarray:
+    """Random-p baseline (FLARE's 'partial encryption'); nested across p for
+    a fixed seed (same permutation prefix)."""
+    rng = np.random.RandomState(seed)
+    order = rng.permutation(n_total)
+    mask = np.zeros(n_total, dtype=bool)
+    mask[order[: _n_select(n_total, p)]] = True
+    return mask
+
+
+def per_layer_top_p_mask(sens_vec: np.ndarray, p: float,
+                         offsets, sizes) -> np.ndarray:
+    """Top-p within each leaf (layer) instead of globally."""
+    s = np.asarray(sens_vec, dtype=np.float64).ravel()
+    mask = np.zeros(s.size, dtype=bool)
+    for off, size in zip(offsets, sizes):
+        seg = s[off: off + size]
+        k = _n_select(size, p)
+        if k > 0:
+            order = np.lexsort((np.arange(size), -np.abs(seg)))
+            mask[off + order[:k]] = True
+    return mask
+
+
+def recipe_mask(sens_vec: np.ndarray, p: float, offsets, sizes,
+                first_last: bool = True) -> np.ndarray:
+    """The paper's empirical recipe: global top-p UNION first & last leaves
+    ('encrypting top-30% ... as well as the first and last model layers')."""
+    mask = top_p_mask(sens_vec, p)
+    if first_last and len(sizes) > 0:
+        mask[offsets[0]: offsets[0] + sizes[0]] = True
+        mask[offsets[-1]: offsets[-1] + sizes[-1]] = True
+    return mask
+
+
+def mask_stats(mask: np.ndarray) -> dict:
+    mask = np.asarray(mask, dtype=bool)
+    return {"n_total": int(mask.size), "n_enc": int(mask.sum()),
+            "ratio": float(mask.mean())}

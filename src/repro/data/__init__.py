@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticLM, dirichlet_partition,
+                                  make_client_streams)

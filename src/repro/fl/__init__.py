@@ -1,0 +1,4 @@
+from repro.fl.keys import KeyAuthority, ThresholdKeyAuthority
+from repro.fl.client import FLClient, ClientConfig
+from repro.fl.server import FLServer
+from repro.fl.orchestrator import FLTask, FLRunConfig, run_federated_training

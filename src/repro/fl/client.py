@@ -1,0 +1,120 @@
+"""FL client: local training + selective encryption of the outgoing model.
+
+Supports FedAvg (plain local SGD/AdamW) and FedProx (proximal term against
+the incoming global model).  Local training is a jitted step closed over
+the model's loss_fn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, sensitivity
+from repro.models import Model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientConfig:
+    local_steps: int = 4
+    lr: float = 1e-3
+    prox_mu: float = 0.0           # FedProx coefficient (0 = FedAvg)
+    optimizer: str = "adamw"       # adamw | sgd
+    sensitivity_probes: int = 4
+
+
+class FLClient:
+    def __init__(self, cid: int, model: Model, stream,
+                 cfg: ClientConfig = ClientConfig()):
+        self.cid = cid
+        self.model = model
+        self.stream = stream
+        self.cfg = cfg
+        self._step = jax.jit(self._make_step())
+        self.n_samples = 0
+
+    # -- local training -------------------------------------------------------
+
+    def _make_step(self):
+        loss_fn = self.model.loss_fn
+        mu = self.cfg.prox_mu
+        opt_cfg = AdamWConfig(lr=self.cfg.lr, weight_decay=0.0)
+
+        def objective(params, batch, global_params):
+            loss = loss_fn(params, batch)
+            if mu > 0.0:
+                prox = sum(jnp.sum((p.astype(jnp.float32)
+                                    - g.astype(jnp.float32)) ** 2)
+                           for p, g in zip(jax.tree_util.tree_leaves(params),
+                                           jax.tree_util.tree_leaves(global_params)))
+                loss = loss + 0.5 * mu * prox
+            return loss
+
+        if self.cfg.optimizer == "sgd":
+            def step(params, opt_state, batch, global_params):
+                loss, grads = jax.value_and_grad(objective)(
+                    params, batch, global_params)
+                params = jax.tree_util.tree_map(
+                    lambda p, g: p - self.cfg.lr * g.astype(p.dtype),
+                    params, grads)
+                return params, opt_state, loss
+            return step
+
+        def step(params, opt_state, batch, global_params):
+            loss, grads = jax.value_and_grad(objective)(
+                params, batch, global_params)
+            params, opt_state, _ = adamw_update(grads, opt_state, params,
+                                                opt_cfg)
+            return params, opt_state, loss
+        return step
+
+    def local_train(self, global_params) -> tuple[dict, float]:
+        """E local steps from the incoming global model. Returns
+        (local params, mean loss)."""
+        params = global_params
+        opt_state = adamw_init(params)
+        losses = []
+        for _ in range(self.cfg.local_steps):
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.stream.next_batch().items()}
+            params, opt_state, loss = self._step(params, opt_state, batch,
+                                                 global_params)
+            losses.append(float(loss))
+            self.n_samples += int(batch["tokens"].shape[0]) \
+                if "tokens" in batch else int(next(iter(batch.values())).shape[0])
+        return params, float(np.mean(losses))
+
+    # -- privacy sensitivity (paper §2.4 Step 1) ------------------------------
+
+    def sensitivity_map(self, params, key=None) -> np.ndarray:
+        """Flat |d(grad)/dy| estimate on one local batch (soft labels)."""
+        key = key if key is not None else jax.random.PRNGKey(self.cid)
+        batch = {k: jnp.asarray(v) for k, v in self.stream.next_batch().items()}
+        vocab = self.model.cfg.vocab
+
+        label_key = "labels" if "labels" in batch else "targets"
+        y_soft = jax.nn.one_hot(batch[label_key], vocab, dtype=jnp.float32)
+        feats = {k: v for k, v in batch.items() if k != label_key}
+
+        from repro.models import mamba2, transformer, zamba2
+        cfg = self.model.cfg
+        ax = self.model.ax
+        fwd = {"dense": transformer, "moe": transformer, "vlm": transformer,
+               "encoder": transformer, "ssm": mamba2,
+               "hybrid": zamba2}[cfg.family].forward_logits
+
+        def loss_of_y(p, feats_, y):
+            logits, _ = fwd(p, dict(feats_), cfg, ax)
+            logits = logits[..., :vocab]
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+        smap = sensitivity.sensitivity_jvp(
+            loss_of_y, params, feats, y_soft, key,
+            n_probes=self.cfg.sensitivity_probes)
+        vec, _ = packing.flatten_params(smap)
+        return np.asarray(vec)

@@ -1,0 +1,53 @@
+"""Key management (paper §2.2, Appendix B).
+
+* KeyAuthority — the default trusted key-authority server: generates the
+  CKKS key pair, hands (pk, sk) to authenticated clients and ONLY the
+  public crypto context to the aggregation server (no collusion assumed).
+* ThresholdKeyAuthority — additive n-of-n threshold variant: clients run the
+  interactive keygen; decryption needs every share (plus smudging noise),
+  so a corrupted server + (n-1) clients still cannot decrypt an honest
+  client's update.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.ckks import cipher, threshold
+from repro.core.ckks.params import CkksContext, make_context
+
+
+class KeyAuthority:
+    def __init__(self, ctx: CkksContext | None = None, seed: int = 0):
+        self.ctx = ctx or make_context()
+        self._sk, self._pk = cipher.keygen(self.ctx, jax.random.PRNGKey(seed))
+
+    # clients get both keys; the aggregation server only ever calls
+    # public_context().
+    def client_keys(self) -> tuple[dict, dict]:
+        return self._pk, self._sk
+
+    def public_context(self) -> CkksContext:
+        return self.ctx
+
+
+class ThresholdKeyAuthority:
+    """Coordination point for the interactive additive threshold keygen."""
+
+    def __init__(self, n_parties: int, ctx: CkksContext | None = None,
+                 seed: int = 0):
+        self.ctx = ctx or make_context()
+        self.n_parties = n_parties
+        self.parties, self._pk = threshold.threshold_keygen(
+            self.ctx, jax.random.PRNGKey(seed), n_parties)
+
+    def public_key(self) -> dict:
+        return self._pk
+
+    def party(self, i: int) -> threshold.ThresholdParty:
+        return self.parties[i]
+
+    def partial_decrypt(self, i: int, ct, key):
+        return threshold.partial_decrypt(self.ctx, self.parties[i], ct, key)
+
+    def combine(self, ct, partials):
+        return threshold.combine_partials(self.ctx, ct, partials)

@@ -1,0 +1,67 @@
+"""FL aggregation server.
+
+Holds only the public crypto context + the SelectiveHEAggregator (static
+mask indices).  Never sees secret keys.  Handles:
+  * synchronous weighted aggregation over whatever updates arrived
+    (dropout-robust: weights renormalize over the received set — HE needs
+    no mask-recovery round, unlike secure aggregation, paper Table 1);
+  * async FedBuff-style buffered aggregation with staleness discounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.secure_agg import ProtectedUpdate, SelectiveHEAggregator
+
+
+@dataclasses.dataclass
+class ReceivedUpdate:
+    cid: int
+    update: ProtectedUpdate
+    n_samples: int
+    round_sent: int = 0          # for staleness in async mode
+
+
+class FLServer:
+    def __init__(self, aggregator: SelectiveHEAggregator,
+                 buffer_size: int = 0, staleness_half_life: float = 4.0):
+        self.agg = aggregator
+        self.buffer_size = buffer_size            # 0 => synchronous
+        self.staleness_half_life = staleness_half_life
+        self._buffer: list[ReceivedUpdate] = []
+        self.rounds_aggregated = 0
+
+    # -- synchronous ---------------------------------------------------------
+
+    def aggregate_sync(self, received: list[ReceivedUpdate]) -> ProtectedUpdate:
+        if not received:
+            raise ValueError("no client updates received this round")
+        weights = np.asarray([r.n_samples for r in received], dtype=np.float64)
+        weights = weights / weights.sum()
+        out = self.agg.server_aggregate([r.update for r in received],
+                                        [float(w) for w in weights])
+        self.rounds_aggregated += 1
+        return out
+
+    # -- async (FedBuff) -----------------------------------------------------
+
+    def submit_async(self, r: ReceivedUpdate,
+                     current_round: int) -> ProtectedUpdate | None:
+        """Buffer an update; aggregate + flush when the buffer fills.
+        Staleness discount: w *= 0.5 ** (staleness / half_life)."""
+        self._buffer.append(r)
+        if len(self._buffer) < self.buffer_size:
+            return None
+        ws = []
+        for u in self._buffer:
+            stale = max(0, current_round - u.round_sent)
+            ws.append(u.n_samples * 0.5 ** (stale / self.staleness_half_life))
+        ws = np.asarray(ws, dtype=np.float64)
+        ws = ws / ws.sum()
+        out = self.agg.server_aggregate([u.update for u in self._buffer],
+                                        [float(w) for w in ws])
+        self._buffer.clear()
+        self.rounds_aggregated += 1
+        return out

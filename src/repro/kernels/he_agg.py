@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused encrypted FedAvg aggregation (one RNS limb).
+
+The server hot loop of the paper is  sum_i alpha_i * [[W_i]]  over client
+ciphertexts.  Library implementations (PALISADE/TenSEAL wrappers) materialize
+each weighted ciphertext in memory before the add; at HE's low arithmetic
+intensity that doubles HBM traffic.  This kernel fuses weight-multiply +
+modular accumulate: each ciphertext element is read exactly once, the
+accumulator lives in VMEM.
+
+Layout: cts u32[n_clients, B, N] (normal form, NTT domain), w_mont
+u32[n_clients] Montgomery-form scalar weights (round(alpha_i * delta) * R).
+Grid tiles B; the client loop is unrolled inside the kernel.
+
+VMEM: n_clients * block_b * N * 4B; for 16 clients, block_b=4, N=8192 ->
+2 MiB in + 128 KiB out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+
+def _agg_body(cts_ref, w_ref, o_ref, *, q: int, qinv_neg: int, n_clients: int):
+    w = w_ref[...]
+    acc = _ref.mont_mul(
+        cts_ref[0], jnp.broadcast_to(w[0], cts_ref[0].shape), q, qinv_neg
+    )
+    for i in range(1, n_clients):
+        term = _ref.mont_mul(
+            cts_ref[i], jnp.broadcast_to(w[i], cts_ref[i].shape), q, qinv_neg
+        )
+        acc = _ref.mod_add(acc, term, q)
+    o_ref[...] = acc
+
+
+@functools.lru_cache(maxsize=128)
+def _build(n_clients: int, b: int, n: int, q: int, qinv_neg: int,
+           block_b: int, interpret: bool):
+    body = functools.partial(_agg_body, q=q, qinv_neg=qinv_neg, n_clients=n_clients)
+
+    def call(cts, w_mont):
+        grid = (pl.cdiv(b, block_b),)
+        return pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((n_clients, block_b, n), lambda i: (0, i, 0)),
+                pl.BlockSpec((n_clients,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            interpret=interpret,
+        )(cts, w_mont)
+
+    return call
+
+
+def he_weighted_sum(cts, w_mont, q: int, qinv_neg: int, *, block_b: int = 4,
+                    interpret: bool = True):
+    """sum_i w_i (*) ct_i mod q.  cts: u32[C, B, N], w_mont: u32[C]."""
+    c, b, n = cts.shape
+    call = _build(c, b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
+    return call(cts, w_mont)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: negacyclic NTT / iNTT over RNS limbs.
+
+Target: TPU VPU (u32 lanes). Grid tiles the polynomial-batch axis; each kernel
+invocation holds a (block_b, N) tile plus the N-entry twiddle table in VMEM
+(block_b=8, N=8192 -> 288 KiB of VMEM, well under budget) and runs all
+log2(N) butterfly stages in-register.  The DIF/DIT pairing keeps both
+directions permutation-free (bit-reversed NTT domain).
+
+Stages are unrolled in Python: every reshape has a static shape. On real TPU
+the final stages (t < 128 lanes) relayout across sublanes; a 4-step
+transpose-based NTT is the known fix and is listed in EXPERIMENTS.md §Perf.
+
+Validated in interpret mode against repro/kernels/ref.py with exact integer
+equality (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+
+def _ntt_fwd_body(x_ref, psi_ref, o_ref, *, q: int, qinv_neg: int, n: int):
+    x = x_ref[...]
+    psi = psi_ref[...]
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        xs = x.reshape((-1, m, 2, t))
+        u = xs[:, :, 0, :]
+        s = jax.lax.dynamic_slice_in_dim(psi, m, m)[None, :, None]
+        v = _ref.mont_mul(xs[:, :, 1, :], jnp.broadcast_to(s, u.shape), q, qinv_neg)
+        x = jnp.stack(
+            [_ref.mod_add(u, v, q), _ref.mod_sub(u, v, q)], axis=2
+        ).reshape((-1, n))
+        m *= 2
+    o_ref[...] = x
+
+
+def _ntt_inv_body(x_ref, psi_inv_ref, o_ref, *, q, qinv_neg, n_inv_mont, n):
+    x = x_ref[...]
+    psi_inv = psi_inv_ref[...]
+    t, m = 1, n
+    while m > 1:
+        h = m // 2
+        xs = x.reshape((-1, h, 2, t))
+        u = xs[:, :, 0, :]
+        v = xs[:, :, 1, :]
+        s = jax.lax.dynamic_slice_in_dim(psi_inv, h, h)[None, :, None]
+        lo = _ref.mod_add(u, v, q)
+        hi = _ref.mont_mul(_ref.mod_sub(u, v, q), jnp.broadcast_to(s, u.shape), q, qinv_neg)
+        x = jnp.stack([lo, hi], axis=2).reshape((-1, n))
+        t *= 2
+        m = h
+    x = _ref.mont_mul(x, jnp.full_like(x, np.uint32(n_inv_mont)), q, qinv_neg)
+    o_ref[...] = x
+
+
+@functools.lru_cache(maxsize=128)
+def _build(direction: str, n: int, q: int, qinv_neg: int, n_inv_mont: int,
+           block_b: int, interpret: bool):
+    if direction == "fwd":
+        body = functools.partial(_ntt_fwd_body, q=q, qinv_neg=qinv_neg, n=n)
+    else:
+        body = functools.partial(
+            _ntt_inv_body, q=q, qinv_neg=qinv_neg, n_inv_mont=n_inv_mont, n=n
+        )
+
+    def call(x, twiddles):
+        b = x.shape[0]
+        grid = (pl.cdiv(b, block_b),)
+        return pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+                pl.BlockSpec((n,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            interpret=interpret,
+        )(x, twiddles)
+
+    return call
+
+
+def ntt_fwd(x, psi_rev_mont, q: int, qinv_neg: int, *, block_b: int = 8,
+            interpret: bool = True):
+    """x: u32[B, N] natural -> bit-reversed NTT domain."""
+    b = x.shape[0]
+    call = _build("fwd", x.shape[-1], int(q), int(qinv_neg), 0,
+                  min(block_b, b), interpret)
+    return call(x, psi_rev_mont)
+
+
+def ntt_inv(x, psi_inv_rev_mont, n_inv_mont, q: int, qinv_neg: int, *,
+            block_b: int = 8, interpret: bool = True):
+    """x: u32[B, N] bit-reversed NTT domain -> natural order."""
+    b = x.shape[0]
+    call = _build("inv", x.shape[-1], int(q), int(qinv_neg), int(n_inv_mont),
+                  min(block_b, b), interpret)
+    return call(x, psi_inv_rev_mont)

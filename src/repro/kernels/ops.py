@@ -1,0 +1,160 @@
+"""Public jit'd wrappers over the HE kernels, with backend dispatch.
+
+Backends:
+  * "ref"    — pure-jnp oracle (repro/kernels/ref.py). Default on CPU: fast,
+               exact, and what the FL examples/benchmarks run.
+  * "pallas" — pl.pallas_call kernels. On CPU they run in interpret mode
+               (kernel body executed in Python) for validation; on TPU they
+               compile natively. Select via REPRO_HE_BACKEND=pallas or
+               set_backend("pallas").
+
+All functions operate on multi-limb tensors: x u32[..., L, N] with one
+Montgomery context per limb (params.CkksContext.limbs).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import he_agg as _he_agg
+from repro.kernels import ntt as _ntt
+from repro.kernels import pointwise as _pointwise
+from repro.kernels import ref as _ref
+
+_BACKEND = os.environ.get("REPRO_HE_BACKEND", "ref")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("ref", "pallas"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _per_limb(x, fn):
+    """Apply fn(limb_2d_array, limb_index) over x[..., L, N]."""
+    batch = x.shape[:-2]
+    l, n = x.shape[-2], x.shape[-1]
+    x2 = x.reshape((-1, l, n))
+    outs = [fn(x2[:, i, :], i) for i in range(l)]
+    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+
+
+# ---------------------------------------------------------------------------
+
+
+def ntt_fwd(x, ctx):
+    """u32[..., L, N] natural -> bit-reversed NTT domain (per limb)."""
+    def fn(x2, i):
+        lc = ctx.limbs[i]
+        tw = jnp.asarray(lc.psi_rev_mont)
+        if _BACKEND == "pallas":
+            return _ntt.ntt_fwd(x2, tw, lc.q, lc.qinv_neg, interpret=_interpret())
+        return _ref.ntt_fwd(x2, tw, jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg))
+    return _per_limb(x, fn)
+
+
+def ntt_inv(x, ctx):
+    def fn(x2, i):
+        lc = ctx.limbs[i]
+        tw = jnp.asarray(lc.psi_inv_rev_mont)
+        if _BACKEND == "pallas":
+            return _ntt.ntt_inv(x2, tw, int(lc.n_inv_mont), lc.q, lc.qinv_neg,
+                                interpret=_interpret())
+        return _ref.ntt_inv(x2, tw, jnp.asarray(lc.n_inv_mont),
+                            jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg))
+    return _per_limb(x, fn)
+
+
+def mul_add(x, y_mont, z, ctx):
+    """x (*) y_mont + z, all u32[..., L, N]."""
+    batch = x.shape[:-2]
+    l, n = x.shape[-2:]
+    x2 = x.reshape((-1, l, n))
+    y2 = jnp.broadcast_to(y_mont, x.shape).reshape((-1, l, n))
+    z2 = jnp.broadcast_to(z, x.shape).reshape((-1, l, n))
+    outs = []
+    for i in range(l):
+        lc = ctx.limbs[i]
+        if _BACKEND == "pallas":
+            outs.append(_pointwise.mul_add(x2[:, i], y2[:, i], z2[:, i],
+                                           lc.q, lc.qinv_neg, interpret=_interpret()))
+        else:
+            outs.append(_ref.mul_add(x2[:, i], y2[:, i], z2[:, i],
+                                     jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg)))
+    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+
+
+def weighted_sum(cts, w_mont, ctx):
+    """sum_i w_i (*) ct_i.  cts: u32[C, ..., L, N], w_mont: u32[C, L]."""
+    c = cts.shape[0]
+    batch = cts.shape[1:-2]
+    l, n = cts.shape[-2:]
+    cts2 = cts.reshape((c, -1, l, n))
+    outs = []
+    for i in range(l):
+        lc = ctx.limbs[i]
+        if _BACKEND == "pallas":
+            outs.append(_he_agg.he_weighted_sum(cts2[:, :, i, :], w_mont[:, i],
+                                                lc.q, lc.qinv_neg,
+                                                interpret=_interpret()))
+        else:
+            outs.append(_ref.he_weighted_sum(
+                cts2[:, :, i, :], w_mont[:, i].reshape((c,) + (1,) * 2),
+                jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg)))
+    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+
+
+# limb-wise helpers that have no kernel (cheap, always ref) -----------------
+
+
+def mod_add(a, b, ctx):
+    qs = _limb_q(ctx, a.shape)
+    return _ref.mod_add(a, jnp.broadcast_to(b, a.shape), qs)
+
+
+def mod_sub(a, b, ctx):
+    qs = _limb_q(ctx, a.shape)
+    return _ref.mod_sub(a, jnp.broadcast_to(b, a.shape), qs)
+
+
+def mod_neg(a, ctx):
+    return _ref.mod_neg(a, _limb_q(ctx, a.shape))
+
+
+def to_mont(a, ctx):
+    qs = _limb_q(ctx, a.shape)
+    qinvs = _limb_const(ctx, a.shape, "qinv_neg")
+    r2s = _limb_const(ctx, a.shape, "r2")
+    return _ref.mont_mul(a, r2s, qs, qinvs)
+
+
+def from_mont(a, ctx):
+    qs = _limb_q(ctx, a.shape)
+    qinvs = _limb_const(ctx, a.shape, "qinv_neg")
+    return _ref.mont_mul(a, jnp.ones_like(a), qs, qinvs)
+
+
+def mont_mul(a, b_mont, ctx):
+    qs = _limb_q(ctx, a.shape)
+    qinvs = _limb_const(ctx, a.shape, "qinv_neg")
+    return _ref.mont_mul(a, jnp.broadcast_to(b_mont, a.shape), qs, qinvs)
+
+
+def _limb_q(ctx, shape):
+    return _limb_const(ctx, shape, "q")
+
+
+def _limb_const(ctx, shape, field):
+    """Broadcast per-limb constant over [..., L, N]."""
+    vals = jnp.asarray([getattr(lc, field) for lc in ctx.limbs], dtype=jnp.uint32)
+    return jnp.broadcast_to(vals[:, None], shape)

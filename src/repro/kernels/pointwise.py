@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused modular pointwise ops (one RNS limb).
+
+`mul_add`:  out = x (*) y_mont + z  — the encrypt/decrypt workhorse:
+    encrypt: c0 = pk0 (*) u + (e0 + m),  c1 = pk1 (*) u + e1
+    decrypt: m~ = c1 (*) s + c0
+Fusing the Montgomery multiply with the modular add keeps each operand to a
+single HBM read (arithmetic intensity of HE pointwise ops is ~0.5 int-op/B,
+firmly memory-bound — see EXPERIMENTS.md §Roofline-HE).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+
+def _mul_add_body(x_ref, y_ref, z_ref, o_ref, *, q: int, qinv_neg: int):
+    prod = _ref.mont_mul(x_ref[...], y_ref[...], q, qinv_neg)
+    o_ref[...] = _ref.mod_add(prod, z_ref[...], q)
+
+
+@functools.lru_cache(maxsize=128)
+def _build(b: int, n: int, q: int, qinv_neg: int, block_b: int, interpret: bool):
+    body = functools.partial(_mul_add_body, q=q, qinv_neg=qinv_neg)
+
+    def call(x, y, z):
+        grid = (pl.cdiv(b, block_b),)
+        spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+        return pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            interpret=interpret,
+        )(x, y, z)
+
+    return call
+
+
+def mul_add(x, y_mont, z, q: int, qinv_neg: int, *, block_b: int = 8,
+            interpret: bool = True):
+    """out = x (*) y_mont + z mod q.  All u32[B, N]."""
+    b, n = x.shape
+    call = _build(b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
+    return call(x, y_mont, z)

@@ -1,0 +1,249 @@
+"""Pure-jnp oracle for every Pallas kernel in this package.
+
+The math is u32-only Montgomery arithmetic (R = 2**32), identical to what the
+kernels run on the TPU VPU, so kernel-vs-ref checks are *exact integer
+equality*.  A separate numpy-uint64 gold model lives in tests/gold.py to
+validate this u32 construction itself.
+
+Conventions (see DESIGN.md §3):
+  * "data" polynomials (ciphertext limbs, messages) are in NORMAL residue form;
+  * "operator" polynomials (keys, plaintexts, weights, twiddles) are stored in
+    MONTGOMERY form, so mont_mul(data, op_mont) yields normal-form data;
+  * NTT domain is bit-reversed (forward DIF / inverse DIT pairing): pointwise
+    server ops never need a permutation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+_U16 = np.uint32(0xFFFF)
+_SIXTEEN = np.uint32(16)
+
+
+def _u32(x):
+    # numpy scalars stay jaxpr literals (Pallas kernels must not capture
+    # device-array constants); arrays pass through as u32.
+    if isinstance(x, (int, np.integer)):
+        return np.uint32(x)
+    return jnp.asarray(x, dtype=jnp.uint32) if not (
+        hasattr(x, "dtype") and x.dtype == jnp.uint32
+    ) else x
+
+
+# ---------------------------------------------------------------------------
+# Montgomery core (u32 lanes only; TPU-VPU compatible)
+# ---------------------------------------------------------------------------
+
+def mont_mul(a, b, q, qinv_neg):
+    """REDC(a*b) = a*b*R^{-1} mod q, element-wise. a,b < q < 2**30.
+
+    16-bit limb decomposition: every partial product < 2**32; the two 64-bit
+    intermediates (a*b and m*q) are carried as (hi, lo) u32 pairs with
+    compare-based carry recovery.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    q = _u32(q)
+    qinv_neg = _u32(qinv_neg)
+    a0 = a & _U16
+    a1 = a >> _SIXTEEN
+    b0 = b & _U16
+    b1 = b >> _SIXTEEN
+    p00 = a0 * b0
+    mid = a0 * b1 + a1 * b0            # < 2**31 for a,b < 2**30
+    p11 = a1 * b1
+    t_lo = p00 + ((mid & _U16) << _SIXTEEN)
+    carry = (t_lo < p00).astype(jnp.uint32)
+    t_hi = p11 + (mid >> _SIXTEEN) + carry
+    m = t_lo * qinv_neg                # low 32 bits of m = T_lo * (-q^{-1})
+    # m*q as (hi, lo): m is full-range u32, so the cross-term sum m0*q1 + m1*q0
+    # can itself wrap u32 — track its carry explicitly (weights 2**48).
+    m0 = m & _U16
+    m1 = m >> _SIXTEEN
+    q0 = q & _U16
+    q1 = q >> _SIXTEEN
+    mq00 = m0 * q0
+    p_b = m0 * q1                      # < 2**30 (q1 < 2**14)
+    mqmid = p_b + m1 * q0              # may wrap
+    mqmid_carry = (mqmid < p_b).astype(jnp.uint32)
+    mq_lo = mq00 + ((mqmid & _U16) << _SIXTEEN)
+    mq_carry = (mq_lo < mq00).astype(jnp.uint32)
+    mq_hi = m1 * q1 + (mqmid >> _SIXTEEN) + (mqmid_carry << _SIXTEEN) + mq_carry
+    # T_lo + mq_lo == 0 (mod 2**32) by construction of m; carry unless both 0.
+    carry2 = (t_lo != np.uint32(0)).astype(jnp.uint32)
+    t = t_hi + mq_hi + carry2
+    return jnp.where(t >= q, t - q, t)
+
+
+def mod_add(a, b, q):
+    s = _u32(a) + _u32(b)   # < 2**31, no wrap
+    q = _u32(q)
+    return jnp.where(s >= q, s - q, s)
+
+
+def mod_sub(a, b, q):
+    a = _u32(a)
+    b = _u32(b)
+    q = _u32(q)
+    return jnp.where(a >= b, a - b, a + q - b)
+
+
+def mod_neg(a, q):
+    a = _u32(a)
+    q = _u32(q)
+    return jnp.where(a == np.uint32(0), a, q - a)
+
+
+def to_mont(a, q, qinv_neg, r2):
+    """a -> a*R mod q."""
+    return mont_mul(a, jnp.broadcast_to(_u32(r2), jnp.shape(a)), q, qinv_neg)
+
+
+def from_mont(a, q, qinv_neg):
+    """a*R -> a mod q (multiply by 1)."""
+    return mont_mul(a, jnp.broadcast_to(np.uint32(1), jnp.shape(a)), q, qinv_neg)
+
+
+# ---------------------------------------------------------------------------
+# negacyclic NTT (Longa-Naehrig), vectorized over leading batch dims
+# ---------------------------------------------------------------------------
+
+def ntt_fwd(x, psi_rev_mont, q, qinv_neg):
+    """Forward negacyclic NTT. x: u32[..., N] natural order -> bit-reversed.
+
+    CT butterflies; twiddles psi^bitrev(m+i) in Montgomery form.
+    """
+    x = _u32(x)
+    n = x.shape[-1]
+    batch = x.shape[:-1]
+    x = x.reshape((-1, n))
+    m = 1
+    t = n
+    while m < n:
+        t //= 2
+        # group layout: [B, m, 2, t]; twiddle for group i is psi_rev[m+i]
+        xs = x.reshape((-1, m, 2, t))
+        u = xs[:, :, 0, :]
+        s = jax.lax.dynamic_slice_in_dim(psi_rev_mont, m, m)[None, :, None]
+        v = mont_mul(xs[:, :, 1, :], jnp.broadcast_to(s, xs[:, :, 1, :].shape), q, qinv_neg)
+        x = jnp.stack([mod_add(u, v, q), mod_sub(u, v, q)], axis=2).reshape((-1, n))
+        m *= 2
+    return x.reshape(batch + (n,))
+
+
+def ntt_inv(x, psi_inv_rev_mont, n_inv_mont, q, qinv_neg):
+    """Inverse negacyclic NTT. x: u32[..., N] bit-reversed -> natural order."""
+    x = _u32(x)
+    n = x.shape[-1]
+    batch = x.shape[:-1]
+    x = x.reshape((-1, n))
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        xs = x.reshape((-1, h, 2, t))
+        u = xs[:, :, 0, :]
+        v = xs[:, :, 1, :]
+        s = jax.lax.dynamic_slice_in_dim(psi_inv_rev_mont, h, h)[None, :, None]
+        lo = mod_add(u, v, q)
+        hi = mont_mul(mod_sub(u, v, q), jnp.broadcast_to(s, u.shape), q, qinv_neg)
+        x = jnp.stack([lo, hi], axis=2).reshape((-1, n))
+        t *= 2
+        m = h
+    x = mont_mul(x, jnp.broadcast_to(_u32(n_inv_mont), x.shape), q, qinv_neg)
+    return x.reshape(batch + (n,))
+
+
+# ---------------------------------------------------------------------------
+# fused server/client pointwise ops (one ref per Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def mul_add(x, y_mont, z, q, qinv_neg):
+    """x (*) y_mont + z  (normal-form result). Encrypt/decrypt workhorse."""
+    return mod_add(mont_mul(x, y_mont, q, qinv_neg), z, q)
+
+
+def he_weighted_sum(cts, w_mont, q, qinv_neg):
+    """Fused FedAvg aggregation over one limb: sum_i w_i (*) ct_i mod q.
+
+    cts:    u32[n_clients, ..., N]  (normal form, NTT domain)
+    w_mont: u32[n_clients]          (Montgomery-form scalar weights)
+    """
+    cts = _u32(cts)
+    w = _u32(w_mont)
+    n_clients = cts.shape[0]
+    acc = mont_mul(cts[0], jnp.broadcast_to(w[0], cts[0].shape), q, qinv_neg)
+    for i in range(1, n_clients):
+        term = mont_mul(cts[i], jnp.broadcast_to(w[i], cts[i].shape), q, qinv_neg)
+        acc = mod_add(acc, term, q)
+    return acc
+
+
+def mul_wide(a, b):
+    """Full 32x32 -> 64-bit product as a (hi, lo) u32 pair."""
+    a = _u32(a)
+    b = jnp.broadcast_to(_u32(b), jnp.shape(a))
+    a0 = a & _U16
+    a1 = a >> _SIXTEEN
+    b0 = b & _U16
+    b1 = b >> _SIXTEEN
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = p01 + p10
+    mid_carry = (mid < p01).astype(jnp.uint32)
+    lo = p00 + ((mid & _U16) << _SIXTEEN)
+    lo_carry = (lo < p00).astype(jnp.uint32)
+    hi = p11 + (mid >> _SIXTEEN) + (mid_carry << _SIXTEEN) + lo_carry
+    return hi, lo
+
+
+def add_wide(h1, l1, h2, l2):
+    """(h1,l1) + (h2,l2) mod 2**64, as u32 pairs."""
+    lo = _u32(l1) + _u32(l2)
+    carry = (lo < _u32(l1)).astype(jnp.uint32)
+    return _u32(h1) + _u32(h2) + carry, lo
+
+
+def sub_wide(h1, l1, h2, l2):
+    """(h1,l1) - (h2,l2) mod 2**64 (caller guarantees no underflow)."""
+    shape = jnp.broadcast_shapes(jnp.shape(l1), jnp.shape(l2))
+    h1 = jnp.broadcast_to(_u32(h1), shape)
+    l1 = jnp.broadcast_to(_u32(l1), shape)
+    h2 = jnp.broadcast_to(_u32(h2), shape)
+    l2 = jnp.broadcast_to(_u32(l2), shape)
+    lo = l1 - l2
+    borrow = (l1 < l2).astype(jnp.uint32)
+    return h1 - h2 - borrow, lo
+
+
+def gt_wide(h1, l1, h2, l2):
+    """(h1,l1) > (h2,l2), elementwise bool."""
+    shape = jnp.broadcast_shapes(jnp.shape(l1), jnp.shape(l2))
+    h1 = jnp.broadcast_to(_u32(h1), shape)
+    l1 = jnp.broadcast_to(_u32(l1), shape)
+    h2 = jnp.broadcast_to(_u32(h2), shape)
+    l2 = jnp.broadcast_to(_u32(l2), shape)
+    return (h1 > h2) | ((h1 == h2) & (l1 > l2))
+
+
+def wide_to_f32(hi, lo):
+    """Exact-ish float of hi*2**32 + lo; caller guarantees hi is small
+    (post-centering magnitudes), so the 2**32 scaling is exact in f32."""
+    return hi.astype(jnp.float32) * jnp.float32(4294967296.0) + lo.astype(jnp.float32)
+
+
+def mod_reduce_centered(v_signed_i64_like, q):
+    """Map float/int 'centered' values into [0, q) residues (encode helper).
+
+    Implemented over int32 magnitude + sign split so it works without x64.
+    """
+    v = jnp.asarray(v_signed_i64_like)
+    neg = v < 0
+    mag = jnp.abs(v).astype(jnp.uint32)
+    r = mag % _u32(q)
+    return jnp.where(neg, mod_neg(r, q), r)

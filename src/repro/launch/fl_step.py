@@ -1,0 +1,88 @@
+"""Distributed HE secure-aggregation step (the paper's server hot loop,
+mapped onto the production mesh).
+
+Ciphertext chunks are embarrassingly parallel: the [n_chunks] axis is
+sharded across every mesh axis; the fused weighted-sum kernel then runs
+purely pointwise per device — zero collectives, memory-bound (DESIGN.md
+§3).  The plaintext remainder aggregates the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.ckks import encoding
+from repro.core.ckks.params import CkksContext, make_context
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class HeAggSpec:
+    """Static description of one aggregation round's tensors."""
+
+    n_clients: int
+    n_chunks: int            # ciphertexts per client (padded to mesh size)
+    n_plain: int             # plaintext parameters (padded to mesh size)
+    ctx: CkksContext
+
+    @staticmethod
+    def for_model(n_params: int, p_ratio: float, n_clients: int,
+                  mesh_size: int, ctx: CkksContext | None = None):
+        ctx = ctx or make_context()
+        n_enc = int(round(n_params * p_ratio))
+        chunks = max(1, -(-n_enc // ctx.slots))
+        chunks = -(-chunks // mesh_size) * mesh_size
+        n_plain = n_params - n_enc
+        n_plain = -(-n_plain // mesh_size) * mesh_size
+        return HeAggSpec(n_clients=n_clients, n_chunks=chunks,
+                         n_plain=n_plain, ctx=ctx)
+
+    def input_specs(self):
+        sds = jax.ShapeDtypeStruct
+        c, l, n = self.n_clients, self.ctx.n_limbs, self.ctx.n_poly
+        return {
+            "cts": sds((c, self.n_chunks, l, 2, n), jnp.uint32),
+            "plain": sds((c, self.n_plain), jnp.float32),
+        }
+
+    def shardings(self, mesh):
+        axes = tuple(mesh.axis_names)
+        return {
+            "cts": NamedSharding(mesh, P(None, axes, None, None, None)),
+            "plain": NamedSharding(mesh, P(None, axes)),
+        }
+
+    def wire_bytes_per_client(self) -> int:
+        return self.n_chunks * self.ctx.ciphertext_bytes(packed=False) \
+            + 4 * self.n_plain
+
+
+def make_he_agg_step(spec: HeAggSpec, weights: list[float]):
+    """Server aggregation: sum_i w_i (*) ct_i (HE) + sum_i w_i plain_i."""
+    ctx = spec.ctx
+    w_mont = np.stack([encoding.encode_scalar_residues(float(w), ctx)
+                       for w in weights], axis=0)          # [C, L]
+    w_plain = jnp.asarray(np.asarray(weights, np.float32))
+
+    def step(cts, plain):
+        # [C, chunks, L, 2, N] -> limbs at axis -2 for the fused kernel
+        x = jnp.moveaxis(cts, -3, -2)
+        enc = ops.weighted_sum(x, jnp.asarray(w_mont), ctx)
+        enc = jnp.moveaxis(enc, -2, -3)
+        pt = jnp.einsum("c,cp->p", w_plain, plain)
+        return enc, pt
+
+    return step
+
+
+def jit_he_agg_step(spec: HeAggSpec, mesh, weights: list[float]):
+    sh = spec.shardings(mesh)
+    return jax.jit(
+        make_he_agg_step(spec, weights),
+        in_shardings=(sh["cts"], sh["plain"]),
+        out_shardings=(None, None),
+    )

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; callers (dryrun.py) set XLA_FLAGS *before* the first jax import.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} exist; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(dryrun.py sets this automatically)")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Trivial 1x1 mesh for CPU smoke runs."""
+    import jax
+
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        devices=jax.devices()[:1],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,70 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.models.sharding import axis_env_from_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    mesh = make_host_mesh()
+    with jax.sharding.set_mesh(mesh):
+        ax = axis_env_from_mesh(mesh)
+        model = build_model(cfg, ax)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        prompts = jnp.asarray(
+            rng.randint(0, cfg.vocab, (args.batch, args.prompt_len)))
+
+        cache_len = args.prompt_len + args.gen
+        prefill = jax.jit(lambda p, b: model.prefill(p, b,
+                                                     cache_len=cache_len))
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+        t0 = time.time()
+        logits, cache = prefill(params, {"tokens": prompts})
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        out_tokens = []
+        tok = jnp.argmax(logits, axis=-1)
+        t0 = time.time()
+        for _ in range(args.gen):
+            out_tokens.append(np.asarray(tok))
+            logits, cache = decode(params, cache, {"tokens": tok})
+            tok = jnp.argmax(logits, axis=-1)
+        jax.block_until_ready(logits)
+        t_decode = time.time() - t0
+        gen = np.stack(out_tokens, axis=1)
+        print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.3f}s; "
+              f"decode {args.gen} steps in {t_decode:.3f}s "
+              f"({args.batch*args.gen/max(t_decode,1e-9):.1f} tok/s)")
+        print("generated ids:\n", gen)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

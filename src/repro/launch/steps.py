@@ -1,0 +1,122 @@
+"""Jitted step builders + input/cache sharding trees (shared by dryrun,
+train.py and serve.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import Model
+from repro.models import sharding as shd
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import cosine_lr
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_tree, ax: shd.AxisEnv):
+    """Input batch leaves: leading dim over dp, rest replicated."""
+    def spec(leaf):
+        if not leaf.shape:
+            return P()
+        b = leaf.shape[0]
+        dp = ax.dp if (ax.dp and b % ax.data_size == 0 and b > 1) else None
+        return P(dp, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def cache_specs(cfg, cache_tree, ax: shd.AxisEnv, batch: int):
+    """Per-layer cache buffers: conv [B, w-1, ch], ssm [B, nh, hd, st],
+    k/v [B, S, KH, hd]."""
+    def visit(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if "conv" in name:
+            return shd.conv_state_spec(ax, batch, leaf.shape[-1])
+        if "ssm" in name:
+            return shd.ssm_state_spec(ax, batch, cfg.ssm_heads)
+        if leaf.ndim == 4:   # k/v and attn_k/attn_v [B, S, KH, hd]
+            return shd.kv_cache_spec(ax, batch)
+        return P()
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def opt_specs(param_spec_tree):
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    warmup: int = 100, total_steps: int = 10_000):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        lr = cosine_lr(opt_state["step"], opt_cfg.lr, warmup, total_steps)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                opt_cfg, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+    return decode_step
+
+
+def jit_train_step(model: Model, mesh, opt_cfg: AdamWConfig, batch_tree):
+    """pjit'd production train step: donated params/opt, explicit shardings."""
+    ax = model.ax
+    pspecs = model.param_specs()
+    ospecs = opt_specs(pspecs)
+    bspecs = batch_specs(batch_tree, ax)
+    step = make_train_step(model, opt_cfg)
+    return jax.jit(
+        step,
+        in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                      named(mesh, bspecs)),
+        out_shardings=(named(mesh, pspecs), named(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+
+
+def jit_prefill_step(model: Model, mesh, batch_tree):
+    ax = model.ax
+    pspecs = model.param_specs()
+    bspecs = batch_specs(batch_tree, ax)
+    return jax.jit(
+        make_prefill_step(model),
+        in_shardings=(named(mesh, pspecs), named(mesh, bspecs)),
+    )
+
+
+def jit_decode_step(model: Model, mesh, cache_tree, batch_tree, batch: int,
+                    param_mode: str = "train"):
+    ax = model.ax
+    pspecs = model.param_specs(mode=param_mode)
+    cspecs = cache_specs(model.cfg, cache_tree, ax, batch)
+    bspecs = batch_specs(batch_tree, ax)
+    return jax.jit(
+        make_decode_step(model),
+        in_shardings=(named(mesh, pspecs), named(mesh, cspecs),
+                      named(mesh, bspecs)),
+        out_shardings=(None, named(mesh, cspecs)),
+        donate_argnums=(1,),
+    )

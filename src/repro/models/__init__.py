@@ -1,0 +1,85 @@
+"""Unified model API over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` namespace of pure functions:
+  init(key) -> params                    (real weights)
+  init_abstract() -> params              (ShapeDtypeStructs; no allocation)
+  loss_fn(params, batch) -> scalar
+  prefill(params, batch, cache_len) -> (logits, cache)     (causal families)
+  decode_step(params, cache, batch) -> (logits, cache)
+  abstract_cache(batch, cache_len) -> cache ShapeDtypeStructs
+All functions take an AxisEnv (mesh-aware sharding hints) at build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.models import mamba2, sharding, transformer, zamba2
+from repro.models.config import ModelConfig
+from repro.models.sharding import AxisEnv, CPU_ENV, axis_env_from_mesh, param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    ax: AxisEnv
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable | None
+    decode_step: Callable | None
+    abstract_cache: Callable | None
+
+    def init_abstract(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def param_specs(self, mode: str = "train"):
+        return param_specs(self.init_abstract(), self.ax, mode=mode)
+
+
+def build_model(cfg: ModelConfig, ax: AxisEnv = CPU_ENV) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encoder"):
+        mod = transformer
+        init = lambda key: transformer.init(cfg, key)
+        loss = lambda p, b: transformer.loss_fn(p, b, cfg, ax)
+        if fam == "encoder":
+            # encoder inference = one bidirectional forward, no cache
+            enc_fwd = lambda p, b, cache_len=None: (
+                transformer.forward_logits(p, b, cfg, ax)[0], None)
+            return Model(cfg, ax, init, loss, prefill=enc_fwd,
+                         decode_step=None, abstract_cache=None)
+        return Model(
+            cfg, ax, init, loss,
+            prefill=lambda p, b, cache_len=None: transformer.prefill(
+                p, b, cfg, ax, cache_len),
+            decode_step=lambda p, c, b: transformer.decode_step(p, c, b, cfg, ax),
+            abstract_cache=lambda batch, cache_len, dtype=None: (
+                transformer.abstract_cache(
+                    cfg, batch, cache_len, dtype or cfg.dtype)),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg, ax,
+            init=lambda key: mamba2.init_model(cfg, key),
+            loss_fn=lambda p, b: mamba2.loss_fn(p, b, cfg, ax),
+            prefill=lambda p, b, cache_len=None: mamba2.prefill(
+                p, b, cfg, ax, cache_len),
+            decode_step=lambda p, c, b: mamba2.decode_step(p, c, b, cfg, ax),
+            abstract_cache=lambda batch, cache_len=None, dtype=None: (
+                mamba2.abstract_cache(cfg, batch, dtype or cfg.dtype)),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg, ax,
+            init=lambda key: zamba2.init_model(cfg, key),
+            loss_fn=lambda p, b: zamba2.loss_fn(p, b, cfg, ax),
+            prefill=lambda p, b, cache_len=None: zamba2.prefill(
+                p, b, cfg, ax, cache_len),
+            decode_step=lambda p, c, b: zamba2.decode_step(p, c, b, cfg, ax),
+            abstract_cache=lambda batch, cache_len, dtype=None: (
+                zamba2.abstract_cache(cfg, batch, cache_len,
+                                      dtype or cfg.dtype)),
+        )
+    raise ValueError(f"unknown family {fam}")

@@ -1,0 +1,296 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Conventions:
+  * params are nested dicts of jnp arrays; per-layer weights are stacked on a
+    leading L axis and indexed with static python ints (layers are unrolled —
+    exact cost_analysis accounting, see DESIGN.md §6).
+  * attention is blocked-causal: a static python loop over query chunks, each
+    materializing one [B, H, qc, kv_len] logits tile (flash-style memory
+    behaviour with exact FLOP accounting; no lax.scan whose body XLA would
+    count once).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import sharding
+from repro.models.config import ModelConfig
+
+
+def trunc_normal(key, shape, std, dtype):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] or [S] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                             # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_logits(q, k, scale):
+    """q: [B, Sq, KH, G, hd], k: [B, Sk, KH, hd] -> [B, KH, G, Sq, Sk]."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(probs, v):
+    """probs: [B, KH, G, Sq, Sk], v: [B, Sk, KH, hd] -> [B, Sq, KH, G, hd]."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(probs.dtype))
+
+
+def blocked_attention(q, k, v, cfg: ModelConfig, ax: sharding.AxisEnv,
+                      causal: bool, q_start: int = 0):
+    """Blocked (causal) attention.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, KH, hd].  Returns [B, Sq, H, hd].
+    Static python loop over query chunks; for causal attention each chunk
+    only reads k/v up to its last row (true ~S^2/2 FLOPs).
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kh, g, hd)
+    chunk = min(cfg.attn_chunk, sq)
+    n_chunks = -(-sq // chunk)
+    outs = []
+    for ci in range(n_chunks):
+        s0 = ci * chunk
+        s1 = min(sq, s0 + chunk)
+        qc = qg[:, s0:s1]
+        kv_end = (q_start + s1) if causal else k.shape[1]
+        kc, vc = k[:, :kv_end], v[:, :kv_end]
+        logits = _gqa_logits(qc, kc, scale)        # [B, KH, G, qc, kv_end] f32
+        if causal:
+            q_pos = q_start + jnp.arange(s0, s1)
+            k_pos = jnp.arange(kv_end)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        oc = _gqa_out(probs, vc)                   # [B, qc, KH, G, hd]
+        outs.append(oc.astype(q.dtype))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, sq, h, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention against a (possibly seq-sharded) cache.
+
+    q: [B, H, hd]; k_cache/v_cache: [B, S, KH, hd]; pos: scalar i32 (number
+    of valid cache entries minus one, i.e. the new token's position).
+    Masked full-cache read; the softmax reductions over the sharded S dim
+    lower to small per-head collectives (flash-decode pattern under SPMD).
+    """
+    b, h, hd = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, kh, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    s = k_cache.shape[1]
+    mask = jnp.arange(s) <= pos
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(probs.dtype))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block params / apply
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, n_layers: int, d_in: int | None = None):
+    d = d_in or cfg.d_model
+    hd = cfg.hd
+    std = 0.02
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": trunc_normal(ks[0], (n_layers, d, cfg.n_heads * hd), std, dt),
+        "wk": trunc_normal(ks[1], (n_layers, d, cfg.n_kv_heads * hd), std, dt),
+        "wv": trunc_normal(ks[2], (n_layers, d, cfg.n_kv_heads * hd), std, dt),
+        "wo": trunc_normal(ks[3], (n_layers, cfg.n_heads * hd, cfg.d_model),
+                           std / math.sqrt(2 * cfg.n_layers), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, cfg.n_heads * hd), dt)
+        p["bk"] = jnp.zeros((n_layers, cfg.n_kv_heads * hd), dt)
+        p["bv"] = jnp.zeros((n_layers, cfg.n_kv_heads * hd), dt)
+    return p
+
+
+def attn_qkv(p, i, x, cfg: ModelConfig, ax: sharding.AxisEnv, positions):
+    """x: [B, S, d_in] -> q [B,S,H,hd], k/v [B,S,KH,hd] (RoPE applied)."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"][i].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"][i].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"][i].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"][i].astype(x.dtype)
+        k = k + p["bk"][i].astype(x.dtype)
+        v = v + p["bv"][i].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = sharding.constrain(q, *_qspec(ax, cfg.n_heads))
+    k = sharding.constrain(k, *_kvspec(ax, cfg.n_kv_heads))
+    v = sharding.constrain(v, *_kvspec(ax, cfg.n_kv_heads))
+    return q, k, v
+
+
+def _qspec(ax: sharding.AxisEnv, h):
+    return (ax.dp, None, ax.mp(h), None)
+
+
+def _kvspec(ax: sharding.AxisEnv, kh):
+    return (ax.dp, None, ax.mp(kh), None)
+
+
+def attn_out(p, i, o, x_dtype):
+    """o: [B, S, H, hd] -> [B, S, d_model]."""
+    b, s = o.shape[:2]
+    o = o.reshape(b, s, -1)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"][i].astype(x_dtype))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, n_layers: int, d_in: int | None = None):
+    d = d_in or cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": trunc_normal(ks[1], (n_layers, d, cfg.d_ff), 0.02, dt),
+        "w_down": trunc_normal(ks[2], (n_layers, cfg.d_ff, cfg.d_model),
+                               0.02 / math.sqrt(2 * cfg.n_layers), dt),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = trunc_normal(ks[0], (n_layers, d, cfg.d_ff), 0.02, dt)
+    return p
+
+
+def mlp(p, i, x):
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"][i].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"][i].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"][i].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"embed": trunc_normal(k1, (cfg.vocab_padded, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = trunc_normal(k2, (cfg.d_model, cfg.vocab_padded), 0.02, dt)
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig, dtype):
+    return p["embed"].astype(dtype)[tokens]
+
+
+def unembed_weight(p, cfg: ModelConfig):
+    return p["embed"].T if cfg.tie_embeddings else p["unembed"]
+
+
+def logits_fn(p, x, cfg: ModelConfig):
+    return jnp.einsum("bsd,dv->bsv", x,
+                      unembed_weight(p, cfg).astype(x.dtype))
+
+
+def _xent_sums(logits, labels, vocab_real: int):
+    """(sum of masked NLL, count of valid positions) for one chunk."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    if vocab_real < v:
+        logits = jnp.where(vocab_ids < vocab_real, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = vocab_ids == labels[..., None]
+    label_logit = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    valid = labels >= 0
+    nll = (lse - label_logit) * valid
+    return jnp.sum(nll), jnp.sum(valid)
+
+
+def softmax_xent(logits, labels, vocab_real: int):
+    """Mean next-token CE; positions with label < 0 are masked out.
+
+    SPMD-safe: everything is a *reduction* over the (model-sharded) vocab
+    axis — a take_along_axis gather there would force an all-gather of the
+    full f32 logits (~40 GB/device at 150k vocab).  The padded vocab tail
+    is masked out of the partition function with an iota compare.
+    """
+    nll, valid = _xent_sums(logits, labels, vocab_real)
+    return nll / jnp.maximum(1, valid)
+
+
+def chunked_softmax_xent(hidden, unembed_w, labels, vocab_real: int,
+                         chunk: int = 512):
+    """Cross entropy with the logits never fully materialized.
+
+    hidden: [B, S, d]; unembed_w: [d, V].  The S axis is processed in static
+    chunks so the live f32 logits chain is [B, chunk, V_shard] instead of
+    [B, S, V_shard] — at 150k vocab the full chain is ~15 GB/device.
+    """
+    s = hidden.shape[1]
+    chunk = min(chunk, s)
+    nll = jnp.zeros((), jnp.float32)
+    valid = jnp.zeros((), jnp.int32)
+    for s0 in range(0, s, chunk):
+        s1 = min(s, s0 + chunk)
+        lg = jnp.einsum("bsd,dv->bsv", hidden[:, s0:s1], unembed_w)
+        dn, dv = _xent_sums(lg, labels[:, s0:s1], vocab_real)
+        nll = nll + dn
+        valid = valid + dv
+    return nll / jnp.maximum(1, valid)

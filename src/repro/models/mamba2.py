@@ -1,0 +1,337 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) in pure JAX.
+
+Training/prefill use the chunked SSD algorithm: intra-chunk quadratic term
+(einsums) + inter-chunk linear recurrence run as jax.lax.associative_scan
+over the chunk axis (log-depth, fully materialized ops — exact
+cost_analysis accounting, unlike a sequential lax.scan whose body XLA
+counts once).  Decode is the O(1) recurrent update.
+
+TPU adaptation: projections are *separate* weights (z/x/B/C/dt) so each
+output dim is independently TP-shardable without cross-shard slicing; SSD
+head dim (nh) is the 'model'-sharded axis.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import sharding
+from repro.models.config import ModelConfig
+
+
+def init(key, cfg: ModelConfig, n_layers: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, din, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    g = cfg.ssm_groups
+    w = cfg.conv_width
+    ks = jax.random.split(key, 9)
+    # dt bias so softplus(dt) spans ~[1e-3, 1e-1] at init (mamba2 default)
+    dt_init = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(ks[7], (n_layers, nh),
+                           minval=math.log(1e-3), maxval=math.log(1e-1)))))
+    return {
+        "in_z": L.trunc_normal(ks[0], (n_layers, d, din), 0.02, dt),
+        "in_x": L.trunc_normal(ks[1], (n_layers, d, din), 0.02, dt),
+        "in_B": L.trunc_normal(ks[2], (n_layers, d, g * st), 0.02, dt),
+        "in_C": L.trunc_normal(ks[3], (n_layers, d, g * st), 0.02, dt),
+        "in_dt": L.trunc_normal(ks[4], (n_layers, d, nh), 0.02, dt),
+        "conv_x": L.trunc_normal(ks[5], (n_layers, w, din), 0.2, dt),
+        "conv_B": L.trunc_normal(ks[6], (n_layers, w, g * st), 0.2, dt),
+        "conv_C": L.trunc_normal(ks[8], (n_layers, w, g * st), 0.2, dt),
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32))[None],
+            (n_layers, nh)).astype(dt),
+        "D": jnp.ones((n_layers, nh), dt),
+        "dt_bias": dt_init.astype(dt),
+        "norm": jnp.ones((n_layers, din), dt),
+        "ln": jnp.ones((n_layers, d), dt),     # pre-norm
+        "out_proj": L.trunc_normal(
+            ks[7], (n_layers, din, d), 0.02 / math.sqrt(2 * n_layers), dt),
+    }
+
+
+def causal_conv(x, kernel):
+    """Depthwise causal conv. x: [B, S, ch], kernel: [w, ch]."""
+    w = kernel.shape[0]
+    pad = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    s = x.shape[1]
+    out = sum(pad[:, j:j + s] * kernel[j].astype(x.dtype) for j in range(w))
+    return jax.nn.silu(out)
+
+
+def _gated_norm(y, scale, z):
+    return L.rms_norm(y * jax.nn.silu(z), scale)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dtv, a, b, c, chunk: int, h0=None):
+    """SSD over a full sequence.
+
+    x:   [B, S, nh, hd]   (conv'd, activated)
+    dtv: [B, S, nh]       (softplus'd timestep)
+    a:   [nh]             (negative decay rates)
+    b,c: [B, S, st]       (single group, broadcast over heads)
+    h0:  optional initial state [B, nh, hd, st]
+    Returns (y [B, S, nh, hd], h_final [B, nh, hd, st]).
+    """
+    bsz, s, nh, hd = x.shape
+    st = b.shape[-1]
+    q = min(chunk, s)
+    n = s // q
+    assert n * q == s, (s, q)
+    f32 = jnp.float32
+    xc = x.reshape(bsz, n, q, nh, hd)
+    dtc = dtv.reshape(bsz, n, q, nh).astype(f32)
+    bc = b.reshape(bsz, n, q, st).astype(f32)
+    cc = c.reshape(bsz, n, q, st).astype(f32)
+    da = dtc * a.astype(f32)                         # [B, n, q, nh]
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumulative
+    # intra-chunk: Y[q'] = sum_{s'<=q'} C_q'.B_s' exp(cum_q'-cum_s') dt_s' x_s'
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,n,q,q,nh]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: masked entries are positive and would overflow to inf,
+    # poisoning gradients through the where.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bnqt,bnst->bnqs", cc, bc)       # [B,n,q,q]
+    m = cb[..., None] * decay                        # [B,n,q,q,nh]
+    xdt = xc.astype(f32) * dtc[..., None]            # [B,n,q,nh,hd]
+    y_intra = jnp.einsum("bnqsh,bnshd->bnqhd", m, xdt)
+    # chunk states: S_n = sum_q exp(cum_end - cum_q) dt_q B_q (x) x_q
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)     # [B,n,q,nh]
+    states = jnp.einsum("bnqh,bnqt,bnqhd->bnhdt", decay_out, bc, xdt)
+    # inter-chunk recurrence H_n = a_n H_{n-1} + S_n via associative scan
+    a_chunk = jnp.exp(cum[:, :, -1, :])              # [B,n,nh]
+    if h0 is not None:
+        states = states.at[:, 0].add(
+            a_chunk[:, 0][..., None, None] * h0.astype(f32))
+
+    def op(lhs, rhs):
+        al, sl = lhs
+        ar, sr = rhs
+        return al * ar, ar[..., None, None] * sl + sr
+
+    a_scan, h_incl = jax.lax.associative_scan(
+        op, (a_chunk, states), axis=1)
+    h_before = jnp.concatenate(
+        [jnp.zeros_like(h_incl[:, :1]), h_incl[:, :-1]], axis=1)
+    # inter-chunk contribution: Y[q] = C_q exp(cum_q) . H_before
+    y_inter = jnp.einsum("bnqt,bnhdt,bnqh->bnqhd",
+                         cc, h_before, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s, nh, hd).astype(x.dtype)
+    return y, h_incl[:, -1].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block forward / decode
+# ---------------------------------------------------------------------------
+
+
+def block(p, i, u, cfg: ModelConfig, ax):
+    """Full-sequence mamba2 block. u: [B, S, d] -> (y [B, S, d], state).
+
+    Sharding discipline (prevents SPMD ping-pong between batch/chunk and
+    head layouts — each reshard is an 'involuntary full remat' copy):
+    one seq all-gather at entry; z/x/dt inherit the 'model' shard from
+    their projection out-dims (din/nh); B/C are head-shared and stay
+    replicated over 'model'; everything in ssd_chunked is then local.
+    """
+    dtp = u.dtype
+    u = sharding.constrain(u, ax.dp, None, None)    # single AG from SP shard
+    u = L.rms_norm(u, p["ln"][i])
+    z = jnp.einsum("bsd,di->bsi", u, p["in_z"][i].astype(dtp))
+    x = jnp.einsum("bsd,di->bsi", u, p["in_x"][i].astype(dtp))
+    b_ = jnp.einsum("bsd,dt->bst", u, p["in_B"][i].astype(dtp))
+    c_ = jnp.einsum("bsd,dt->bst", u, p["in_C"][i].astype(dtp))
+    dt_raw = jnp.einsum("bsd,dh->bsh", u, p["in_dt"][i].astype(dtp))
+    b_ = sharding.constrain(b_, ax.dp, None, None)
+    c_ = sharding.constrain(c_, ax.dp, None, None)
+    dt_raw = sharding.constrain(dt_raw, ax.dp, None,
+                                ax.mp(cfg.ssm_heads))
+    x = causal_conv(x, p["conv_x"][i])
+    b_ = causal_conv(b_, p["conv_B"][i])
+    c_ = causal_conv(c_, p["conv_C"][i])
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"][i].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"][i].astype(jnp.float32))
+    bsz, s, din = x.shape
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    # pad S to a chunk multiple; padded steps use dt=0 (decay 1, zero input)
+    # so they neither contribute nor disturb the final state.
+    pad = (-s) % min(cfg.ssm_chunk, max(s, 1))
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+    xh = x.reshape(bsz, s + pad, nh, hd)
+    xh = sharding.constrain(xh, ax.dp, None, ax.mp(nh), None)
+    y, h_final = ssd_chunked(xh, dtv, a, b_, c_, cfg.ssm_chunk)
+    if pad:
+        y = y[:, :s]
+        xh = xh[:, :s]
+    y = y + p["D"][i].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, din)
+    y = _gated_norm(y, p["norm"][i], z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"][i].astype(dtp))
+    return out, h_final
+
+
+def block_decode(p, i, u, conv_state, ssm_state, cfg: ModelConfig, ax):
+    """Single-token recurrent update.
+
+    u: [B, d]; conv_state: [B, w-1, din + 2*g*st]; ssm_state: [B, nh, hd, st].
+    Returns (y [B, d], conv_state, ssm_state).
+    """
+    dtp = u.dtype
+    din, st, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.conv_width
+    u = L.rms_norm(u, p["ln"][i])
+    z = u @ p["in_z"][i].astype(dtp)
+    x = u @ p["in_x"][i].astype(dtp)
+    b_ = u @ p["in_B"][i].astype(dtp)
+    c_ = u @ p["in_C"][i].astype(dtp)
+    dt_raw = u @ p["in_dt"][i].astype(dtp)
+    xbc = jnp.concatenate([x, b_, c_], axis=-1)           # [B, din+2gst]
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [B, w, ch]
+    kernel = jnp.concatenate(
+        [p["conv_x"][i], p["conv_B"][i], p["conv_C"][i]], axis=-1)
+    conv_out = jax.nn.silu(
+        jnp.sum(window * kernel.astype(dtp)[None], axis=1))
+    x = conv_out[:, :din]
+    b_ = conv_out[:, din:din + g * st]
+    c_ = conv_out[:, din + g * st:]
+    new_conv_state = window[:, 1:]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"][i].astype(jnp.float32))  # [B, nh]
+    a = -jnp.exp(p["A_log"][i].astype(jnp.float32))
+    da = jnp.exp(dtv * a)                                 # [B, nh]
+    xh = x.reshape(-1, nh, hd).astype(jnp.float32)
+    ssm_state = ssm_state.astype(jnp.float32) * da[..., None, None] \
+        + jnp.einsum("bh,bt,bhd->bhdt", dtv, b_.astype(jnp.float32), xh)
+    y = jnp.einsum("bhdt,bt->bhd", ssm_state, c_.astype(jnp.float32))
+    y = y + p["D"][i].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, din).astype(dtp)
+    y = _gated_norm(y, p["norm"][i], z)
+    out = y @ p["out_proj"][i].astype(dtp)
+    return out, new_conv_state, ssm_state.astype(dtp)
+
+
+# ---------------------------------------------------------------------------
+# full model (ssm family)
+# ---------------------------------------------------------------------------
+
+
+def init_model(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = L.init_embed(k1, cfg)
+    p["layers"] = init(k2, cfg, cfg.n_layers)
+    p["ln_f"] = jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def _backbone(params, x, cfg: ModelConfig, ax):
+    p = params["layers"]
+    step = block
+    if cfg.remat:
+        step = jax.checkpoint(block, static_argnums=(1, 3, 4))
+    for i in range(cfg.n_layers):
+        x = sharding.constrain(x, ax.dp, ax.mp(x.shape[1]), None)
+        y, _ = step(p, i, x, cfg, ax)
+        x = x + y
+    return L.rms_norm(x, params["ln_f"])
+
+
+def forward_logits(params, batch, cfg: ModelConfig, ax):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params, batch["tokens"], cfg, dtype)
+    h = _backbone(params, x, cfg, ax)
+    return L.logits_fn(params, h, cfg), 0.0
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ax):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_tokens(params, batch["tokens"], cfg, dtype)
+    h = _backbone(params, x, cfg, ax)
+    w = L.unembed_weight(params, cfg).astype(h.dtype)
+    return L.chunked_softmax_xent(h, w, batch["labels"], cfg.vocab)
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype):
+    """Per-layer buffer lists (see transformer.init_cache)."""
+    ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": [jnp.zeros((batch, cfg.conv_width - 1, ch), dtype)
+                 for _ in range(cfg.n_layers)],
+        "ssm": [jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), dtype)
+                for _ in range(cfg.n_layers)],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, dtype):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, dtype))
+
+
+def _conv_tail(xbc, s: int, w: int):
+    """Last (w-1) conv inputs, zero-padded on the left for short prompts
+    (matches the causal conv's zero padding)."""
+    tail = xbc[:, max(0, s - w + 1):]
+    short = (w - 1) - tail.shape[1]
+    if short > 0:
+        tail = jnp.pad(tail, ((0, 0), (short, 0), (0, 0)))
+    return tail
+
+
+def prefill(params, batch, cfg: ModelConfig, ax, cache_len=None):
+    """Prompt pass; returns (last-token logits, recurrent cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    x = L.embed_tokens(params, tokens, cfg, dtype)
+    cache = init_cache(cfg, bsz, dtype)
+    p = params["layers"]
+    for i in range(cfg.n_layers):
+        x = sharding.constrain(x, ax.dp, ax.mp(x.shape[1]), None)
+        y, h_final = block(p, i, x, cfg, ax)
+        # conv state = last (w-1) pre-conv channel inputs (post-pre-norm)
+        xn = L.rms_norm(x, p["ln"][i])
+        x_in = jnp.einsum("bsd,di->bsi", xn, p["in_x"][i].astype(dtype))
+        b_in = jnp.einsum("bsd,dt->bst", xn, p["in_B"][i].astype(dtype))
+        c_in = jnp.einsum("bsd,dt->bst", xn, p["in_C"][i].astype(dtype))
+        xbc = jnp.concatenate([x_in, b_in, c_in], axis=-1)
+        cache["conv"][i] = _conv_tail(xbc, s, cfg.conv_width)
+        cache["ssm"][i] = h_final
+        x = x + y
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    h = L.rms_norm(x, params["ln_f"])
+    logits = L.logits_fn(params, h[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, ax):
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {"conv": list(cache["conv"]), "ssm": list(cache["ssm"]),
+             "pos": cache["pos"]}
+    tok = batch["tokens"]
+    x = L.embed_tokens(params, tok[:, None], cfg, dtype)[:, 0]   # [B, d]
+    p = params["layers"]
+    for i in range(cfg.n_layers):
+        y, conv_s, ssm_s = block_decode(
+            p, i, x, cache["conv"][i], cache["ssm"][i], cfg, ax)
+        cache["conv"][i] = conv_s
+        cache["ssm"][i] = ssm_s
+        x = x + y
+    cache["pos"] = cache["pos"] + 1
+    h = L.rms_norm(x, params["ln_f"])
+    logits = L.logits_fn(params, h[:, None], cfg)[:, 0]
+    return logits, cache

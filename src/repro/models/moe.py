@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU adaptation: instead of the one-hot einsum dispatch (which inflates HLO
+FLOPs by O(E/k)) tokens are argsorted by expert id, packed into [E, C]
+capacity slots (C = ceil(T*k/E * capacity_factor)), run through three
+batched matmuls (active-expert FLOPs only), and scatter-added back.
+
+Distribution: routing/dispatch runs *locally per data shard* under
+jax.shard_map (tokens never cross the data axis — the baseline global-view
+alternative would distribute the argsort itself).  Expert weights are
+TP-sharded on the d_ff axis; the w_down contraction finishes with an
+explicit psum over 'model'.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import sharding
+from repro.models.config import ModelConfig
+
+
+def init(key, cfg: ModelConfig, n_layers: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": L.trunc_normal(ks[0], (n_layers, d, e), 0.02, dt),
+        "expert_gate": L.trunc_normal(ks[1], (n_layers, e, d, ff), 0.02, dt),
+        "expert_up": L.trunc_normal(ks[2], (n_layers, e, d, ff), 0.02, dt),
+        "expert_down": L.trunc_normal(
+            ks[3], (n_layers, e, ff, d), 0.02 / math.sqrt(2 * n_layers), dt),
+    }
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def _moe_local(x, router_w, w_gate, w_up, w_down, cfg: ModelConfig,
+               model_axis: str | None):
+    """x: [T, d] (local tokens). Returns (out [T, d], aux scalar)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+    logits = jnp.einsum("td,de->te", x, router_w.astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # [T, k]
+    # load-balance aux (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    fe = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(fe * me)
+
+    flat_e = top_e.reshape(-1)                                # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = order // k
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    ranks = jnp.arange(t * k, dtype=jnp.int32) - offsets[sorted_e]
+    keep = ranks < c
+    slot = jnp.where(keep, sorted_e * c + ranks, e * c)       # drop -> last row
+
+    xg = x[sorted_tok] * keep[:, None].astype(x.dtype)
+    disp = jnp.zeros((e * c + 1, d), x.dtype).at[slot].add(xg)[:-1]
+    h = disp.reshape(e, c, d)
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", h, w_up.astype(x.dtype))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                   w_down.astype(x.dtype))
+    # combine FIRST (it is linear in y), THEN psum the [T, d] result over
+    # the ff-sharded axis — psum'ing the [E, C, d] dispatch buffer would
+    # move capacity_factor*top_k/1 times more bytes per layer.
+    yf = y.reshape(e * c, d)
+    back = yf[jnp.minimum(slot, e * c - 1)] * keep[:, None].astype(x.dtype)
+    w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    w_sorted = w.reshape(-1)[order].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[sorted_tok].add(back * w_sorted[:, None])
+    if model_axis is not None:
+        out = jax.lax.psum(out, model_axis)
+        aux = jax.lax.pmean(aux, model_axis)
+    return out, aux
+
+
+def moe_ffn(p, i, x, cfg: ModelConfig, ax: sharding.AxisEnv):
+    """x: [B, S, d] -> ([B, S, d], aux). shard_map'd when a mesh is active."""
+    b, s, d = x.shape
+    router = p["router"][i]
+    wg, wu, wd = p["expert_gate"][i], p["expert_up"][i], p["expert_down"][i]
+    mesh = getattr(ax, "mesh", None)
+    if mesh is None or (ax.data_size == 1 and ax.model_size == 1):
+        out, aux = _moe_local(x.reshape(-1, d), router, wg, wu, wd, cfg, None)
+        return out.reshape(b, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+    dp = ax.dp
+    mp = ax.model if ax.model_size > 1 else None
+    fn = functools.partial(_body, cfg=cfg, model_axis=mp,
+                           dp_axes=dp if ax.data_size > 1 else None)
+    out, aux = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None),
+                  P(None, None, mp), P(None, None, mp), P(None, mp, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(x, router, wg, wu, wd)
+    return out, aux
+
+
+def _body(x, router, wg, wu, wd, *, cfg, model_axis, dp_axes):
+    b, s, d = x.shape
+    out, aux = _moe_local(x.reshape(-1, d), router, wg, wu, wd, cfg,
+                          model_axis)
+    if dp_axes is not None:
+        aux = jax.lax.pmean(aux, dp_axes)     # replicate across data shards
+    return out.reshape(b, s, d), aux

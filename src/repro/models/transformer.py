@@ -1,0 +1,207 @@
+"""Decoder/encoder transformer backbones: dense, MoE, encoder-only (HuBERT),
+and VLM (phi-3-vision with stubbed patch frontend).
+
+Layer loop is a static python loop over stacked per-layer weights — layers
+are *unrolled* in the lowered HLO so cost_analysis/collective parsing is
+exact (see DESIGN.md §6).  cfg.remat wraps each layer in jax.checkpoint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import sharding
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {}
+    if cfg.vocab:
+        p.update(L.init_embed(ks[0], cfg))
+    blk = {
+        "ln1": jnp.ones((cfg.n_layers, cfg.d_model), dt),
+        "ln2": jnp.ones((cfg.n_layers, cfg.d_model), dt),
+        **L.init_attn(ks[1], cfg, cfg.n_layers),
+    }
+    if cfg.family == "moe":
+        blk.update(moe_mod.init(ks[2], cfg, cfg.n_layers))
+    else:
+        blk.update(L.init_mlp(ks[2], cfg, cfg.n_layers))
+    p["layers"] = blk
+    p["ln_f"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.family == "vlm":
+        p["patch_proj"] = L.trunc_normal(ks[3], (cfg.patch_dim, cfg.d_model),
+                                         0.02, dt)
+    if cfg.family == "encoder":
+        p["frame_proj"] = L.trunc_normal(ks[3], (cfg.frame_dim, cfg.d_model),
+                                         0.02, dt)
+    return p
+
+
+def init_abstract(cfg: ModelConfig, key=None):
+    return jax.eval_shape(lambda: init(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _layer(p, i, x, cfg: ModelConfig, ax, positions, causal: bool):
+    h = L.rms_norm(x, p["ln1"][i])
+    q, k, v = L.attn_qkv(p, i, h, cfg, ax, positions)
+    o = L.blocked_attention(q, k, v, cfg, ax, causal=causal)
+    x = x + L.attn_out(p, i, o, x.dtype)
+    h = L.rms_norm(x, p["ln2"][i])
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_ffn(p, i, h, cfg, ax)
+    else:
+        y, aux = L.mlp(p, i, h), 0.0
+    return x + y, aux
+
+
+def backbone(params, x, cfg: ModelConfig, ax, positions, causal=None):
+    """x: [B, S, d] -> (hidden [B, S, d], aux_loss)."""
+    causal = cfg.is_causal if causal is None else causal
+    p = params["layers"]
+    aux_total = 0.0
+    step = _layer
+    if cfg.remat:
+        step = jax.checkpoint(_layer, static_argnums=(1, 3, 4, 6),
+                              policy=None)
+    for i in range(cfg.n_layers):
+        x = sharding.constrain(x, ax.dp, ax.mp(x.shape[1]), None)
+        x, aux = step(p, i, x, cfg, ax, positions, causal)
+        aux_total = aux_total + aux
+    return L.rms_norm(x, params["ln_f"]), aux_total
+
+
+def _inputs_to_hidden(params, batch, cfg: ModelConfig, dtype):
+    """Family-specific input embedding. Returns (x [B,S,d], positions [S])."""
+    if cfg.family == "encoder":
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(dtype),
+                       params["frame_proj"].astype(dtype))
+        s = x.shape[1]
+        return x, jnp.arange(s)
+    if cfg.family == "vlm":
+        tok = L.embed_tokens(params, batch["tokens"], cfg, dtype)
+        img = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(dtype),
+                         params["patch_proj"].astype(dtype))
+        x = jnp.concatenate([img, tok], axis=1)
+        return x, jnp.arange(x.shape[1])
+    x = L.embed_tokens(params, batch["tokens"], cfg, dtype)
+    return x, jnp.arange(x.shape[1])
+
+
+def forward_logits(params, batch, cfg: ModelConfig, ax):
+    """Full-sequence logits [B, S(, V)] (+ MoE aux loss)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x, positions = _inputs_to_hidden(params, batch, cfg, dtype)
+    h, aux = backbone(params, x, cfg, ax, positions)
+    if cfg.family == "vlm":
+        h = h[:, cfg.n_patches:]          # loss on text positions only
+    return L.logits_fn(params, h, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ax):
+    dtype = jnp.dtype(cfg.dtype)
+    x, positions = _inputs_to_hidden(params, batch, cfg, dtype)
+    h, aux = backbone(params, x, cfg, ax, positions)
+    if cfg.family == "vlm":
+        h = h[:, cfg.n_patches:]
+    labels = batch.get("labels", batch.get("targets"))
+    w = L.unembed_weight(params, cfg).astype(h.dtype)
+    return L.chunked_softmax_xent(h, w, labels, cfg.vocab) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + KV-cache decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    """Per-layer list of buffers (NOT stacked): a stacked [L, ...] cache
+    makes every layer's in-place update copy the whole cache (O(L^2) HBM
+    traffic per decode step)."""
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": [jnp.zeros(shape, dtype) for _ in range(cfg.n_layers)],
+            "v": [jnp.zeros(shape, dtype) for _ in range(cfg.n_layers)],
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len, dtype))
+
+
+def prefill(params, batch, cfg: ModelConfig, ax, cache_len: int | None = None):
+    """Full forward over the prompt; returns (last-token logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x, positions = _inputs_to_hidden(params, batch, cfg, dtype)
+    b, s, _ = x.shape
+    cache_len = cache_len or s
+    cache = init_cache(cfg, b, cache_len, dtype)
+    p = params["layers"]
+    for i in range(cfg.n_layers):
+        x = sharding.constrain(x, ax.dp, ax.mp(x.shape[1]), None)
+        h = L.rms_norm(x, p["ln1"][i])
+        q, k, v = L.attn_qkv(p, i, h, cfg, ax, positions)
+        o = L.blocked_attention(q, k, v, cfg, ax, causal=cfg.is_causal)
+        x = x + L.attn_out(p, i, o, x.dtype)
+        cache["k"][i] = cache["k"][i].at[:, :s].set(k)
+        cache["v"][i] = cache["v"][i].at[:, :s].set(v)
+        h = L.rms_norm(x, p["ln2"][i])
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_ffn(p, i, h, cfg, ax)
+        else:
+            y = L.mlp(p, i, h)
+        x = x + y
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    h = L.rms_norm(x, params["ln_f"])
+    logits = L.logits_fn(params, h[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, ax):
+    """One token for every sequence in the batch.
+
+    batch: {"tokens": i32[B]}; cache["pos"] scalar = write position.
+    Returns (logits [B, V], updated cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {"k": list(cache["k"]), "v": list(cache["v"]),
+             "pos": cache["pos"]}
+    pos = cache["pos"]
+    tok = batch["tokens"]
+    x = L.embed_tokens(params, tok[:, None], cfg, dtype)      # [B, 1, d]
+    p = params["layers"]
+    positions = pos[None]
+    for i in range(cfg.n_layers):
+        h = L.rms_norm(x, p["ln1"][i])
+        q, k, v = L.attn_qkv(p, i, h, cfg, ax, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"][i], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"][i], v, pos, axis=1)
+        cache["k"][i] = kc
+        cache["v"][i] = vc
+        o = L.decode_attention(q[:, 0], kc, vc, pos)
+        x = x + L.attn_out(p, i, o[:, None], x.dtype)
+        h = L.rms_norm(x, p["ln2"][i])
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_ffn(p, i, h, cfg, ax)
+        else:
+            y = L.mlp(p, i, h)
+        x = x + y
+    cache["pos"] = pos + 1
+    h = L.rms_norm(x, params["ln_f"])
+    logits = L.logits_fn(params, h, cfg)[:, 0]
+    return logits, cache

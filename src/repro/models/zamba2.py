@@ -1,0 +1,187 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+(arXiv:2411.15242).
+
+The shared block's weights exist once; it is invoked after every
+``shared_attn_every``-th mamba layer on concat(hidden, original embedding)
+(the Zamba "global shared attention" pattern).  Each invocation sees
+different activations, so serving keeps one KV cache *per invocation*
+([n_shared, B, S, KH, hd]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models import sharding
+from repro.models.config import ModelConfig
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init_model(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    p = L.init_embed(ks[0], cfg)
+    p["layers"] = mamba2.init(ks[1], cfg, cfg.n_layers)
+    p["shared"] = {
+        "ln1": jnp.ones((2 * d,), dt),
+        **{k: v[0] for k, v in
+           L.init_attn(ks[2], cfg, 1, d_in=2 * d).items()},
+        "ln2": jnp.ones((d,), dt),
+        **{k: v[0] for k, v in L.init_mlp(ks[3], cfg, 1).items()},
+    }
+    p["ln_f"] = jnp.ones((d,), dt)
+    return p
+
+
+def _shared_block(ps, h, x0, cfg: ModelConfig, ax, positions,
+                  kv_cache=None, pos=None):
+    """h: [B, S, d] hidden; x0: [B, S, d] original embeddings.
+
+    Returns (new h, (k, v)) — k/v returned for cache capture at prefill.
+    kv_cache: optional (k_cache, v_cache) [B, Smax, KH, hd] for decode.
+    """
+    xcat = jnp.concatenate([h, x0], axis=-1)
+    a = L.rms_norm(xcat, ps["ln1"])
+    # qkv on 2d input: stack a fake layer axis for the shared weights
+    pstack = {k: v[None] for k, v in ps.items() if k.startswith(("wq", "wk",
+                                                                 "wv", "wo"))}
+    q, k, v = L.attn_qkv(pstack, 0, a, cfg, ax, positions)
+    if kv_cache is None:
+        o = L.blocked_attention(q, k, v, cfg, ax, causal=True)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(kv_cache[0], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(kv_cache[1], v, pos, axis=1)
+        o = L.decode_attention(q[:, 0], kc, vc, pos)[:, None]
+        k, v = kc, vc
+    h = h + L.attn_out(pstack, 0, o, h.dtype)
+    m = L.rms_norm(h, ps["ln2"])
+    mstack = {k2: v2[None] for k2, v2 in ps.items()
+              if k2.startswith("w_")}
+    h = h + L.mlp(mstack, 0, m)
+    return h, (k, v)
+
+
+def _is_shared_layer(i: int, cfg: ModelConfig) -> bool:
+    return (i + 1) % cfg.shared_attn_every == 0 \
+        and (i + 1) // cfg.shared_attn_every <= n_shared_invocations(cfg)
+
+
+def forward_logits(params, batch, cfg: ModelConfig, ax):
+    h = _hidden(params, batch, cfg, ax)
+    return L.logits_fn(params, h, cfg), 0.0
+
+
+def _hidden(params, batch, cfg: ModelConfig, ax):
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x0 = L.embed_tokens(params, tokens, cfg, dtype)
+    positions = jnp.arange(tokens.shape[1])
+    h = x0
+    p = params["layers"]
+    mblock = mamba2.block
+    sblock = _shared_block
+    if cfg.remat:
+        mblock = jax.checkpoint(mamba2.block, static_argnums=(1, 3, 4))
+        sblock = jax.checkpoint(_shared_block, static_argnums=(3, 4))
+    for i in range(cfg.n_layers):
+        h = sharding.constrain(h, ax.dp, ax.mp(h.shape[1]), None)
+        y, _ = mblock(p, i, h, cfg, ax)
+        h = h + y
+        if _is_shared_layer(i, cfg):
+            h, _ = sblock(params["shared"], h, x0, cfg, ax, positions)
+    return L.rms_norm(h, params["ln_f"])
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ax):
+    h = _hidden(params, batch, cfg, ax)
+    w = L.unembed_weight(params, cfg).astype(h.dtype)
+    return L.chunked_softmax_xent(h, w, batch["labels"], cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    m = mamba2.init_cache(cfg, batch, dtype)
+    ns = n_shared_invocations(cfg)
+    shape = (batch, cache_len, cfg.n_kv_heads, cfg.hd)
+    m["attn_k"] = [jnp.zeros(shape, dtype) for _ in range(ns)]
+    m["attn_v"] = [jnp.zeros(shape, dtype) for _ in range(ns)]
+    return m
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len, dtype))
+
+
+def prefill(params, batch, cfg: ModelConfig, ax, cache_len: int | None = None):
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    cache_len = cache_len or s
+    cache = init_cache(cfg, bsz, cache_len, dtype)
+    x0 = L.embed_tokens(params, tokens, cfg, dtype)
+    positions = jnp.arange(s)
+    h = x0
+    p = params["layers"]
+    si = 0
+    for i in range(cfg.n_layers):
+        h = sharding.constrain(h, ax.dp, ax.mp(h.shape[1]), None)
+        y, h_final = mamba2.block(p, i, h, cfg, ax)
+        hn = L.rms_norm(h, p["ln"][i])
+        x_in = jnp.einsum("bsd,di->bsi", hn, p["in_x"][i].astype(dtype))
+        b_in = jnp.einsum("bsd,dt->bst", hn, p["in_B"][i].astype(dtype))
+        c_in = jnp.einsum("bsd,dt->bst", hn, p["in_C"][i].astype(dtype))
+        xbc = jnp.concatenate([x_in, b_in, c_in], axis=-1)
+        cache["conv"][i] = mamba2._conv_tail(xbc, s, cfg.conv_width)
+        cache["ssm"][i] = h_final
+        h = h + y
+        if _is_shared_layer(i, cfg):
+            h, (k, v) = _shared_block(params["shared"], h, x0, cfg, ax,
+                                      positions)
+            cache["attn_k"][si] = cache["attn_k"][si].at[:, :s].set(k)
+            cache["attn_v"][si] = cache["attn_v"][si].at[:, :s].set(v)
+            si += 1
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    h = L.rms_norm(h, params["ln_f"])
+    logits = L.logits_fn(params, h[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig, ax):
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {"conv": list(cache["conv"]), "ssm": list(cache["ssm"]),
+             "attn_k": list(cache["attn_k"]),
+             "attn_v": list(cache["attn_v"]), "pos": cache["pos"]}
+    pos = cache["pos"]
+    tok = batch["tokens"]
+    x0 = L.embed_tokens(params, tok[:, None], cfg, dtype)     # [B, 1, d]
+    h = x0[:, 0]
+    p = params["layers"]
+    si = 0
+    for i in range(cfg.n_layers):
+        y, conv_s, ssm_s = mamba2.block_decode(
+            p, i, h, cache["conv"][i], cache["ssm"][i], cfg, ax)
+        cache["conv"][i] = conv_s
+        cache["ssm"][i] = ssm_s
+        h = h + y
+        if _is_shared_layer(i, cfg):
+            h2, (kc, vc) = _shared_block(
+                params["shared"], h[:, None], x0, cfg, ax, pos[None],
+                kv_cache=(cache["attn_k"][si], cache["attn_v"][si]), pos=pos)
+            cache["attn_k"][si] = kc
+            cache["attn_v"][si] = vc
+            h = h2[:, 0]
+            si += 1
+    cache["pos"] = pos + 1
+    h = L.rms_norm(h, params["ln_f"])
+    logits = L.logits_fn(params, h[:, None], cfg)[:, 0]
+    return logits, cache

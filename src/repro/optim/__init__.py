@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import cosine_lr
+from repro.optim.compression import (DoubleSqueezeState, double_squeeze_init,
+                                     double_squeeze_compress, topk_sparsify)

@@ -1,0 +1,48 @@
+"""DoubleSqueeze gradient compression with error feedback (Tang et al., 2019).
+
+The paper (Figure 8, Table 5) stacks DoubleSqueeze top-k compression in
+front of HE to shrink the encrypted volume: only the top-k update entries
+are shipped (and encrypted); the compression error is fed back into the
+next round on both worker and server sides.
+
+Jit-friendly: k is static, selection by jax.lax.top_k on |value|.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DoubleSqueezeState:
+    error: Any               # f32[P] residual carried between rounds
+
+
+def double_squeeze_init(n_params: int) -> DoubleSqueezeState:
+    return DoubleSqueezeState(error=jnp.zeros((n_params,), jnp.float32))
+
+
+def topk_sparsify(vec, k: int):
+    """Keep the k largest-|.| entries. Returns (values f32[k], idx i32[k],
+    dense_compressed f32[P])."""
+    mag = jnp.abs(vec)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = vec[idx]
+    dense = jnp.zeros_like(vec).at[idx].set(vals)
+    return vals, idx, dense
+
+
+def double_squeeze_compress(vec, state: DoubleSqueezeState, k: int):
+    """One error-compensated compression pass.
+
+    corrected = vec + error;  compressed = top_k(corrected);
+    new_error = corrected - compressed.
+    Returns (compressed_dense f32[P], (values, idx), new_state).
+    """
+    corrected = vec + state.error
+    vals, idx, dense = topk_sparsify(corrected, k)
+    return dense, (vals, idx), DoubleSqueezeState(error=corrected - dense)

@@ -1,0 +1,46 @@
+"""Numpy-uint64 gold model for the u32 Montgomery construction.
+
+Validates that the 16-bit-limb u32 arithmetic in repro/kernels/ref.py
+computes the same ring operations as straightforward 64-bit modular
+arithmetic (which the TPU does not have — hence the construction).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def gold_mulmod(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    return (a.astype(np.uint64) * b.astype(np.uint64) % np.uint64(q)) \
+        .astype(np.uint32)
+
+
+def gold_mont_mul(a, b, q: int) -> np.ndarray:
+    """Montgomery product a*b*R^{-1} mod q via uint64/object math."""
+    r_inv = pow(1 << 32, -1, q)
+    wide = a.astype(object) * b.astype(object) * r_inv % q
+    return np.asarray(wide, dtype=np.uint64).astype(np.uint32)
+
+
+def gold_ntt(x: np.ndarray, q: int, psi: int) -> np.ndarray:
+    """O(N^2) negacyclic NTT in bit-reversed output order."""
+    n = x.shape[-1]
+    logn = n.bit_length() - 1
+    # X_k = sum_j x_j psi^(2jk + j) ; output bit-reversed
+    ks = np.arange(n)
+    out = np.zeros_like(x, dtype=np.uint64)
+    xs = x.astype(np.uint64)
+    for k in range(n):
+        acc = 0
+        for j in range(n):
+            w = pow(psi, (2 * j * k + j) % (2 * n), q)
+            acc = (acc + int(xs[..., j]) * w) % q
+        out[..., _bitrev(k, logn)] = acc
+    return out.astype(np.uint32)
+
+
+def _bitrev(x: int, bits: int) -> int:
+    out = 0
+    for _ in range(bits):
+        out = (out << 1) | (x & 1)
+        x >>= 1
+    return out

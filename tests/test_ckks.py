@@ -1,0 +1,199 @@
+"""CKKS correctness: roundtrips, homomorphism, rescale, threshold,
+crypto-parameter sweeps (paper Table 6 behaviour) + hypothesis properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ckks import cipher, encoding, threshold
+from repro.core.ckks import params as ckks_params
+
+
+def make(n_poly=256, delta_bits=20):
+    return ckks_params.make_test_context(n_poly=n_poly, n_limbs=2,
+                                         delta_bits=delta_bits)
+
+
+CTX = make()
+SK, PK = cipher.keygen(CTX, jax.random.PRNGKey(0))
+
+
+def _vals(b, slots, seed=0, scale=1.0):
+    return (np.random.RandomState(seed).randn(b, slots) * scale) \
+        .astype(np.float32)
+
+
+def test_encode_decode_np_roundtrip():
+    v = _vals(3, CTX.slots)
+    out = encoding.decode_np(encoding.encode_np(v, CTX), CTX, CTX.delta)
+    # rounding error ~ O(N)/delta: ~1e-3 at delta 2^20, N=256
+    np.testing.assert_allclose(out, v, atol=3e-3)
+    # and it shrinks ~linearly in delta (structural correctness)
+    big = float(2 ** 40)
+    out40 = encoding.decode_np(encoding.encode_np(v, CTX, delta=big), CTX, big)
+    assert np.abs(out40 - v).max() < 1e-8
+
+
+def test_encode_jnp_matches_np():
+    v = _vals(2, CTX.slots)
+    a = np.asarray(encoding.encode_jnp(jnp.asarray(v), CTX))
+    b = encoding.encode_np(v, CTX)
+    # complex64 FFT vs f64 FFT: residues may differ by +-1 ulp of delta
+    diff = (a.astype(np.int64) - b.astype(np.int64)) % CTX.primes[0]
+    diff = np.minimum(diff, CTX.primes[0] - diff)
+    assert diff.max() <= 2
+
+
+def test_encrypt_decrypt_roundtrip():
+    v = _vals(3, CTX.slots, seed=1)
+    ct = cipher.encrypt_coeffs(CTX, PK, jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(1))
+    out = cipher.decrypt_values_np(CTX, SK, ct)
+    np.testing.assert_allclose(out, v, atol=5e-3)
+    out_jnp = np.asarray(cipher.decrypt_values(CTX, SK, ct))
+    np.testing.assert_allclose(out_jnp, v, atol=5e-3)
+
+
+def test_homomorphic_add():
+    v1, v2 = _vals(2, CTX.slots, 2), _vals(2, CTX.slots, 3)
+    k = jax.random.PRNGKey(2)
+    ct1 = cipher.encrypt_coeffs(CTX, PK, jnp.asarray(encoding.encode_np(v1, CTX)), k)
+    ct2 = cipher.encrypt_coeffs(CTX, PK, jnp.asarray(encoding.encode_np(v2, CTX)),
+                                jax.random.fold_in(k, 1))
+    out = cipher.decrypt_values_np(CTX, SK, cipher.add(CTX, ct1, ct2))
+    np.testing.assert_allclose(out, v1 + v2, atol=1e-2)
+
+
+@pytest.mark.parametrize("w", [0.25, 1.0, -0.7, 0.001])
+def test_mul_plain_scalar(w):
+    v = _vals(2, CTX.slots, 4)
+    ct = cipher.encrypt_coeffs(CTX, PK, jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(3))
+    out = cipher.decrypt_values_np(CTX, SK, cipher.mul_plain_scalar(CTX, ct, w))
+    np.testing.assert_allclose(out, w * v, atol=2e-2)
+
+
+@given(ws=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6))
+@settings(max_examples=10, deadline=None)
+def test_weighted_sum_homomorphism(ws):
+    """Dec(sum w_i Enc(x_i)) ~= sum w_i x_i (the FedAvg core)."""
+    ws = [w / sum(ws) for w in ws]
+    vs = [_vals(1, CTX.slots, 10 + i) for i in range(len(ws))]
+    cts = [cipher.encrypt_coeffs(
+        CTX, PK, jnp.asarray(encoding.encode_np(v, CTX)),
+        jax.random.PRNGKey(20 + i)) for i, v in enumerate(vs)]
+    stacked = cipher.Ciphertext(data=jnp.stack([c.data for c in cts]),
+                                scale=cts[0].scale)
+    agg = cipher.weighted_sum(CTX, stacked, ws)
+    out = cipher.decrypt_values_np(CTX, SK, agg)
+    expect = sum(w * v for w, v in zip(ws, vs))
+    np.testing.assert_allclose(out, expect, atol=2e-2)
+
+
+def test_rescale_preserves_value():
+    # delta 2^26: post-rescale scale is delta^2/q_last ~ 2^22, keeping the
+    # O(||s||_1) rescale rounding noise ~1e-4 (paper-realistic params).
+    ctx3 = ckks_params.make_context(n_poly=256, n_limbs=3, delta_bits=26)
+    sk3, pk3 = cipher.keygen(ctx3, jax.random.PRNGKey(5))
+    v = _vals(2, ctx3.slots, 6)
+    ct = cipher.encrypt_coeffs(ctx3, pk3,
+                               jnp.asarray(encoding.encode_np(v, ctx3)),
+                               jax.random.PRNGKey(6))
+    ct2 = cipher.mul_plain_scalar(ctx3, ct, 0.5)
+    ct3 = cipher.rescale(ctx3, ct2)
+    assert ct3.n_limbs == 2
+    out = cipher.decrypt_values_np(ctx3, sk3, ct3)
+    np.testing.assert_allclose(out, 0.5 * v, atol=5e-3)
+
+
+def test_delta_accuracy_tradeoff():
+    """Paper Table 6: larger scaling factor -> closer-to-exact decrypt."""
+    errs = []
+    for db in (12, 16, 20, 24):
+        ctx = make(delta_bits=db)
+        sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(7))
+        v = _vals(1, ctx.slots, 8)
+        ct = cipher.encrypt_coeffs(ctx, pk,
+                                   jnp.asarray(encoding.encode_np(v, ctx)),
+                                   jax.random.PRNGKey(8))
+        errs.append(np.abs(cipher.decrypt_values_np(ctx, sk, ct) - v).max())
+    assert errs[0] > errs[-1], errs
+    assert errs[-1] < 1e-3
+
+
+def test_packing_batch_size_vs_ciphertext_count():
+    """Paper Table 6: bigger packing batch -> fewer, larger ciphertexts;
+    total encrypted bytes shrink with slot utilization."""
+    n_values = 100_000
+    sizes = {}
+    for n_poly in (2048, 4096, 8192):
+        ctx = ckks_params.make_context(n_poly=n_poly, n_limbs=2,
+                                       delta_bits=26)
+        sizes[n_poly] = (ctx.num_ciphertexts(n_values),
+                         ctx.encrypted_bytes(n_values))
+    assert sizes[2048][0] > sizes[8192][0]
+
+
+# ---------------------------------------------------------------------------
+# threshold HE
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_additive_roundtrip():
+    parties, tpk = threshold.threshold_keygen(CTX, jax.random.PRNGKey(9), 3)
+    v = _vals(2, CTX.slots, 9)
+    ct = cipher.encrypt_coeffs(CTX, tpk,
+                               jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(10))
+    partials = [threshold.partial_decrypt(CTX, p, ct, jax.random.PRNGKey(30 + i))
+                for i, p in enumerate(parties)]
+    out = encoding.decode_np(np.asarray(
+        threshold.combine_partials(CTX, ct, partials)), CTX, ct.scale)
+    np.testing.assert_allclose(out, v, atol=0.5)   # smudging noise
+
+
+def test_threshold_missing_party_fails():
+    parties, tpk = threshold.threshold_keygen(CTX, jax.random.PRNGKey(11), 3)
+    v = _vals(1, CTX.slots, 11)
+    ct = cipher.encrypt_coeffs(CTX, tpk,
+                               jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(12))
+    partials = [threshold.partial_decrypt(CTX, p, ct, jax.random.PRNGKey(40 + i))
+                for i, p in enumerate(parties[:2])]    # one missing
+    out = encoding.decode_np(np.asarray(
+        threshold.combine_partials(CTX, ct, partials)), CTX, ct.scale)
+    assert np.abs(out - v).max() > 1.0     # decryption garbage
+
+
+def test_shamir_threshold_roundtrip():
+    parties = threshold.shamir_share_secret(CTX, SK, jax.random.PRNGKey(13),
+                                            n_parties=5, threshold=3)
+    v = _vals(1, CTX.slots, 13)
+    ct = cipher.encrypt_coeffs(CTX, PK,
+                               jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(14))
+    active = [0, 2, 4]
+    partials = [threshold.shamir_partial_decrypt(
+        CTX, parties[i], active, ct, jax.random.PRNGKey(50 + i))
+        for i in active]
+    acc = ct.c0
+    from repro.kernels import ops
+    for d in partials:
+        acc = ops.mod_add(acc, d, CTX)
+    out = encoding.decode_np(np.asarray(ops.ntt_inv(acc, CTX)), CTX, ct.scale)
+    np.testing.assert_allclose(out, v, atol=0.5)
+
+
+# ---------------------------------------------------------------------------
+# semantic security smoke: ciphertexts of equal plaintexts differ
+# ---------------------------------------------------------------------------
+
+
+def test_probabilistic_encryption():
+    v = _vals(1, CTX.slots, 15)
+    c1 = cipher.encrypt_coeffs(CTX, PK, jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(15))
+    c2 = cipher.encrypt_coeffs(CTX, PK, jnp.asarray(encoding.encode_np(v, CTX)),
+                               jax.random.PRNGKey(16))
+    assert not np.array_equal(np.asarray(c1.data), np.asarray(c2.data))

@@ -1,0 +1,254 @@
+"""The paper's technique: packing, selection, DP accounting, sensitivity,
+and Algorithm 1 end-to-end (+ hypothesis properties)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp, packing, secure_agg, selection, sensitivity
+from repro.core.ckks import cipher
+from repro.core.ckks import params as ckks_params
+from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
+
+CTX = ckks_params.make_test_context(n_poly=256, n_limbs=2, delta_bits=20)
+SK, PK = cipher.keygen(CTX, jax.random.PRNGKey(0))
+
+
+def small_model(seed=1):
+    r = np.random.RandomState(seed)
+    return {"w1": jnp.asarray(r.randn(40, 30), jnp.float32),
+            "b1": jnp.asarray(r.randn(30), jnp.float32),
+            "w2": jnp.asarray(r.randn(30, 5), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_roundtrip():
+    m = small_model()
+    vec, spec = packing.flatten_params(m)
+    assert vec.shape == (40 * 30 + 30 + 150,)
+    m2 = packing.unflatten_params(vec, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(m),
+                    jax.tree_util.tree_leaves(m2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@given(p=st.floats(0.0, 1.0), n=st.integers(10, 500))
+@settings(max_examples=25, deadline=None)
+def test_split_merge_roundtrip(p, n):
+    rng = np.random.RandomState(0)
+    vec = jnp.asarray(rng.randn(n), jnp.float32)
+    mask = selection.random_mask(p, n, seed=3)
+    part = packing.make_partition(mask, slots=32)
+    enc, plain = packing.split_by_mask(vec, part)
+    out = packing.merge_by_mask(enc, plain, part)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vec))
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+
+@given(p1=st.floats(0.0, 1.0), p2=st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_mask_monotonicity(p1, p2):
+    """p1 <= p2  =>  mask(p1) subset mask(p2) (for top_p and random)."""
+    lo, hi = min(p1, p2), max(p1, p2)
+    s = np.random.RandomState(1).randn(400)
+    m_lo, m_hi = selection.top_p_mask(s, lo), selection.top_p_mask(s, hi)
+    assert (m_lo <= m_hi).all()
+    r_lo = selection.random_mask(lo, 400, seed=5)
+    r_hi = selection.random_mask(hi, 400, seed=5)
+    assert (r_lo <= r_hi).all()
+
+
+def test_top_p_selects_largest():
+    s = np.asarray([0.1, 5.0, -7.0, 0.01, 2.0])
+    m = selection.top_p_mask(s, 0.4)
+    np.testing.assert_array_equal(m, [False, True, True, False, False])
+
+
+def test_recipe_includes_first_last_layers():
+    sens = np.zeros(100)
+    sens[50] = 1.0
+    m = selection.recipe_mask(sens, 0.01, offsets=(0, 10, 90),
+                              sizes=(10, 80, 10))
+    assert m[:10].all() and m[90:].all() and m[50]
+
+
+def test_per_layer_top_p():
+    s = np.concatenate([np.full(10, 10.0), np.full(10, 0.1)])
+    m = selection.per_layer_top_p_mask(s, 0.5, offsets=(0, 10), sizes=(10, 10))
+    assert m[:5].sum() == 5 and m[10:15].sum() == 5
+
+
+# ---------------------------------------------------------------------------
+# DP accounting (paper §3)
+# ---------------------------------------------------------------------------
+
+
+def test_epsilon_ordering_selective_beats_random():
+    """Remarks 3.12-3.14: eps_selective < eps_random < eps_none."""
+    s = np.random.RandomState(2).rand(10_000)      # Delta f ~ U(0,1)
+    out = dp.selection_advantage(s, p=0.3, b=1.0)
+    assert out["eps_selective"] < out["eps_random"] < out["eps_none"]
+
+
+@pytest.mark.parametrize("p", [0.1, 0.3, 0.5, 0.9])
+def test_epsilon_closed_forms_under_uniform(p):
+    """Empirical eps matches (1-p)J random and (1-p)^2 J selective under
+    Delta f ~ U(0,1)."""
+    s = np.random.RandomState(3).rand(200_000)
+    j = dp.epsilon_all_plaintext(s, 1.0)
+    out = dp.selection_advantage(s, p=p, b=1.0)
+    np.testing.assert_allclose(out["eps_random"],
+                               dp.epsilon_uniform_random(j, p), rtol=0.02)
+    np.testing.assert_allclose(out["eps_selective"],
+                               dp.epsilon_uniform_selective(j, p), rtol=0.02)
+
+
+@given(b=st.floats(0.1, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_epsilon_composition_additivity(b):
+    s = np.random.RandomState(4).rand(1000)
+    m1 = np.zeros(1000, bool)
+    m1[:500] = True
+    eps_half = dp.epsilon_total(s, m1, b)
+    eps_all = dp.epsilon_total(s, np.zeros(1000, bool), b)
+    np.testing.assert_allclose(eps_half + dp.epsilon_total(s, ~m1, b),
+                               eps_all, rtol=1e-9)
+
+
+def test_laplace_noise_scale():
+    key = jax.random.PRNGKey(0)
+    v = jnp.zeros((200_000,))
+    noised = dp.laplace_noise_vec(v, key, b=2.0)
+    # Var of Laplace(b) = 2 b^2
+    assert abs(float(jnp.var(noised)) - 8.0) < 0.3
+
+
+# ---------------------------------------------------------------------------
+# sensitivity
+# ---------------------------------------------------------------------------
+
+
+def _mlp_loss(params, x, y_soft):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    logp = jax.nn.log_softmax(h @ params["w2"])
+    return -jnp.mean(jnp.sum(y_soft * logp, axis=-1))
+
+
+def test_sensitivity_exact_vs_jvp_ranking():
+    p0 = jax.tree_util.tree_map(lambda x: x * 0.1, small_model(7))
+    rng = np.random.RandomState(8)
+    x = jnp.asarray(rng.randn(16, 40), jnp.float32)
+    y = jax.nn.one_hot(jnp.asarray(rng.randint(0, 5, 16)), 5)
+    se = sensitivity.sensitivity_exact(_mlp_loss, p0, x, y)
+    sj = sensitivity.sensitivity_jvp(_mlp_loss, p0, x, y,
+                                     jax.random.PRNGKey(9), n_probes=32)
+    ve, _ = packing.flatten_params(se)
+    vj, _ = packing.flatten_params(sj)
+    ve, vj = np.asarray(ve), np.asarray(vj)
+    ra = np.argsort(np.argsort(ve))
+    rb = np.argsort(np.argsort(vj))
+    rho = np.corrcoef(ra, rb)[0, 1]
+    assert rho > 0.8, rho
+    # top-20% masks overlap well
+    me = selection.top_p_mask(ve, 0.2)
+    mj = selection.top_p_mask(vj, 0.2)
+    assert (me & mj).sum() / me.sum() > 0.5
+
+
+def test_sensitivity_nonnegative():
+    p0 = small_model(10)
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(4, 40), jnp.float32)
+    y = jax.nn.one_hot(jnp.asarray(rng.randint(0, 5, 4)), 5)
+    s = sensitivity.sensitivity_jvp(_mlp_loss, p0, x, y,
+                                    jax.random.PRNGKey(1), n_probes=2)
+    assert all(bool((l >= 0).all()) for l in jax.tree_util.tree_leaves(s))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 end-to-end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,p", [("top_p", 0.3), ("random", 0.5),
+                                        ("all", 1.0), ("none", 0.0),
+                                        ("recipe", 0.2), ("per_layer", 0.25)])
+def test_algorithm1_aggregation_exact(strategy, p):
+    model = small_model(12)
+    sens = np.abs(np.random.RandomState(13).randn(1380))
+    agg = SelectiveHEAggregator.build(
+        CTX, model, sens, AggregatorConfig(p_ratio=p, strategy=strategy))
+    models, ups = [], []
+    for i in range(3):
+        m = jax.tree_util.tree_map(lambda x: x + 0.05 * (i + 1), model)
+        models.append(m)
+        ups.append(agg.client_protect(m, PK, jax.random.PRNGKey(100 + i)))
+    ws = [0.5, 0.3, 0.2]
+    glob = agg.server_aggregate(ups, ws)
+    rec = agg.client_recover_params(glob, SK)
+    expect = jax.tree_util.tree_map(
+        lambda *xs: sum(w * x for w, x in zip(ws, xs)), *models)
+    for a, b in zip(jax.tree_util.tree_leaves(rec),
+                    jax.tree_util.tree_leaves(expect)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)
+
+
+def test_fedavg_equal_clients_equals_single():
+    """FedAvg of identical models == the model (homomorphism sanity)."""
+    model = small_model(14)
+    sens = np.abs(np.random.RandomState(15).randn(1380))
+    agg = SelectiveHEAggregator.build(
+        CTX, model, sens, AggregatorConfig(p_ratio=0.4))
+    ups = [agg.client_protect(model, PK, jax.random.PRNGKey(200 + i))
+           for i in range(4)]
+    glob = agg.server_aggregate(ups, [0.25] * 4)
+    rec = agg.client_recover_params(glob, SK)
+    for a, b in zip(jax.tree_util.tree_leaves(rec),
+                    jax.tree_util.tree_leaves(model)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)
+
+
+def test_overhead_report_scales_with_p():
+    model = small_model(16)
+    sens = np.abs(np.random.RandomState(17).randn(1380))
+    reps = [SelectiveHEAggregator.build(
+        CTX, model, sens, AggregatorConfig(p_ratio=p)).overhead_report()
+        for p in (0.1, 0.5, 1.0)]
+    assert reps[0]["bytes_encrypted"] < reps[1]["bytes_encrypted"] \
+        <= reps[2]["bytes_encrypted"]
+    assert reps[0]["comm_ratio"] < reps[2]["comm_ratio"]
+
+
+def test_mask_agreement_mechanism():
+    sens = np.abs(np.random.RandomState(18).randn(500))
+    locals_ = [sens + 0.01 * np.random.RandomState(i).randn(500)
+               for i in range(3)]
+    mask = secure_agg.agree_mask(CTX, PK, SK, locals_, [1 / 3] * 3, 0.2,
+                                 jax.random.PRNGKey(19))
+    ref = selection.top_p_mask(sens, 0.2)
+    assert (mask & ref).sum() / ref.sum() > 0.9
+    assert abs(int(mask.sum()) - int(ref.sum())) <= 2
+
+
+def test_dp_noise_on_plaintext_part():
+    model = small_model(20)
+    sens = np.abs(np.random.RandomState(21).randn(1380))
+    agg = SelectiveHEAggregator.build(
+        CTX, model, sens, AggregatorConfig(p_ratio=0.3, dp_b=0.5))
+    up = agg.client_protect(model, PK, jax.random.PRNGKey(22))
+    vec, _ = packing.flatten_params(model)
+    plain_clean = np.asarray(vec)[agg.part.plain_idx]
+    diff = np.abs(np.asarray(up.plain) - plain_clean)
+    assert diff.mean() > 0.1          # noise present
+    eps = dp.epsilon_total(sens, ~np.isin(np.arange(1380),
+                                          agg.part.plain_idx), 0.5)
+    assert np.isfinite(eps)

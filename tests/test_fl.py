@@ -1,0 +1,147 @@
+"""FL orchestration integration tests: encrypted rounds, dropout,
+stragglers, threshold decryption, checkpoint-resume, elasticity, FedProx,
+async buffering."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.core.ckks import params as ckks_params
+from repro.core.secure_agg import AggregatorConfig
+from repro.data import make_client_streams
+from repro.fl import (ClientConfig, FLClient, FLRunConfig, FLServer, FLTask)
+from repro.fl.server import ReceivedUpdate
+from repro.models import build_model
+
+CTX = ckks_params.make_test_context(n_poly=256, n_limbs=2, delta_bits=20)
+
+
+def tiny_task(n_clients=3, tmp=None, **run_kw):
+    cfg = configs.get_config("qwen1.5-0.5b", smoke=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_layers=1, d_model=32, n_heads=2,
+                              n_kv_heads=2, d_ff=64, vocab=61)
+    model = build_model(cfg)
+    streams = make_client_streams(n_clients, cfg.vocab, seq_len=8,
+                                  batch_size=2, seed=0)
+    clients = [FLClient(i, model, streams[i],
+                        ClientConfig(local_steps=1, sensitivity_probes=1))
+               for i in range(n_clients)]
+    run = FLRunConfig(n_rounds=2, seed=0, **run_kw)
+    return FLTask(model, clients,
+                  AggregatorConfig(p_ratio=0.2, strategy="top_p"),
+                  run, ctx=CTX)
+
+
+def test_encrypted_round_reduces_loss():
+    task = tiny_task()
+    logs = task.run()
+    assert len(logs) == 2
+    assert all(np.isfinite(l.loss) for l in logs)
+    assert all(l.n_participating == 3 for l in logs)
+
+
+def test_dropout_renormalizes():
+    task = tiny_task(n_clients=4, dropout_prob=0.45)
+    logs = task.run()
+    dropped = sum(l.n_dropped for l in logs)
+    assert dropped > 0                       # some clients failed
+    assert all(np.isfinite(l.loss) for l in logs if l.n_participating)
+
+
+def test_straggler_deadline_cuts():
+    task = tiny_task(n_clients=4, straggler_prob=0.5, deadline_s=2.0)
+    logs = task.run()
+    assert sum(l.n_dropped for l in logs) > 0
+
+
+def test_total_dropout_keeps_global_model():
+    task = tiny_task(n_clients=2, dropout_prob=1.0)
+    task.agree_encryption_mask()
+    before = jax.tree_util.tree_leaves(task.global_params)
+    log = task.run_round(0)
+    after = jax.tree_util.tree_leaves(task.global_params)
+    assert log.n_participating == 0
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_threshold_mode_roundtrip():
+    task = tiny_task(n_clients=3, threshold_mode=True)
+    logs = task.run()
+    assert all(np.isfinite(l.loss) for l in logs)
+
+
+def test_checkpoint_resume(tmp_path):
+    d = str(tmp_path / "ck")
+    t1 = tiny_task(ckpt_dir=d)
+    t1.run()
+    # fresh task resumes from round 2 and runs nothing new at n_rounds=2
+    t2 = tiny_task(ckpt_dir=d)
+    t2.agree_encryption_mask()
+    t2.maybe_resume()
+    assert t2._start_round == 2
+    for a, b in zip(jax.tree_util.tree_leaves(t1.global_params),
+                    jax.tree_util.tree_leaves(t2.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_elastic_add_remove_client():
+    task = tiny_task(n_clients=2)
+    task.agree_encryption_mask()
+    task.run_round(0)
+    cfg = task.model.cfg
+    from repro.data import SyntheticLM, dirichlet_partition
+    prior = dirichlet_partition(1, cfg.vocab, seed=9)[0]
+    newc = FLClient(99, task.model,
+                    SyntheticLM(vocab=cfg.vocab, seq_len=8, batch_size=2,
+                                client_prior=prior, seed=9),
+                    ClientConfig(local_steps=1))
+    task.add_client(newc)
+    log = task.run_round(1)
+    assert log.n_participating == 3
+    task.remove_client(99)
+    log = task.run_round(2)
+    assert log.n_participating == 2
+
+
+def test_fedprox_client_stays_closer():
+    cfg = configs.get_config("qwen1.5-0.5b", smoke=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_layers=1, d_model=32, n_heads=2,
+                              n_kv_heads=2, d_ff=64, vocab=61)
+    model = build_model(cfg)
+    streams = make_client_streams(1, cfg.vocab, seq_len=8, batch_size=2)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def drift(mu):
+        c = FLClient(0, model, streams[0],
+                     ClientConfig(local_steps=4, lr=5e-2, prox_mu=mu))
+        local, _ = c.local_train(params)
+        return sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(
+            jax.tree_util.tree_leaves(local),
+            jax.tree_util.tree_leaves(params)))
+
+    assert drift(mu=1.0) < drift(mu=0.0)
+
+
+def test_async_fedbuff_buffer():
+    task = tiny_task(n_clients=3)
+    agg = task.agree_encryption_mask()
+    server = FLServer(agg, buffer_size=2)
+    ups = []
+    for i, c in enumerate(task.clients):
+        local, _ = c.local_train(task.global_params)
+        ups.append(ReceivedUpdate(
+            cid=i, n_samples=4, round_sent=i,
+            update=agg.client_protect(local, task.pk,
+                                      jax.random.PRNGKey(i))))
+    assert server.submit_async(ups[0], current_round=2) is None
+    out = server.submit_async(ups[1], current_round=2)   # buffer full
+    assert out is not None
+    rec = agg.client_recover_params(out, task.sk)
+    assert all(bool(jnp.isfinite(l).all())
+               for l in jax.tree_util.tree_leaves(rec))
