@@ -123,6 +123,61 @@ def encrypt_values(ctx: CkksContext, pk: dict, values, key) -> Ciphertext:
     return encrypt_coeffs(ctx, pk, encoding.encode_jnp(values, ctx), key)
 
 
+def expand_a_rows(ctx: CkksContext, a_seed: int, start: int, count: int):
+    """Deterministic uniform `a` rows [start, start+count) from a public seed.
+
+    Row i is expanded from fold_in(PRNGKey(a_seed), i) so a receiver can
+    regenerate any single chunk independently (streaming ingest never needs
+    the whole batch).  Returns u32[count, L, N] in NTT domain (uniform
+    residues are uniform in either domain; both sides just agree on this
+    convention, matching keygen's treatment of `a`).
+    """
+    base = jax.random.PRNGKey(int(a_seed))
+    rows = [_uniform_residues(jax.random.fold_in(base, i), (ctx.n_poly,), ctx)
+            for i in range(start, start + count)]
+    return jnp.stack(rows, axis=0)  # [count, L, N]
+
+
+def expand_a(ctx: CkksContext, a_seed: int, batch: int):
+    """Full-batch `a` expansion (rows 0..batch-1)."""
+    return expand_a_rows(ctx, a_seed, 0, batch)
+
+
+def encrypt_coeffs_seeded(ctx: CkksContext, sk: dict, m_coeff, key,
+                          a_seed: int, scale: float | None = None) -> Ciphertext:
+    """Secret-key encryption with seed-expandable c1 (uplink compression).
+
+    ct = (c0, c1) with c1 = a = PRG(a_seed) and c0 = -(a s) + e + m, so the
+    wire only needs (a_seed, c0) — half the fresh-ciphertext bytes.  The
+    decryption identity c0 + c1 s = m + e matches the public-key path, so
+    seeded and pk ciphertexts mix freely under the homomorphic ops.
+    `a_seed` must be unique per (client, round); reuse leaks m1 - m2.
+    """
+    scale = float(scale if scale is not None else ctx.delta)
+    b = m_coeff.shape[0]
+    n = ctx.n_poly
+    m = ops.ntt_fwd(m_coeff, ctx)
+    a = expand_a(ctx, a_seed, b)                                  # [B, L, N]
+    e = ops.ntt_fwd(_gaussian_residues(key, (b, n), ctx), ctx)
+    a_s = ops.mont_mul(a, sk["s_mont"][None], ctx)
+    c0 = ops.mod_add(ops.mod_neg(a_s, ctx), ops.mod_add(e, m, ctx), ctx)
+    return Ciphertext(data=jnp.stack([c0, a], axis=-2), scale=scale)
+
+
+def drop_limbs(ctx: CkksContext, ct: Ciphertext, keep: int) -> Ciphertext:
+    """Rescale away trailing RNS limbs until only `keep` remain.
+
+    Lossy downlink compression: each dropped limb divides the scale by that
+    limb's prime, trading ~log2(q) bits of plaintext precision for a
+    (L-keep)/L cut in ciphertext bytes.  decode must go through the
+    any-limb-count np path when keep < 2.
+    """
+    assert 1 <= keep <= ct.n_limbs
+    while ct.n_limbs > keep:
+        ct = rescale(ctx, ct)
+    return ct
+
+
 def decrypt_to_coeffs(ctx: CkksContext, sk: dict, ct: Ciphertext):
     """-> u32[B, L, N] coefficient-domain residues of m + noise.
     Handles rescaled ciphertexts (fewer limbs than the context)."""

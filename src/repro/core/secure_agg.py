@@ -100,9 +100,29 @@ class SelectiveHEAggregator:
             plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
         return ProtectedUpdate(ct=ct, plain=plain)
 
+    def client_protect_seeded(self, params, sk: dict, key,
+                              a_seed: int) -> ProtectedUpdate:
+        """client_protect via the seeded secret-key encrypt path: c1 is
+        PRG(a_seed), so the wire layer (repro.wire) can ship (seed, c0) and
+        halve uplink ciphertext bytes.  `a_seed` must be unique per
+        (client, round)."""
+        vec, _ = packing.flatten_params(params)
+        enc_vals, plain = packing.split_by_mask(vec, self.part)
+        k_enc, k_dp = jax.random.split(key)
+        coeffs = encoding.encode_jnp(enc_vals, self.ctx)
+        ct = cipher.encrypt_coeffs_seeded(self.ctx, sk, coeffs, k_enc, a_seed)
+        if self.cfg.dp_b > 0:
+            plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
+        return ProtectedUpdate(ct=ct, plain=plain)
+
     def client_recover(self, agg: ProtectedUpdate, sk: dict):
         """Decrypt + merge -> flat global vector."""
-        enc = cipher.decrypt_values(self.ctx, sk, agg.ct)
+        if agg.ct.n_limbs == 2:
+            enc = cipher.decrypt_values(self.ctx, sk, agg.ct)
+        else:
+            # limb-dropped downlink (repro.wire.compress.limb_drop): the jnp
+            # decode path is 2-limb only, fall back to the any-count host path
+            enc = jnp.asarray(cipher.decrypt_values_np(self.ctx, sk, agg.ct))
         return packing.merge_by_mask(enc, agg.plain, self.part)
 
     def client_recover_params(self, agg: ProtectedUpdate, sk: dict):

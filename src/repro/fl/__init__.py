@@ -1,4 +1,6 @@
 from repro.fl.keys import KeyAuthority, ThresholdKeyAuthority
 from repro.fl.client import FLClient, ClientConfig
 from repro.fl.server import FLServer
-from repro.fl.orchestrator import FLTask, FLRunConfig, run_federated_training
+from repro.fl.orchestrator import (FLTask, FLRunConfig, RoundLog,
+                                   run_federated_training)
+from repro.wire import BandwidthLedger, WirePolicy

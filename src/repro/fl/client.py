@@ -16,6 +16,10 @@ import numpy as np
 from repro.core import packing, sensitivity
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.wire import budget as wire_budget
+from repro.wire import compress as wire_compress
+from repro.wire import format as wire_format
+from repro.wire import stream as wire_stream
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,11 +33,13 @@ class ClientConfig:
 
 class FLClient:
     def __init__(self, cid: int, model: Model, stream,
-                 cfg: ClientConfig = ClientConfig()):
+                 cfg: ClientConfig = ClientConfig(),
+                 ledger: wire_budget.BandwidthLedger | None = None):
         self.cid = cid
         self.model = model
         self.stream = stream
         self.cfg = cfg
+        self.ledger = ledger           # shared wire-bandwidth ledger (opt.)
         self._step = jax.jit(self._make_step())
         self.n_samples = 0
 
@@ -87,6 +93,44 @@ class FLClient:
             self.n_samples += int(batch["tokens"].shape[0]) \
                 if "tokens" in batch else int(next(iter(batch.values())).shape[0])
         return params, float(np.mean(losses))
+
+    # -- wire: serialized uplink/downlink (repro.wire) -------------------------
+
+    def protect_and_pack(self, aggregator, local_params, *, rnd: int,
+                         policy: wire_compress.WirePolicy,
+                         pk: dict | None = None, sk: dict | None = None,
+                         key=None) -> bytes:
+        """Protect the local update and serialize it for the uplink.
+
+        With policy.seed_ciphertexts and an available sk, the seeded
+        secret-key encrypt path is used and the wire carries (seed, c0) —
+        roughly half the ciphertext bytes.  Bytes are accounted at the
+        receiving end: the server ledgers this uplink blob when it ingests
+        it (FLServer.aggregate_wire); this client ledgers the downlink it
+        receives (receive_global).
+        """
+        key = key if key is not None else jax.random.PRNGKey(
+            rnd * 100_003 + self.cid)
+        seeded = None
+        if policy.seed_ciphertexts and sk is not None:
+            a_seed = rnd * 1_000_003 + self.cid   # unique per (client, round)
+            upd = aggregator.client_protect_seeded(local_params, sk, key,
+                                                   a_seed)
+            seeded = wire_compress.seed_compress(upd.ct, a_seed)
+        else:
+            upd = aggregator.client_protect(local_params, pk, key)
+        return wire_stream.pack_update_frames(
+            upd, cid=self.cid, n_samples=max(1, self.n_samples), rnd=rnd,
+            seeded=seeded, plain_codec=policy.plain_codec)
+
+    def receive_global(self, blob: bytes, ctx, *, rnd: int):
+        """Deserialize the broadcast global update, recording downlink
+        bytes against this client."""
+        if self.ledger is not None:
+            self.ledger.record_blob(blob, rnd=rnd, cid=self.cid,
+                                    direction=wire_budget.DOWNLINK)
+        upd, _ = wire_format.deserialize(blob, ctx)
+        return upd
 
     # -- privacy sensitivity (paper §2.4 Step 1) ------------------------------
 

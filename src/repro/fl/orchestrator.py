@@ -26,6 +26,10 @@ from repro.fl.client import ClientConfig, FLClient
 from repro.fl.keys import KeyAuthority, ThresholdKeyAuthority
 from repro.fl.server import FLServer, ReceivedUpdate
 from repro.models import Model
+from repro.wire import budget as wire_budget
+from repro.wire import compress as wire_compress
+from repro.wire import format as wire_format
+from repro.wire.compress import WirePolicy
 
 
 @dataclasses.dataclass
@@ -40,6 +44,10 @@ class FLRunConfig:
     ckpt_dir: str | None = None
     ckpt_every: int = 1
     seed: int = 0
+    # repro.wire transport: None keeps the legacy in-memory hand-off (comm
+    # bytes estimated); a WirePolicy serializes every update, streams it
+    # through the O(1)-memory server ingest, and logs measured bytes.
+    wire_policy: WirePolicy | None = None
 
 
 @dataclasses.dataclass
@@ -50,6 +58,9 @@ class RoundLog:
     n_dropped: int
     comm_bytes: int
     wall_s: float
+    comm_up_bytes: int = 0      # measured uplink (wire mode only)
+    comm_down_bytes: int = 0    # measured downlink (wire mode only)
+    comm_measured: bool = False  # True = bytes-on-wire, False = estimate
 
 
 class FLTask:
@@ -78,6 +89,12 @@ class FLTask:
         self.global_params = model.init(jax.random.PRNGKey(run_cfg.seed))
         self.server: FLServer | None = None
         self.aggregator: SelectiveHEAggregator | None = None
+        # the task owns round accounting: always (re)attach its ledger, so
+        # clients reused from a previous FLTask record into THIS task's
+        # ledger rather than the old one
+        self.ledger = wire_budget.BandwidthLedger()
+        for c in clients:
+            c.ledger = self.ledger
         self.logs: list[RoundLog] = []
         self._ckpt = (CheckpointManager(run_cfg.ckpt_dir)
                       if run_cfg.ckpt_dir else None)
@@ -114,7 +131,7 @@ class FLTask:
                 part = packing.make_partition(mask, self.ctx.slots)
                 self.aggregator = SelectiveHEAggregator(
                     self.ctx, spec, part, self.agg_cfg)
-        self.server = FLServer(self.aggregator)
+        self.server = FLServer(self.aggregator, ledger=self.ledger)
         return self.aggregator
 
     # -- resume ----------------------------------------------------------------
@@ -136,7 +153,9 @@ class FLTask:
         k = cfg.clients_per_round or n
         chosen = self.rng.choice(n, size=min(k, n), replace=False)
 
+        use_wire = cfg.wire_policy is not None
         received, dropped = [], 0
+        wire_blobs, wire_clients = [], []
         losses = []
         for ci in chosen:
             client = self.clients[ci]
@@ -151,27 +170,60 @@ class FLTask:
                 dropped += 1
                 continue                      # straggler cut at the deadline
             losses.append(loss)
-            upd = self.aggregator.client_protect(
-                local_params, self.pk,
-                jax.random.PRNGKey(rnd * 1000 + int(ci)))
-            received.append(ReceivedUpdate(cid=int(ci), update=upd,
-                                           n_samples=max(1, client.n_samples),
-                                           round_sent=rnd))
-        if not received:
+            key = jax.random.PRNGKey(rnd * 1000 + int(ci))
+            if use_wire:
+                blob = client.protect_and_pack(
+                    self.aggregator, local_params, rnd=rnd,
+                    policy=cfg.wire_policy, pk=self.pk,
+                    sk=None if cfg.threshold_mode else self.sk, key=key)
+                wire_blobs.append(blob)
+                wire_clients.append(client)
+            else:
+                upd = self.aggregator.client_protect(local_params, self.pk,
+                                                     key)
+                received.append(ReceivedUpdate(
+                    cid=int(ci), update=upd,
+                    n_samples=max(1, client.n_samples), round_sent=rnd))
+        if not received and not wire_blobs:
             # total dropout: keep the old global model, log and move on
             return RoundLog(rnd, float("nan"), 0, dropped, 0,
                             time.time() - t0)
-        agg = self.server.aggregate_sync(received)
-        self.global_params = self._recover(agg)
-        rep = self.aggregator.overhead_report()
-        comm = (rep["bytes_total"]) * len(received)
-        log = RoundLog(rnd, float(np.mean(losses)), len(received), dropped,
-                       comm, time.time() - t0)
+        if use_wire:
+            agg, n_recv = self._wire_round(rnd, wire_blobs, wire_clients)
+            self.global_params = self._recover(agg)
+            up = self.ledger.total(wire_budget.UPLINK, rnd)
+            down = self.ledger.total(wire_budget.DOWNLINK, rnd)
+            log = RoundLog(rnd, float(np.mean(losses)), n_recv, dropped,
+                           up + down, time.time() - t0, comm_up_bytes=up,
+                           comm_down_bytes=down, comm_measured=True)
+        else:
+            agg = self.server.aggregate_sync(received)
+            self.global_params = self._recover(agg)
+            rep = self.aggregator.overhead_report()
+            comm = (rep["bytes_total"]) * len(received)
+            log = RoundLog(rnd, float(np.mean(losses)), len(received),
+                           dropped, comm, time.time() - t0)
         self.logs.append(log)
         if self._ckpt is not None and (rnd + 1) % cfg.ckpt_every == 0:
             self._ckpt.save(rnd, self.global_params,
                             extra={"loss": log.loss})
         return log
+
+    def _wire_round(self, rnd, wire_blobs, wire_clients):
+        """Serialized transport: stream blobs through the O(1) server
+        ingest, apply the downlink policy, broadcast, deserialize."""
+        policy = self.run_cfg.wire_policy
+        agg = self.server.aggregate_wire(wire_blobs)
+        keep = policy.downlink_keep_limbs
+        if keep and keep < agg.ct.n_limbs and not self.run_cfg.threshold_mode:
+            agg = secure_agg.ProtectedUpdate(
+                ct=wire_compress.limb_drop(self.ctx, agg.ct, keep),
+                plain=agg.plain)
+        blob_down = wire_format.serialize_update(agg)
+        out = None
+        for client in wire_clients:
+            out = client.receive_global(blob_down, self.ctx, rnd=rnd)
+        return out, len(wire_clients)
 
     def _recover(self, agg):
         if self.run_cfg.threshold_mode:
@@ -199,6 +251,7 @@ class FLTask:
     def add_client(self, client: FLClient):
         """Elastic scale-up: new clients only need (pk, sk) + the public
         mask — no re-keying, no mask re-agreement."""
+        client.ledger = self.ledger
         self.clients.append(client)
 
     def remove_client(self, cid: int):

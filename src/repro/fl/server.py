@@ -5,6 +5,9 @@ mask indices).  Never sees secret keys.  Handles:
   * synchronous weighted aggregation over whatever updates arrived
     (dropout-robust: weights renormalize over the received set — HE needs
     no mask-recovery round, unlike secure aggregation, paper Table 1);
+  * streaming wire ingest (repro.wire.stream): serialized client updates
+    fold chunk-by-chunk into the modular accumulator — O(1) server-side
+    update buffers in the number of clients;
   * async FedBuff-style buffered aggregation with staleness discounting.
 """
 from __future__ import annotations
@@ -14,6 +17,8 @@ import dataclasses
 import numpy as np
 
 from repro.core.secure_agg import ProtectedUpdate, SelectiveHEAggregator
+from repro.wire import budget as wire_budget
+from repro.wire import stream as wire_stream
 
 
 @dataclasses.dataclass
@@ -26,12 +31,15 @@ class ReceivedUpdate:
 
 class FLServer:
     def __init__(self, aggregator: SelectiveHEAggregator,
-                 buffer_size: int = 0, staleness_half_life: float = 4.0):
+                 buffer_size: int = 0, staleness_half_life: float = 4.0,
+                 ledger: wire_budget.BandwidthLedger | None = None):
         self.agg = aggregator
         self.buffer_size = buffer_size            # 0 => synchronous
         self.staleness_half_life = staleness_half_life
+        self.ledger = ledger
         self._buffer: list[ReceivedUpdate] = []
         self.rounds_aggregated = 0
+        self.last_ingest: wire_stream.StreamIngest | None = None
 
     # -- synchronous ---------------------------------------------------------
 
@@ -44,6 +52,33 @@ class FLServer:
                                         [float(w) for w in weights])
         self.rounds_aggregated += 1
         return out
+
+    # -- streaming wire ingest (repro.wire) ----------------------------------
+
+    def aggregate_wire(self, blobs: list[bytes]) -> ProtectedUpdate:
+        """Aggregate serialized client updates without materializing them.
+
+        Pass 1 reads only the fixed-size UPDATE_BEGIN headers to normalize
+        FedAvg weights; pass 2 streams each blob through the chunked modular
+        accumulator (one in-flight ciphertext chunk at any time — the
+        decoded-update memory footprint does not grow with len(blobs)).
+        """
+        if not blobs:
+            raise ValueError("no client updates received this round")
+        metas = [wire_stream.peek_update_meta(b) for b in blobs]
+        weights = np.asarray([m.n_samples for m in metas], dtype=np.float64)
+        weights = weights / weights.sum()
+        ingest = wire_stream.StreamIngest(self.agg.ctx)
+        for blob, meta, w in zip(blobs, metas, weights):
+            ingest.ingest(blob, float(w))
+            if self.ledger is not None:
+                # uplink is accounted where it arrives (the server);
+                # clients account the downlink they receive
+                self.ledger.record_blob(blob, rnd=meta.round, cid=meta.cid,
+                                        direction=wire_budget.UPLINK)
+        self.last_ingest = ingest
+        self.rounds_aggregated += 1
+        return ingest.finalize()
 
     # -- async (FedBuff) -----------------------------------------------------
 

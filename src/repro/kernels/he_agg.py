@@ -66,3 +66,51 @@ def he_weighted_sum(cts, w_mont, q: int, qinv_neg: int, *, block_b: int = 4,
     c, b, n = cts.shape
     call = _build(c, b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
     return call(cts, w_mont)
+
+
+# ---------------------------------------------------------------------------
+# streaming variant: one client at a time into a running accumulator
+# ---------------------------------------------------------------------------
+#
+# The batch kernel above needs all n_clients ciphertexts resident to fuse the
+# client loop; at production scale ("millions of users") the server cannot
+# materialize them.  The streaming kernel processes each arriving ciphertext
+# as  acc' = acc + w (*) ct  — same fused multiply-accumulate, identical
+# modular arithmetic (so the result is bit-for-bit equal to the batch path
+# applied in arrival order), but server memory stays at one accumulator plus
+# one in-flight ciphertext regardless of client count.
+
+
+def _accum_body(ct_ref, acc_ref, w_ref, o_ref, *, q: int, qinv_neg: int):
+    term = _ref.mont_mul(
+        ct_ref[...], jnp.broadcast_to(w_ref[0], ct_ref[...].shape), q, qinv_neg
+    )
+    o_ref[...] = _ref.mod_add(acc_ref[...], term, q)
+
+
+@functools.lru_cache(maxsize=128)
+def _build_accum(b: int, n: int, q: int, qinv_neg: int, block_b: int,
+                 interpret: bool):
+    body = functools.partial(_accum_body, q=q, qinv_neg=qinv_neg)
+
+    def call(ct, acc, w_mont):
+        grid = (pl.cdiv(b, block_b),)
+        spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+        return pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            interpret=interpret,
+        )(ct, acc, w_mont)
+
+    return call
+
+
+def he_weighted_accum(acc, ct, w_mont, q: int, qinv_neg: int, *,
+                      block_b: int = 8, interpret: bool = True):
+    """acc + w (*) ct mod q.  acc, ct: u32[B, N]; w_mont: u32[1]."""
+    b, n = ct.shape
+    call = _build_accum(b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
+    return call(ct, acc, w_mont)

@@ -114,6 +114,32 @@ def weighted_sum(cts, w_mont, ctx):
     return jnp.stack(outs, axis=1).reshape(batch + (l, n))
 
 
+def weighted_accum(acc, ct, w_mont, ctx):
+    """Streaming aggregation step: acc + w (*) ct.
+
+    acc, ct: u32[..., L, N]; w_mont: u32[L] Montgomery scalar weight.
+    One client folded into the running sum — the O(1)-memory server path
+    (repro.wire.stream); bit-identical to weighted_sum applied in order.
+    """
+    batch = ct.shape[:-2]
+    l, n = ct.shape[-2:]
+    ct2 = ct.reshape((-1, l, n))
+    acc2 = jnp.broadcast_to(acc, ct.shape).reshape((-1, l, n))
+    outs = []
+    for i in range(l):
+        lc = ctx.limbs[i]
+        if _BACKEND == "pallas":
+            outs.append(_he_agg.he_weighted_accum(
+                acc2[:, i], ct2[:, i], w_mont[i].reshape((1,)),
+                lc.q, lc.qinv_neg, interpret=_interpret()))
+        else:
+            outs.append(_ref.mul_add(ct2[:, i],
+                                     jnp.broadcast_to(w_mont[i], ct2[:, i].shape),
+                                     acc2[:, i],
+                                     jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg)))
+    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+
+
 # limb-wise helpers that have no kernel (cheap, always ref) -----------------
 
 

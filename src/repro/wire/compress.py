@@ -1,0 +1,135 @@
+"""Bandwidth optimizations for the FL wire (repro.wire).
+
+Three independent knobs, composable via WirePolicy:
+
+  * seed-expanded fresh encryptions (uplink) — a fresh secret-key RLWE
+    ciphertext's c1 component is uniform; sampling it from a public PRNG
+    seed lets the client transmit (seed, c0) instead of (c1, c0), halving
+    uplink ciphertext bytes.  Standard RLWE trick (NewHope/Kyber public
+    matrices, SEAL's seeded ciphertexts); requires the seeded encrypt path
+    in core/ckks/cipher.py and is only available to sk-holding clients
+    (i.e. not in threshold mode, where no party holds the full secret).
+
+  * RNS limb dropping (downlink) — rescale away trailing limbs of the
+    aggregated ciphertext before broadcast: (L-keep)/L fewer bytes at the
+    cost of log2(q_dropped) bits of plaintext precision.
+
+  * plaintext-partition quantization (uplink) — the non-encrypted remainder
+    of a selective-encryption update tolerates fp16 or int8 on the wire
+    (it is averaged, not accumulated over rounds).
+
+See DESIGN.md §6 for the byte-level layout and when each knob is sound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ckks import cipher
+from repro.core.ckks.cipher import Ciphertext
+from repro.core.ckks.params import CkksContext
+
+PLAIN_CODECS = ("f32", "f16", "i8")
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePolicy:
+    """Per-deployment compression configuration for the FL wire."""
+
+    seed_ciphertexts: bool = True     # uplink: ship (seed, c0), not (c0, c1)
+    downlink_keep_limbs: int = 0      # 0 = keep all limbs (lossless)
+    plain_codec: str = "f32"          # f32 | f16 | i8
+
+    def __post_init__(self):
+        assert self.plain_codec in PLAIN_CODECS, self.plain_codec
+        assert self.downlink_keep_limbs >= 0
+
+
+LOSSLESS = WirePolicy(seed_ciphertexts=True, downlink_keep_limbs=0,
+                      plain_codec="f32")
+COMPACT = WirePolicy(seed_ciphertexts=True, downlink_keep_limbs=0,
+                     plain_codec="f16")
+
+
+# ---------------------------------------------------------------------------
+# seed-expanded ciphertexts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SeededCiphertext:
+    """Wire form of a fresh seeded encryption: c0 plus the c1 PRNG seed.
+
+    c0: u32[B, L, N] (NTT domain); expand() regenerates c1 = PRG(seed) and
+    returns the full in-memory Ciphertext.  Chunk b's c1 row derives from
+    fold_in(PRNGKey(seed), chunk_index), so a streaming receiver expands
+    each arriving chunk independently (chunk_offset tracks the index of
+    c0's first row within the original update).
+    """
+
+    c0: Any
+    seed: int
+    scale: float
+    chunk_offset: int = 0
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.c0.shape[0])
+
+    def expand(self, ctx: CkksContext) -> Ciphertext:
+        a = cipher.expand_a_rows(ctx, self.seed, self.chunk_offset,
+                                 self.n_chunks)
+        data = jnp.stack([jnp.asarray(self.c0), a], axis=-2)  # [B, L, 2, N]
+        return Ciphertext(data=data, scale=self.scale)
+
+
+def seed_compress(ct: Ciphertext, seed: int) -> SeededCiphertext:
+    """Strip the deterministic c1 from a seeded encryption for the wire.
+
+    `ct` must have come from cipher.encrypt_coeffs_seeded with this seed;
+    caller-enforced (a mismatch decrypts to noise, caught by tests).
+    """
+    return SeededCiphertext(c0=ct.data[..., 0, :], seed=int(seed),
+                            scale=ct.scale)
+
+
+# ---------------------------------------------------------------------------
+# RNS limb dropping (downlink)
+# ---------------------------------------------------------------------------
+
+
+def limb_drop(ctx: CkksContext, ct: Ciphertext, keep: int) -> Ciphertext:
+    """Rescale the aggregated ciphertext down to `keep` limbs (lossy)."""
+    return cipher.drop_limbs(ctx, ct, keep)
+
+
+# ---------------------------------------------------------------------------
+# plaintext-partition quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_plain(x, codec: str) -> tuple[np.ndarray, float]:
+    """f32[P] -> (wire array, scale).  i8 is symmetric per-tensor."""
+    x = np.asarray(x, dtype=np.float32)
+    if codec == "f32":
+        return x, 1.0
+    if codec == "f16":
+        return x.astype(np.float16), 1.0
+    if codec == "i8":
+        amax = float(np.max(np.abs(x))) if x.size else 0.0
+        scale = amax / 127.0 if amax > 0 else 1.0
+        return np.clip(np.rint(x / scale), -127, 127).astype(np.int8), scale
+    raise ValueError(codec)
+
+
+def dequantize_plain(arr: np.ndarray, codec: str, scale: float) -> np.ndarray:
+    if codec == "f32":
+        return np.asarray(arr, dtype=np.float32)
+    if codec == "f16":
+        return np.asarray(arr, dtype=np.float32)
+    if codec == "i8":
+        return np.asarray(arr, dtype=np.float32) * np.float32(scale)
+    raise ValueError(codec)

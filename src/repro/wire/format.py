@@ -1,0 +1,311 @@
+"""repro.wire binary format: versioned, length-prefixed frames.
+
+Every FL artifact travels as one or more frames:
+
+    [4s magic "RPWR"][u8 version][u8 type][u16 flags][u64 payload_len][payload]
+
+Length-prefixing makes the stream self-delimiting: a receiver can split a
+byte stream into frames without understanding the payloads, and frames nest
+(a PROTECTED_UPDATE payload contains a ciphertext frame and a plain-segment
+frame).  Arrays inside payloads are encoded as
+
+    [u8 dtype_code][u8 ndim][u32 dims...][raw little-endian bytes]
+
+All integers are little-endian.  See DESIGN.md §6 for the full layout and
+the compression flags.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.ckks.cipher import Ciphertext
+from repro.core.packing import MaskPartition
+from repro.wire.compress import SeededCiphertext
+
+MAGIC = b"RPWR"
+VERSION = 1
+
+_HEADER = struct.Struct("<4sBBHQ")
+HEADER_BYTES = _HEADER.size
+
+# frame types
+T_CIPHERTEXT = 0x01
+T_SEEDED_CIPHERTEXT = 0x02
+T_PROTECTED_UPDATE = 0x03
+T_KEYSET = 0x04            # named-array bundle: pk / eval keys / sk shares
+T_MASK_PARTITION = 0x05
+# streaming uplink protocol (repro.wire.stream)
+T_UPDATE_BEGIN = 0x06
+T_CT_CHUNK = 0x07
+T_PLAIN_SEGMENT = 0x08
+T_UPDATE_END = 0x09
+
+_DTYPE_CODES = {
+    np.dtype(np.uint32): 0, np.dtype(np.float32): 1, np.dtype(np.float16): 2,
+    np.dtype(np.int8): 3, np.dtype(np.float64): 4, np.dtype(np.int32): 5,
+    np.dtype(np.uint8): 6, np.dtype(np.int64): 7,
+}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+_PLAIN_CODEC_IDS = {"f32": 0, "f16": 2, "i8": 3}
+_PLAIN_CODEC_NAMES = {v: k for k, v in _PLAIN_CODEC_IDS.items()}
+
+
+class WireError(ValueError):
+    pass
+
+
+class NeedMoreData(WireError):
+    """Raised when a buffer ends mid-frame (incremental readers catch it)."""
+
+
+# ---------------------------------------------------------------------------
+# frame envelope
+# ---------------------------------------------------------------------------
+
+
+def frame(ftype: int, payload: bytes, flags: int = 0) -> bytes:
+    return _HEADER.pack(MAGIC, VERSION, ftype, flags, len(payload)) + payload
+
+
+def parse_frame(buf, off: int = 0) -> tuple[int, int, memoryview, int]:
+    """-> (ftype, flags, payload, next_off).  Raises NeedMoreData/WireError."""
+    view = memoryview(buf)
+    if len(view) - off < HEADER_BYTES:
+        raise NeedMoreData("incomplete frame header")
+    magic, version, ftype, flags, plen = _HEADER.unpack_from(view, off)
+    if magic != MAGIC:
+        raise WireError(f"bad magic {magic!r} at offset {off}")
+    if version != VERSION:
+        raise WireError(f"unsupported wire version {version}")
+    end = off + HEADER_BYTES + plen
+    if len(view) < end:
+        raise NeedMoreData("incomplete frame payload")
+    return ftype, flags, view[off + HEADER_BYTES:end], end
+
+
+def iter_frames(buf) -> Iterator[tuple[int, int, memoryview]]:
+    off = 0
+    n = len(buf)
+    while off < n:
+        ftype, flags, payload, off = parse_frame(buf, off)
+        yield ftype, flags, payload
+
+
+class FrameReader:
+    """Incremental frame splitter: feed() arbitrary byte slices, pop()
+    complete frames.  Holds at most one partial frame of buffered bytes."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> None:
+        self._buf.extend(data)
+
+    def pop(self):
+        """-> (ftype, flags, payload bytes) or None if no complete frame."""
+        try:
+            ftype, flags, payload, end = parse_frame(self._buf, 0)
+        except NeedMoreData:
+            return None
+        out = (ftype, flags, bytes(payload))
+        payload.release()          # else the bytearray can't be resized
+        del self._buf[:end]
+        return out
+
+    def __iter__(self):
+        while True:
+            item = self.pop()
+            if item is None:
+                return
+            yield item
+
+
+# ---------------------------------------------------------------------------
+# array primitive
+# ---------------------------------------------------------------------------
+
+
+def pack_array(a) -> bytes:
+    a = np.ascontiguousarray(np.asarray(a))
+    code = _DTYPE_CODES.get(a.dtype)
+    if code is None:
+        raise WireError(f"unsupported wire dtype {a.dtype}")
+    head = struct.pack("<BB", code, a.ndim)
+    dims = struct.pack(f"<{a.ndim}I", *a.shape) if a.ndim else b""
+    return head + dims + a.tobytes()
+
+
+def unpack_array(payload, off: int = 0) -> tuple[np.ndarray, int]:
+    view = memoryview(payload)
+    code, ndim = struct.unpack_from("<BB", view, off)
+    off += 2
+    shape = struct.unpack_from(f"<{ndim}I", view, off) if ndim else ()
+    off += 4 * ndim
+    dtype = _CODE_DTYPES.get(code)
+    if dtype is None:
+        raise WireError(f"unknown dtype code {code}")
+    count = int(np.prod(shape)) if shape else 1
+    nbytes = count * dtype.itemsize
+    arr = np.frombuffer(view, dtype=dtype, count=count, offset=off)
+    return arr.reshape(shape).copy(), off + nbytes
+
+
+# ---------------------------------------------------------------------------
+# ciphertexts
+# ---------------------------------------------------------------------------
+
+
+def serialize_ciphertext(ct: Ciphertext) -> bytes:
+    payload = struct.pack("<d", float(ct.scale)) + pack_array(
+        np.asarray(ct.data, dtype=np.uint32))
+    return frame(T_CIPHERTEXT, payload)
+
+
+def _parse_ciphertext(payload) -> Ciphertext:
+    (scale,) = struct.unpack_from("<d", payload, 0)
+    data, _ = unpack_array(payload, 8)
+    return Ciphertext(data=data, scale=scale)
+
+
+def serialize_seeded_ciphertext(sct: SeededCiphertext) -> bytes:
+    payload = struct.pack("<dQI", float(sct.scale), int(sct.seed),
+                          int(sct.chunk_offset)) + pack_array(
+        np.asarray(sct.c0, dtype=np.uint32))
+    return frame(T_SEEDED_CIPHERTEXT, payload)
+
+
+def _parse_seeded_ciphertext(payload) -> SeededCiphertext:
+    scale, seed, chunk_offset = struct.unpack_from("<dQI", payload, 0)
+    c0, _ = unpack_array(payload, struct.calcsize("<dQI"))
+    return SeededCiphertext(c0=c0, seed=seed, scale=scale,
+                            chunk_offset=chunk_offset)
+
+
+# ---------------------------------------------------------------------------
+# plain segment (quantized plaintext partition)
+# ---------------------------------------------------------------------------
+
+
+def serialize_plain_segment(arr: np.ndarray, codec: str,
+                            qscale: float) -> bytes:
+    payload = struct.pack("<Bd", _PLAIN_CODEC_IDS[codec], float(qscale)) \
+        + pack_array(arr)
+    return frame(T_PLAIN_SEGMENT, payload)
+
+
+def _parse_plain_segment(payload) -> tuple[np.ndarray, str, float]:
+    codec_id, qscale = struct.unpack_from("<Bd", payload, 0)
+    arr, _ = unpack_array(payload, struct.calcsize("<Bd"))
+    return arr, _PLAIN_CODEC_NAMES[codec_id], qscale
+
+
+# ---------------------------------------------------------------------------
+# protected update (one-shot, non-streaming)
+# ---------------------------------------------------------------------------
+
+
+def serialize_update(upd, *, seeded: SeededCiphertext | None = None,
+                     plain_codec: str = "f32") -> bytes:
+    """ProtectedUpdate -> one nested frame.
+
+    If `seeded` is given it replaces upd.ct on the wire (the caller got it
+    from compress.seed_compress on a seeded encryption of the same values).
+    """
+    from repro.wire import compress as _c
+    ct_frame = (serialize_seeded_ciphertext(seeded) if seeded is not None
+                else serialize_ciphertext(upd.ct))
+    arr, qscale = _c.quantize_plain(np.asarray(upd.plain), plain_codec)
+    return frame(T_PROTECTED_UPDATE,
+                 ct_frame + serialize_plain_segment(arr, plain_codec, qscale))
+
+
+def _parse_update(payload, ctx):
+    from repro.core.secure_agg import ProtectedUpdate
+    from repro.wire import compress as _c
+    ftype, _, ct_payload, off = parse_frame(payload, 0)
+    if ftype == T_CIPHERTEXT:
+        ct = _parse_ciphertext(ct_payload)
+    elif ftype == T_SEEDED_CIPHERTEXT:
+        if ctx is None:
+            raise WireError("seeded ciphertext needs a ctx to expand")
+        ct = _parse_seeded_ciphertext(ct_payload).expand(ctx)
+    else:
+        raise WireError(f"unexpected inner frame type {ftype}")
+    ftype, _, pl_payload, _ = parse_frame(payload, off)
+    if ftype != T_PLAIN_SEGMENT:
+        raise WireError(f"expected plain segment, got type {ftype}")
+    arr, codec, qscale = _parse_plain_segment(pl_payload)
+    return ProtectedUpdate(ct=ct, plain=_c.dequantize_plain(arr, codec, qscale))
+
+
+# ---------------------------------------------------------------------------
+# key bundles + mask partition
+# ---------------------------------------------------------------------------
+
+
+def serialize_keyset(keys: dict) -> bytes:
+    """dict[str, array] -> frame (covers pk, eval keys, threshold shares)."""
+    parts = [struct.pack("<I", len(keys))]
+    for name, arr in sorted(keys.items()):
+        nb = name.encode("utf-8")
+        parts.append(struct.pack("<H", len(nb)) + nb)
+        parts.append(pack_array(np.asarray(arr, dtype=np.uint32)))
+    return frame(T_KEYSET, b"".join(parts))
+
+
+def _parse_keyset(payload) -> dict:
+    (n,) = struct.unpack_from("<I", payload, 0)
+    off = 4
+    out = {}
+    for _ in range(n):
+        (nlen,) = struct.unpack_from("<H", payload, off)
+        off += 2
+        name = bytes(memoryview(payload)[off:off + nlen]).decode("utf-8")
+        off += nlen
+        arr, off = unpack_array(payload, off)
+        out[name] = arr
+    return out
+
+
+def serialize_partition(part: MaskPartition) -> bytes:
+    payload = struct.pack("<QI", part.n_total, part.slots) \
+        + pack_array(part.enc_idx) + pack_array(part.plain_idx)
+    return frame(T_MASK_PARTITION, payload)
+
+
+def _parse_partition(payload) -> MaskPartition:
+    n_total, slots = struct.unpack_from("<QI", payload, 0)
+    off = struct.calcsize("<QI")
+    enc_idx, off = unpack_array(payload, off)
+    plain_idx, _ = unpack_array(payload, off)
+    return MaskPartition(n_total=int(n_total),
+                         enc_idx=enc_idx.astype(np.int32),
+                         plain_idx=plain_idx.astype(np.int32),
+                         slots=int(slots))
+
+
+# ---------------------------------------------------------------------------
+# generic entry point
+# ---------------------------------------------------------------------------
+
+_PARSERS = {
+    T_CIPHERTEXT: lambda p, ctx: _parse_ciphertext(p),
+    T_SEEDED_CIPHERTEXT: lambda p, ctx: _parse_seeded_ciphertext(p),
+    T_PROTECTED_UPDATE: _parse_update,
+    T_KEYSET: lambda p, ctx: _parse_keyset(p),
+    T_MASK_PARTITION: lambda p, ctx: _parse_partition(p),
+}
+
+
+def deserialize(buf, ctx=None, off: int = 0):
+    """One frame -> (artifact, next_off).  `ctx` is needed to expand seeded
+    ciphertexts nested in protected updates."""
+    ftype, _, payload, end = parse_frame(buf, off)
+    parser = _PARSERS.get(ftype)
+    if parser is None:
+        raise WireError(f"no parser for frame type {ftype:#x}")
+    return parser(payload, ctx), end

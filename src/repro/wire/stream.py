@@ -1,0 +1,244 @@
+"""Streaming uplink ingest: fold each arriving ciphertext chunk into the
+running modular accumulator, never materializing all n_clients updates.
+
+Client side — pack_update_frames() emits, per update:
+
+    UPDATE_BEGIN   (cid, n_samples, round, n_chunks, ct_kind)
+    CT_CHUNK * n   (chunk_idx + one-chunk ciphertext/seeded-ciphertext frame)
+    PLAIN_SEGMENT  (quantized plaintext partition)
+    UPDATE_END
+
+Server side — StreamIngest parses frames incrementally (any byte slicing)
+and performs  acc[chunk] = acc[chunk] + w (*) ct_chunk  the moment a chunk
+arrives, via the fused accumulate kernel (kernels/he_agg.he_weighted_accum
+through ops.weighted_accum).  Server-side update buffers are O(1) in the
+number of clients: one accumulator plus at most one in-flight chunk
+(peak_chunk_buffers instruments this; tests assert it).
+
+The modular arithmetic is identical to the batch weighted_sum applied in
+arrival order, so the streamed aggregate is bit-for-bit equal to the
+in-memory path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ckks import encoding
+from repro.core.ckks.cipher import Ciphertext
+from repro.core.ckks.params import CkksContext
+from repro.core.secure_agg import ProtectedUpdate
+from repro.kernels import ops
+from repro.wire import compress as _c
+from repro.wire import format as wf
+
+_BEGIN = struct.Struct("<IIIIB")
+
+CT_FULL = 0
+CT_SEEDED = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateMeta:
+    cid: int
+    n_samples: int
+    round: int
+    n_chunks: int
+    seeded: bool
+
+
+# ---------------------------------------------------------------------------
+# client side: update -> frames
+# ---------------------------------------------------------------------------
+
+
+def pack_update_frames(upd: ProtectedUpdate, *, cid: int, n_samples: int,
+                       rnd: int = 0,
+                       seeded: _c.SeededCiphertext | None = None,
+                       plain_codec: str = "f32") -> bytes:
+    """One client's ProtectedUpdate -> concatenated wire frames.
+
+    If `seeded` is given (from compress.seed_compress on a seeded encryption)
+    each CT_CHUNK carries (seed, c0-chunk) instead of the full chunk.
+    """
+    n_chunks = int(upd.ct.data.shape[0])
+    kind = CT_SEEDED if seeded is not None else CT_FULL
+    out = [wf.frame(wf.T_UPDATE_BEGIN,
+                    _BEGIN.pack(cid, n_samples, rnd, n_chunks, kind))]
+    ct_host = np.asarray(seeded.c0 if seeded is not None else upd.ct.data)
+    for b in range(n_chunks):
+        if seeded is not None:
+            chunk = _c.SeededCiphertext(c0=ct_host[b:b + 1],
+                                        seed=seeded.seed, scale=seeded.scale,
+                                        chunk_offset=b)
+            inner = wf.serialize_seeded_ciphertext(chunk)
+        else:
+            inner = wf.serialize_ciphertext(Ciphertext(
+                data=ct_host[b:b + 1], scale=upd.ct.scale))
+        out.append(wf.frame(wf.T_CT_CHUNK, struct.pack("<I", b) + inner))
+    arr, qscale = _c.quantize_plain(np.asarray(upd.plain), plain_codec)
+    out.append(wf.serialize_plain_segment(arr, plain_codec, qscale))
+    out.append(wf.frame(wf.T_UPDATE_END, b""))
+    return b"".join(out)
+
+
+def peek_update_meta(blob: bytes) -> UpdateMeta:
+    """Read only the UPDATE_BEGIN header (e.g. to compute FedAvg weights
+    before a second ingest pass)."""
+    ftype, _, payload, _ = wf.parse_frame(blob, 0)
+    if ftype != wf.T_UPDATE_BEGIN:
+        raise wf.WireError(f"expected UPDATE_BEGIN, got {ftype:#x}")
+    cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(payload, 0)
+    return UpdateMeta(cid=cid, n_samples=n_samples, round=rnd,
+                      n_chunks=n_chunks, seeded=kind == CT_SEEDED)
+
+
+# ---------------------------------------------------------------------------
+# server side: streaming modular accumulator
+# ---------------------------------------------------------------------------
+
+
+class StreamIngest:
+    """Accumulates arriving client updates chunk-by-chunk.
+
+    Usage:
+        ingest = StreamIngest(ctx)
+        for blob, w in arriving:   # any interleaving of byte slices works
+            ingest.ingest(blob, weight=w)
+        agg = ingest.finalize()    # ProtectedUpdate, scale = in_scale*delta
+    """
+
+    def __init__(self, ctx: CkksContext):
+        self.ctx = ctx
+        self._acc_ct = None            # u32[n_chunks, L, 2, N]
+        self._acc_plain = None         # f32[n_plain]
+        self._in_scale = None
+        self.clients_ingested = 0
+        self.bytes_ingested = 0
+        # O(1)-memory instrumentation: decoded ciphertext chunk buffers
+        # resident beyond the accumulator.  Incremented where a chunk is
+        # decoded, decremented once it has been folded — so a regression
+        # that decodes a whole update (or several) before folding shows up
+        # as peak > 1 on the serialized path.
+        self._resident_chunks = 0
+        self.peak_chunk_buffers = 0
+
+    # -- internals ----------------------------------------------------------
+
+    def _w_mont(self, weight: float):
+        return jnp.asarray(encoding.encode_scalar_residues(float(weight),
+                                                           self.ctx))
+
+    def _note_decoded(self, n: int) -> None:
+        self._resident_chunks += n
+        self.peak_chunk_buffers = max(self.peak_chunk_buffers,
+                                      self._resident_chunks)
+
+    def _fold_chunk(self, chunk_idx: int, data, scale: float, w_mont) -> None:
+        """data: u32[1, L, 2, N] one decoded chunk; folds and discards."""
+        if self._in_scale is None:
+            self._in_scale = float(scale)
+        elif abs(self._in_scale - scale) > 1e-6 * self._in_scale:
+            raise wf.WireError("mixed ciphertext scales in one aggregation")
+        x = jnp.moveaxis(jnp.asarray(data), -3, -2)       # [1, 2, L, N]
+        if self._acc_ct is None:
+            n_limbs, n = data.shape[-3], data.shape[-1]
+            self._n_limbs, self._n = n_limbs, n
+            self._acc_ct = {}
+        acc = self._acc_ct.get(chunk_idx)
+        if acc is None:
+            acc = jnp.zeros((2, self._n_limbs, self._n), dtype=jnp.uint32)
+        out = ops.weighted_accum(acc, x[0], w_mont, self.ctx)
+        self._acc_ct[chunk_idx] = out
+
+    def _fold_plain(self, arr, codec: str, qscale: float,
+                    weight: float) -> None:
+        plain = _c.dequantize_plain(arr, codec, qscale)
+        if self._acc_plain is None:
+            self._acc_plain = np.zeros(plain.shape, dtype=np.float32)
+        self._acc_plain += np.float32(weight) * plain
+
+    # -- public API ---------------------------------------------------------
+
+    def ingest(self, blob: bytes, weight: float) -> UpdateMeta:
+        """Parse one client's frames and fold them into the accumulator.
+
+        Validates the stream against its own UPDATE_BEGIN header: the set
+        of received chunk indices must be exactly {0..n_chunks-1} — a
+        dropped or duplicated CT_CHUNK frame is an error, never a silent
+        partial contribution to the aggregate.
+        """
+        meta = None
+        w_mont = self._w_mont(weight)
+        saw_end = False
+        chunks_seen: set[int] = set()
+        for ftype, _, payload in wf.iter_frames(blob):
+            if ftype == wf.T_UPDATE_BEGIN:
+                cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(
+                    payload, 0)
+                meta = UpdateMeta(cid, n_samples, rnd, n_chunks,
+                                  kind == CT_SEEDED)
+            elif ftype == wf.T_CT_CHUNK:
+                if meta is None:
+                    raise wf.WireError("CT_CHUNK before UPDATE_BEGIN")
+                (chunk_idx,) = struct.unpack_from("<I", payload, 0)
+                if chunk_idx >= meta.n_chunks:
+                    raise wf.WireError(
+                        f"chunk index {chunk_idx} >= declared "
+                        f"n_chunks {meta.n_chunks}")
+                if chunk_idx in chunks_seen:
+                    raise wf.WireError(f"duplicate chunk {chunk_idx}")
+                chunks_seen.add(chunk_idx)
+                inner, _ = wf.deserialize(payload, self.ctx, off=4)
+                if isinstance(inner, _c.SeededCiphertext):
+                    inner = inner.expand(self.ctx)
+                self._note_decoded(+1)
+                self._fold_chunk(chunk_idx, inner.data, inner.scale, w_mont)
+                self._note_decoded(-1)
+            elif ftype == wf.T_PLAIN_SEGMENT:
+                arr, codec, qscale = wf._parse_plain_segment(payload)
+                self._fold_plain(arr, codec, qscale, weight)
+            elif ftype == wf.T_UPDATE_END:
+                saw_end = True
+            else:
+                raise wf.WireError(f"unexpected frame type {ftype:#x} "
+                                   "in update stream")
+        if meta is None or not saw_end:
+            raise wf.WireError("truncated update stream")
+        if len(chunks_seen) != meta.n_chunks:
+            raise wf.WireError(
+                f"update declared {meta.n_chunks} chunks, "
+                f"received {len(chunks_seen)}")
+        self.clients_ingested += 1
+        self.bytes_ingested += len(blob)
+        return meta
+
+    def ingest_update(self, upd: ProtectedUpdate, weight: float) -> None:
+        """In-memory streaming (no serialization): the caller already holds
+        the whole decoded update, so one update's worth of chunk buffers is
+        resident for the duration — still O(1) in the client count."""
+        w_mont = self._w_mont(weight)
+        data = np.asarray(upd.ct.data)
+        n_chunks = data.shape[0]
+        self._note_decoded(+n_chunks)
+        for b in range(n_chunks):
+            self._fold_chunk(b, data[b:b + 1], upd.ct.scale, w_mont)
+        self._note_decoded(-n_chunks)
+        self._fold_plain(np.asarray(upd.plain), "f32", 1.0, weight)
+        self.clients_ingested += 1
+
+    def finalize(self) -> ProtectedUpdate:
+        if self.clients_ingested == 0 or self._acc_ct is None:
+            raise wf.WireError("no updates ingested")
+        n_chunks = max(self._acc_ct) + 1
+        if sorted(self._acc_ct) != list(range(n_chunks)):
+            raise wf.WireError("missing ciphertext chunks at finalize")
+        data = jnp.stack([jnp.moveaxis(self._acc_ct[b], -3, -2)
+                          for b in range(n_chunks)], axis=0)
+        ct = Ciphertext(data=data, scale=self._in_scale * self.ctx.delta)
+        plain = jnp.asarray(self._acc_plain if self._acc_plain is not None
+                            else np.zeros((0,), np.float32))
+        return ProtectedUpdate(ct=ct, plain=plain)

@@ -1,0 +1,39 @@
+"""Fallback for the optional `hypothesis` test dependency.
+
+Test modules do
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp import given, settings, st
+
+so environments without hypothesis still collect and run the whole suite:
+property tests are skipped (not errored), everything else runs normally.
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (property test)")(fn)
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategies:
+    """Accepts any strategy constructor (floats, integers, lists, ...) and
+    returns a placeholder; @given skips the test before these are drawn."""
+
+    def __getattr__(self, _name):
+        def make(*args, **kwargs):
+            return None
+        return make
+
+
+st = _Strategies()

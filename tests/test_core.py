@@ -4,7 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _hyp import given, settings, st
 
 from repro.core import dp, packing, secure_agg, selection, sensitivity
 from repro.core.ckks import cipher

@@ -6,7 +6,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _hyp import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.ckpt import CheckpointManager, latest_step

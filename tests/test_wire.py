@@ -1,0 +1,334 @@
+"""repro.wire: serialization round-trips, seed-expanded uplink compression,
+quantized plain partition, streaming O(1) server ingest, bandwidth ledger,
+and SelectiveHEAggregator.overhead_report coverage."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing
+from repro.core.ckks import cipher, encoding
+from repro.core.ckks import params as ckks_params
+from repro.core.secure_agg import (AggregatorConfig, ProtectedUpdate,
+                                   SelectiveHEAggregator)
+from repro import wire
+from repro.wire import budget as wb
+from repro.wire import compress as wc
+from repro.wire import format as wf
+from repro.wire import stream as ws
+
+CTX = ckks_params.make_test_context(n_poly=256, n_limbs=2, delta_bits=20)
+SK, PK = cipher.keygen(CTX, jax.random.PRNGKey(0))
+
+
+def small_model(seed=1):
+    r = np.random.RandomState(seed)
+    return {"w1": jnp.asarray(r.randn(40, 10), jnp.float32),
+            "b1": jnp.asarray(r.randn(50), jnp.float32)}
+
+
+def make_agg(p=0.4, seed=3):
+    m = small_model()
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(m))
+    sens = np.abs(np.random.RandomState(seed).randn(n))
+    return SelectiveHEAggregator.build(CTX, m, sens,
+                                       AggregatorConfig(p_ratio=p)), m
+
+
+def fresh_ct(b=2, seed=0):
+    v = np.random.RandomState(seed).randn(b, CTX.slots).astype(np.float32)
+    return v, cipher.encrypt_values(CTX, PK, jnp.asarray(v),
+                                    jax.random.PRNGKey(seed + 1))
+
+
+# ---------------------------------------------------------------------------
+# format: lossless round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_ciphertext_roundtrip_bitexact():
+    _, ct = fresh_ct()
+    out, off = wf.deserialize(wf.serialize_ciphertext(ct))
+    assert off == len(wf.serialize_ciphertext(ct))
+    np.testing.assert_array_equal(np.asarray(ct.data, dtype=np.uint32),
+                                  out.data)
+    assert out.scale == ct.scale
+    # decrypts identically to the in-memory path
+    a = cipher.decrypt_values(CTX, SK, ct)
+    b = cipher.decrypt_values(CTX, SK, wire.deserialize(
+        wire.serialize_ciphertext(ct))[0])
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keyset_roundtrip_bitexact():
+    for keys in (PK, SK):
+        out, _ = wf.deserialize(wf.serialize_keyset(keys))
+        assert sorted(out) == sorted(keys)
+        for k in keys:
+            np.testing.assert_array_equal(np.asarray(keys[k]), out[k])
+
+
+def test_partition_roundtrip():
+    agg, _ = make_agg()
+    out, _ = wf.deserialize(wf.serialize_partition(agg.part))
+    assert out.n_total == agg.part.n_total and out.slots == agg.part.slots
+    np.testing.assert_array_equal(out.enc_idx, agg.part.enc_idx)
+    np.testing.assert_array_equal(out.plain_idx, agg.part.plain_idx)
+
+
+def test_protected_update_roundtrip_bitexact():
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(5))
+    out, _ = wf.deserialize(wf.serialize_update(upd), CTX)
+    np.testing.assert_array_equal(np.asarray(upd.ct.data, np.uint32),
+                                  out.ct.data)
+    np.testing.assert_allclose(np.asarray(upd.plain), np.asarray(out.plain),
+                               rtol=0, atol=0)
+    # serialized -> deserialized -> decrypt equals the in-memory path
+    a = agg.client_recover(upd, SK)
+    b = agg.client_recover(out, SK)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bad_magic_and_truncation_rejected():
+    blob = bytearray(wf.serialize_ciphertext(fresh_ct()[1]))
+    with pytest.raises(wf.NeedMoreData):
+        wf.parse_frame(blob[:-1], 0)
+    blob[0] = 0
+    with pytest.raises(wf.WireError):
+        wf.parse_frame(bytes(blob), 0)
+
+
+def test_frame_reader_incremental():
+    _, ct = fresh_ct()
+    blob = wf.serialize_ciphertext(ct) + wf.serialize_keyset(PK)
+    r = wf.FrameReader()
+    got = []
+    for i in range(0, len(blob), 97):       # arbitrary slicing
+        r.feed(blob[i:i + 97])
+        got.extend(r)
+    assert [t for t, _, _ in got] == [wf.T_CIPHERTEXT, wf.T_KEYSET]
+
+
+# ---------------------------------------------------------------------------
+# compress: seeded uplink, limb drop, plain quantization
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_encrypt_decrypts_and_expands_bitexact():
+    v = np.random.RandomState(0).randn(2, CTX.slots).astype(np.float32)
+    coeffs = encoding.encode_jnp(jnp.asarray(v), CTX)
+    ct = cipher.encrypt_coeffs_seeded(CTX, SK, coeffs, jax.random.PRNGKey(1),
+                                      a_seed=77)
+    out = cipher.decrypt_values(CTX, SK, ct)
+    assert float(np.abs(np.asarray(out) - v).max()) < 3e-3
+    sct = wc.seed_compress(ct, 77)
+    np.testing.assert_array_equal(np.asarray(sct.expand(CTX).data),
+                                  np.asarray(ct.data))
+
+
+def test_seeded_uplink_bytes_leq_055x():
+    v = np.random.RandomState(0).randn(3, CTX.slots).astype(np.float32)
+    coeffs = encoding.encode_jnp(jnp.asarray(v), CTX)
+    ct = cipher.encrypt_coeffs_seeded(CTX, SK, coeffs, jax.random.PRNGKey(1),
+                                      a_seed=9)
+    full = wf.serialize_ciphertext(ct)
+    seeded = wf.serialize_seeded_ciphertext(wc.seed_compress(ct, 9))
+    assert len(seeded) <= 0.55 * len(full)
+    # and round-trips through the generic parser
+    out, _ = wf.deserialize(seeded)
+    np.testing.assert_array_equal(np.asarray(out.expand(CTX).data),
+                                  np.asarray(ct.data))
+
+
+def test_seeded_mixes_with_pk_ciphertexts():
+    v = np.random.RandomState(3).randn(1, CTX.slots).astype(np.float32)
+    coeffs = encoding.encode_jnp(jnp.asarray(v), CTX)
+    ct_pk = cipher.encrypt_coeffs(CTX, PK, coeffs, jax.random.PRNGKey(4))
+    ct_sk = cipher.encrypt_coeffs_seeded(CTX, SK, coeffs,
+                                         jax.random.PRNGKey(5), a_seed=11)
+    both = cipher.Ciphertext(
+        data=jnp.stack([ct_pk.data, ct_sk.data]), scale=ct_pk.scale)
+    agg = cipher.weighted_sum(CTX, both, [0.5, 0.5])
+    out = cipher.decrypt_values(CTX, SK, agg)
+    assert float(np.abs(np.asarray(out) - v).max()) < 3e-3
+
+
+def test_limb_drop_halves_bytes_coarse_decrypt():
+    v, ct = fresh_ct(b=1, seed=7)
+    w = cipher.mul_plain_scalar(CTX, ct, 1.0)     # scale delta**2, like agg
+    dropped = wc.limb_drop(CTX, w, 1)
+    assert dropped.n_limbs == 1
+    blob_full = wf.serialize_ciphertext(w)
+    blob_drop = wf.serialize_ciphertext(dropped)
+    assert len(blob_drop) < 0.55 * len(blob_full)
+    out = cipher.decrypt_values_np(CTX, SK, dropped)
+    # scale after the drop is delta**2/q ~ 2**11: coarse but faithful
+    assert float(np.abs(out - v).max()) < 0.3
+
+
+@pytest.mark.parametrize("codec,atol", [("f32", 0.0), ("f16", 2e-3),
+                                        ("i8", 5e-2)])
+def test_plain_quantization_tolerance(codec, atol):
+    x = np.random.RandomState(0).randn(500).astype(np.float32)
+    arr, qscale = wc.quantize_plain(x, codec)
+    out = wc.dequantize_plain(arr, codec, qscale)
+    assert float(np.abs(out - x).max()) <= atol + 1e-9
+    if codec != "f32":
+        assert arr.nbytes < x.nbytes
+
+
+# ---------------------------------------------------------------------------
+# stream: chunked ingest, O(1) buffers, bit parity with batch aggregation
+# ---------------------------------------------------------------------------
+
+
+def _clients_updates(agg, m, n=6):
+    clients = [jax.tree_util.tree_map(lambda x, i=i: x + 0.05 * i, m)
+               for i in range(n)]
+    ups = [agg.client_protect(c, PK, jax.random.PRNGKey(40 + i))
+           for i, c in enumerate(clients)]
+    return clients, ups
+
+
+def test_streaming_bitexact_vs_batch_and_o1_buffers():
+    agg, m = make_agg()
+    clients, ups = _clients_updates(agg, m, n=6)
+    wts = [1.0 / 6] * 6
+    batch = agg.server_aggregate(ups, wts)
+
+    ing = ws.StreamIngest(CTX)
+    for u, w in zip(ups, wts):
+        ing.ingest_update(u, w)
+    out = ing.finalize()
+    np.testing.assert_array_equal(np.asarray(batch.ct.data, np.uint32),
+                                  np.asarray(out.ct.data, np.uint32))
+    assert out.ct.scale == batch.ct.scale
+    np.testing.assert_allclose(np.asarray(batch.plain), np.asarray(out.plain),
+                               atol=1e-5)
+    # server-side update buffers stay O(1) in the client count: the
+    # in-memory path holds at most ONE update's chunks at a time (the
+    # serialized path, asserted elsewhere, holds a single chunk)
+    assert ing.peak_chunk_buffers == agg.part.n_chunks
+    assert ing.clients_ingested == 6
+
+
+def test_serialized_seeded_stream_recovers_fedavg():
+    agg, m = make_agg()
+    n = 5
+    clients = [jax.tree_util.tree_map(lambda x, i=i: x + 0.1 * i, m)
+               for i in range(n)]
+    blobs = []
+    for i, c in enumerate(clients):
+        upd = agg.client_protect_seeded(c, SK, jax.random.PRNGKey(60 + i),
+                                        a_seed=500 + i)
+        sct = wc.seed_compress(upd.ct, 500 + i)
+        blobs.append(ws.pack_update_frames(upd, cid=i, n_samples=4, rnd=0,
+                                           seeded=sct))
+    metas = [ws.peek_update_meta(b) for b in blobs]
+    assert all(mt.seeded and mt.n_chunks == agg.part.n_chunks for mt in metas)
+    ing = ws.StreamIngest(CTX)
+    for b in blobs:
+        ing.ingest(b, 1.0 / n)
+    rec = agg.client_recover_params(ing.finalize(), SK)
+    expect = jax.tree_util.tree_map(lambda *xs: sum(xs) / n, *clients)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree_util.tree_leaves(rec), jax.tree_util.tree_leaves(expect)))
+    assert err < 1e-2
+    assert ing.peak_chunk_buffers == 1
+
+
+def test_stream_rejects_truncated_update():
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    blob = ws.pack_update_frames(upd, cid=0, n_samples=1)
+    # chop off the END frame
+    *frames, _ = list(wf.iter_frames(blob))
+    truncated = blob[:len(blob) - wf.HEADER_BYTES]
+    ing = ws.StreamIngest(CTX)
+    with pytest.raises(wf.WireError):
+        ing.ingest(truncated, 1.0)
+
+
+def test_stream_rejects_missing_or_duplicate_chunk():
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    assert agg.part.n_chunks >= 2
+    blob = ws.pack_update_frames(upd, cid=0, n_samples=1)
+    frames = []
+    off = 0
+    while off < len(blob):
+        _, _, _, end = wf.parse_frame(blob, off)
+        frames.append(blob[off:end])
+        off = end
+    # frames: BEGIN, CT_CHUNK * n, PLAIN, END — drop one chunk frame
+    dropped = b"".join(frames[:1] + frames[2:])
+    with pytest.raises(wf.WireError, match="chunks"):
+        ws.StreamIngest(CTX).ingest(dropped, 1.0)
+    # duplicate a chunk frame
+    duped = b"".join(frames[:2] + [frames[1]] + frames[2:])
+    with pytest.raises(wf.WireError, match="duplicate"):
+        ws.StreamIngest(CTX).ingest(duped, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# budget ledger
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_record_blob_classes_and_totals():
+    agg, m = make_agg()
+    upd = agg.client_protect_seeded(m, SK, jax.random.PRNGKey(2), a_seed=3)
+    sct = wc.seed_compress(upd.ct, 3)
+    blob = ws.pack_update_frames(upd, cid=7, n_samples=2, rnd=1, seeded=sct,
+                                 plain_codec="f16")
+    led = wb.BandwidthLedger()
+    total = led.record_blob(blob, rnd=1, cid=7, direction=wb.UPLINK)
+    assert total == len(blob)
+    assert led.total(wb.UPLINK, 1) == len(blob)
+    s = led.round_summary(1)
+    assert s["uplink_bytes"] == len(blob) and s["downlink_bytes"] == 0
+    assert s["by_kind"]["up/seeded_ciphertext"] > 0
+    assert s["by_kind"]["up/plain"] > 0
+    comp = led.compression_summary(CTX, agg.part, 1)
+    assert comp["compression_ratio"] > 1.0
+    assert comp["measured_uplink_bytes"] == len(blob)
+
+
+# ---------------------------------------------------------------------------
+# overhead_report (satellite coverage)
+# ---------------------------------------------------------------------------
+
+
+def test_overhead_report_consistency():
+    agg, _ = make_agg(p=0.4)
+    rep = agg.overhead_report()
+    part = agg.part
+    assert rep["n_total"] == part.n_total
+    assert rep["n_enc"] == part.n_enc
+    assert rep["n_ciphertexts"] == part.n_chunks
+    assert rep["ratio"] == pytest.approx(part.n_enc / part.n_total)
+    assert rep["bytes_total"] == rep["bytes_encrypted"] + rep["bytes_plain"]
+    assert rep["bytes_plain"] == 4 * part.n_plain
+    assert rep["bytes_all_plain"] == 4 * part.n_total
+    assert rep["comm_ratio"] == pytest.approx(
+        rep["bytes_total"] / rep["bytes_all_plain"])
+
+
+def test_overhead_report_monotone_in_p():
+    reps = [make_agg(p=p)[0].overhead_report() for p in (0.1, 0.5, 1.0)]
+    assert reps[0]["n_enc"] <= reps[1]["n_enc"] <= reps[2]["n_enc"]
+    assert reps[0]["bytes_total"] <= reps[1]["bytes_total"]
+    # all-encrypted blows up communication; selective shrinks it
+    assert reps[2]["comm_ratio"] > reps[0]["comm_ratio"]
+
+
+def test_overhead_report_vs_measured_wire():
+    """The report's byte model matches the measured raw-u32 wire within
+    framing overhead for the uncompressed path."""
+    agg, m = make_agg(p=0.4)
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(3))
+    blob = wf.serialize_update(upd)
+    est = CTX.encrypted_bytes(agg.part.n_enc, packed=False) \
+        + CTX.plaintext_bytes(agg.part.n_plain)
+    assert abs(len(blob) - est) < 256   # headers only
