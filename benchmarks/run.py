@@ -99,6 +99,117 @@ def bench_kernels():
     _rows("Kernel microbenchmarks (ref backend, CPU)", rows)
 
 
+def bench_he():
+    """Limb-fused HE engine vs the per-limb dispatch baseline.
+
+    The baseline reproduces the seed engine's execution model — an eager
+    Python loop dispatching one single-limb kernel per RNS limb — against
+    the fused engine's one-jitted-graph-per-op over u32[..., L, N].
+    Emits BENCH_he.json (repo root) for the bench trajectory.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.ckks import cipher, encoding
+    from repro.core.ckks import params as ckks_params
+    from repro.kernels import ops, ref
+
+    n_poly, n_limbs, n_clients, batch = 8192, 2, 8, 8
+    ctx = ckks_params.make_context(n_poly=n_poly, n_limbs=n_limbs,
+                                   delta_bits=26)
+    t = ctx.tables
+    rng = np.random.RandomState(0)
+
+    def rand_limbed(shape):
+        return jnp.asarray(ref.rand_limbed_np(rng, ctx, shape))
+
+    def timeit(fn, *args, reps=5):
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+            else x, out)
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+            else x, out)
+        return (time.time() - t0) / reps
+
+    # -- per-limb baselines: eager loop, one single-limb ref op per limb ----
+    def per_limb_ntt_fwd(x):
+        return jnp.stack(
+            [ref.ntt_fwd(x[..., i, :], jnp.asarray(lc.psi_rev_mont),
+                         np.uint32(lc.q), np.uint32(lc.qinv_neg))
+             for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+    def per_limb_ntt_inv(x):
+        return jnp.stack(
+            [ref.ntt_inv(x[..., i, :], jnp.asarray(lc.psi_inv_rev_mont),
+                         np.asarray(lc.n_inv_mont), np.uint32(lc.q),
+                         np.uint32(lc.qinv_neg))
+             for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+    def per_limb_weighted_sum(cts, w):
+        return jnp.stack(
+            [ref.he_weighted_sum(cts[..., i, :],
+                                 w[:, i].reshape((n_clients, 1, 1)),
+                                 np.uint32(lc.q), np.uint32(lc.qinv_neg))
+             for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+    # -- fused engine: one jitted graph per op ------------------------------
+    token = ops.backend_token()
+    fused_ntt_fwd = jax.jit(lambda x: ops.ntt_fwd(x, ctx))
+    fused_ntt_inv = jax.jit(lambda x: ops.ntt_inv(x, ctx))
+    fused_weighted_sum = jax.jit(lambda c, w: ops.weighted_sum(c, w, ctx))
+
+    x = rand_limbed((batch,))
+    cts = rand_limbed((n_clients, batch))
+    w_mont = jnp.asarray(encoding.encode_weights_mont(
+        [1.0 / n_clients] * n_clients, ctx))
+
+    rows, results = [], {"n_poly": n_poly, "n_limbs": n_limbs,
+                         "n_clients": n_clients, "batch": batch,
+                         "backend": ops.get_backend(), "token": str(token),
+                         "ops": {}}
+    cases = [
+        ("ntt_fwd", lambda: timeit(per_limb_ntt_fwd, x),
+         lambda: timeit(fused_ntt_fwd, x)),
+        ("ntt_inv", lambda: timeit(per_limb_ntt_inv, x),
+         lambda: timeit(fused_ntt_inv, x)),
+        ("weighted_sum", lambda: timeit(per_limb_weighted_sum, cts, w_mont),
+         lambda: timeit(fused_weighted_sum, cts, w_mont)),
+    ]
+    for name, base_fn, fused_fn in cases:
+        base_s, fused_s = base_fn(), fused_fn()
+        rows.append({"op": name, "per_limb_ms": base_s * 1e3,
+                     "fused_ms": fused_s * 1e3,
+                     "speedup": base_s / fused_s})
+        results["ops"][name] = {"per_limb_ms": base_s * 1e3,
+                                "fused_ms": fused_s * 1e3,
+                                "speedup": base_s / fused_s}
+
+    # -- end-to-end encrypt/decrypt (fused jitted graphs) -------------------
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    vals = jnp.asarray(rng.randn(2, ctx.slots).astype(np.float32))
+    coeffs = encoding.encode_jnp(vals, ctx)
+    key = jax.random.PRNGKey(1)
+    enc_s = timeit(lambda: cipher.encrypt_coeffs(ctx, pk, coeffs, key).data)
+    ct = cipher.encrypt_coeffs(ctx, pk, coeffs, key)
+    dec_s = timeit(lambda: cipher.decrypt_to_coeffs(ctx, sk, ct))
+    for name, s in (("encrypt", enc_s), ("decrypt", dec_s)):
+        rows.append({"op": name, "per_limb_ms": float("nan"),
+                     "fused_ms": s * 1e3, "speedup": float("nan")})
+        results["ops"][name] = {"fused_ms": s * 1e3}
+
+    out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_he.json")
+    with open(os.path.abspath(out_path), "w") as f:
+        json.dump(results, f, indent=2)
+    _rows(f"HE engine: per-limb baseline vs limb-fused "
+          f"(N={n_poly}, L={n_limbs}, C={n_clients}, backend="
+          f"{ops.get_backend()}; BENCH_he.json written)", rows)
+
+
 def bench_wire():
     """Measured bytes-on-wire (repro.wire): serialized uplink per policy,
     streaming-ingest stats, and recovery error — real payloads, not the
@@ -198,6 +309,7 @@ ALL = {
     "fig14a": bench_fig14a,
     "dp": bench_dp,
     "kernels": bench_kernels,
+    "he": bench_he,
     "wire": bench_wire,
     "roofline": bench_roofline,
 }

@@ -1,7 +1,11 @@
 """RNS-CKKS cipher: keygen / encrypt / decrypt / homomorphic ops.
 
-Everything here is jittable (jax.random + the u32 kernel ops); ciphertexts are
-u32[..., L, 2, N] tensors in bit-reversed NTT domain, wrapped with their scale.
+Built on the limb-fused execution engine (kernels/ops.py): every sampling
+helper vectorizes the RNS limb axis via the stacked constant tables on
+`CkksContext.tables`, and keygen / encrypt / decrypt / weighted_sum each run
+as ONE jitted graph (static-keyed on (ctx, ops.backend_token()) so backend
+registry changes retrace).  Ciphertexts are u32[..., L, 2, N] tensors in
+bit-reversed NTT domain, wrapped with their scale.
 
 Scale discipline (depth-1, the paper's setting):
   fresh ct: scale = delta
@@ -12,6 +16,7 @@ Scale discipline (depth-1, the paper's setting):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -49,41 +54,39 @@ class Ciphertext:
 # ---------------------------------------------------------------------------
 
 def _ternary_residues(key, shape, ctx: CkksContext):
-    """Uniform ternary {-1,0,1} -> per-limb residues u32[..., L, N]."""
-    t = jax.random.randint(key, shape, 0, 3)  # 0,1,2 ~ {-1,0,1}
-    out = []
-    for q in ctx.primes:
-        r = jnp.where(t == 0, np.uint32(q - 1),
-                      jnp.where(t == 1, np.uint32(0), np.uint32(1)))
-        out.append(r.astype(jnp.uint32))
-    return jnp.stack(out, axis=-2)  # [..., L, N]
+    """Uniform ternary {-1,0,1} -> per-limb residues u32[..., L, N].
+
+    One draw of ternary symbols, broadcast against the u32[L] prime table —
+    the limb axis is never looped."""
+    t = jax.random.randint(key, shape, 0, 3)[..., None, :]  # 0,1,2 ~ {-1,0,1}
+    qm1 = (ctx.tables.qs - np.uint32(1))[:, None]           # [L, 1]
+    r = jnp.where(t == 0, qm1,
+                  jnp.where(t == 1, np.uint32(0), np.uint32(1)))
+    return r.astype(jnp.uint32)  # [..., L, N]
 
 
 def _gaussian_residues(key, shape, ctx: CkksContext, sigma: float | None = None):
     sigma = float(sigma if sigma is not None else ctx.error_sigma)
     e = jnp.rint(sigma * jax.random.normal(key, shape)).astype(jnp.int32)
-    out = [_ref.mod_reduce_centered(e, np.uint32(q)) for q in ctx.primes]
-    return jnp.stack(out, axis=-2)
+    return _ref.mod_reduce_centered(e[..., None, :],
+                                    ctx.tables.qs[:, None])  # [..., L, N]
 
 
 def _uniform_residues(key, shape, ctx: CkksContext):
-    outs = []
-    for i, q in enumerate(ctx.primes):
-        k = jax.random.fold_in(key, i)
-        outs.append(jax.random.randint(k, shape, 0, q, dtype=jnp.uint32))
-    return jnp.stack(outs, axis=-2)
+    """Uniform residues u32[..., L, N]: one randint draw with the per-limb
+    prime table as broadcast maxval."""
+    full = shape[:-1] + (ctx.n_limbs, shape[-1])
+    maxval = jnp.asarray(ctx.tables.qs, dtype=jnp.uint32)[:, None]
+    return jax.random.randint(key, full, jnp.uint32(0), maxval,
+                              dtype=jnp.uint32)
 
 
 # ---------------------------------------------------------------------------
 # key generation
 # ---------------------------------------------------------------------------
 
-def keygen(ctx: CkksContext, key) -> tuple[dict, dict]:
-    """Returns (sk, pk).
-
-    sk = {"s_mont": u32[L, N]}           NTT-domain Montgomery secret
-    pk = {"pk0_mont", "pk1_mont": u32[L, N]}  b = -(a s) + e, a
-    """
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _keygen_graph(ctx: CkksContext, token, key):
     k_s, k_a, k_e = jax.random.split(key, 3)
     n = ctx.n_poly
     s = ops.ntt_fwd(_ternary_residues(k_s, (n,), ctx), ctx)       # [L, N]
@@ -92,20 +95,25 @@ def keygen(ctx: CkksContext, key) -> tuple[dict, dict]:
     e = ops.ntt_fwd(_gaussian_residues(k_e, (n,), ctx), ctx)
     a_s = ops.mont_mul(a, s_mont, ctx)
     pk0 = ops.mod_add(ops.mod_neg(a_s, ctx), e, ctx)
-    return (
-        {"s_mont": s_mont},
-        {"pk0_mont": ops.to_mont(pk0, ctx), "pk1_mont": ops.to_mont(a, ctx)},
-    )
+    return s_mont, ops.to_mont(pk0, ctx), ops.to_mont(a, ctx)
+
+
+def keygen(ctx: CkksContext, key) -> tuple[dict, dict]:
+    """Returns (sk, pk) — one jitted graph.
+
+    sk = {"s_mont": u32[L, N]}           NTT-domain Montgomery secret
+    pk = {"pk0_mont", "pk1_mont": u32[L, N]}  b = -(a s) + e, a
+    """
+    s_mont, pk0_mont, pk1_mont = _keygen_graph(ctx, ops.backend_token(), key)
+    return {"s_mont": s_mont}, {"pk0_mont": pk0_mont, "pk1_mont": pk1_mont}
 
 
 # ---------------------------------------------------------------------------
 # encrypt / decrypt
 # ---------------------------------------------------------------------------
 
-def encrypt_coeffs(ctx: CkksContext, pk: dict, m_coeff, key,
-                   scale: float | None = None) -> Ciphertext:
-    """m_coeff: u32[B, L, N] coefficient-domain residues (from encode)."""
-    scale = float(scale if scale is not None else ctx.delta)
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _encrypt_graph(ctx: CkksContext, token, pk0_mont, pk1_mont, m_coeff, key):
     b = m_coeff.shape[0]
     n = ctx.n_poly
     k_u, k_e0, k_e1 = jax.random.split(key, 3)
@@ -113,9 +121,19 @@ def encrypt_coeffs(ctx: CkksContext, pk: dict, m_coeff, key,
     u = ops.ntt_fwd(_ternary_residues(k_u, (b, n), ctx), ctx)
     e0 = ops.ntt_fwd(_gaussian_residues(k_e0, (b, n), ctx), ctx)
     e1 = ops.ntt_fwd(_gaussian_residues(k_e1, (b, n), ctx), ctx)
-    c0 = ops.mul_add(u, pk["pk0_mont"][None], ops.mod_add(e0, m, ctx), ctx)
-    c1 = ops.mul_add(u, pk["pk1_mont"][None], e1, ctx)
-    return Ciphertext(data=jnp.stack([c0, c1], axis=-2), scale=scale)
+    c0 = ops.mul_add(u, pk0_mont[None], ops.mod_add(e0, m, ctx), ctx)
+    c1 = ops.mul_add(u, pk1_mont[None], e1, ctx)
+    return jnp.stack([c0, c1], axis=-2)
+
+
+def encrypt_coeffs(ctx: CkksContext, pk: dict, m_coeff, key,
+                   scale: float | None = None) -> Ciphertext:
+    """m_coeff: u32[B, L, N] coefficient-domain residues (from encode).
+    Sampling, NTTs and the two mul_adds run as one jitted graph."""
+    scale = float(scale if scale is not None else ctx.delta)
+    data = _encrypt_graph(ctx, ops.backend_token(), pk["pk0_mont"],
+                          pk["pk1_mont"], m_coeff, key)
+    return Ciphertext(data=data, scale=scale)
 
 
 def encrypt_values(ctx: CkksContext, pk: dict, values, key) -> Ciphertext:
@@ -133,9 +151,11 @@ def expand_a_rows(ctx: CkksContext, a_seed: int, start: int, count: int):
     convention, matching keygen's treatment of `a`).
     """
     base = jax.random.PRNGKey(int(a_seed))
-    rows = [_uniform_residues(jax.random.fold_in(base, i), (ctx.n_poly,), ctx)
-            for i in range(start, start + count)]
-    return jnp.stack(rows, axis=0)  # [count, L, N]
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(start, start + count))
+    return jax.vmap(
+        lambda k: _uniform_residues(k, (ctx.n_poly,), ctx))(keys)
+    # [count, L, N]
 
 
 def expand_a(ctx: CkksContext, a_seed: int, batch: int):
@@ -154,14 +174,26 @@ def encrypt_coeffs_seeded(ctx: CkksContext, sk: dict, m_coeff, key,
     `a_seed` must be unique per (client, round); reuse leaks m1 - m2.
     """
     scale = float(scale if scale is not None else ctx.delta)
+    # PRNGKey is built host-side: a_seed is 64-bit on the wire, and the key
+    # must match the server-side expand_a_rows stream exactly
+    a_base = jax.random.PRNGKey(int(a_seed))
+    data = _encrypt_seeded_graph(ctx, ops.backend_token(), sk["s_mont"],
+                                 m_coeff, key, a_base)
+    return Ciphertext(data=data, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _encrypt_seeded_graph(ctx: CkksContext, token, s_mont, m_coeff, key,
+                          a_base):
     b = m_coeff.shape[0]
     n = ctx.n_poly
     m = ops.ntt_fwd(m_coeff, ctx)
-    a = expand_a(ctx, a_seed, b)                                  # [B, L, N]
+    keys = jax.vmap(lambda i: jax.random.fold_in(a_base, i))(jnp.arange(b))
+    a = jax.vmap(lambda k: _uniform_residues(k, (n,), ctx))(keys)  # [B, L, N]
     e = ops.ntt_fwd(_gaussian_residues(key, (b, n), ctx), ctx)
-    a_s = ops.mont_mul(a, sk["s_mont"][None], ctx)
+    a_s = ops.mont_mul(a, s_mont[None], ctx)
     c0 = ops.mod_add(ops.mod_neg(a_s, ctx), ops.mod_add(e, m, ctx), ctx)
-    return Ciphertext(data=jnp.stack([c0, a], axis=-2), scale=scale)
+    return jnp.stack([c0, a], axis=-2)
 
 
 def drop_limbs(ctx: CkksContext, ct: Ciphertext, keep: int) -> Ciphertext:
@@ -178,12 +210,19 @@ def drop_limbs(ctx: CkksContext, ct: Ciphertext, keep: int) -> Ciphertext:
     return ct
 
 
-def decrypt_to_coeffs(ctx: CkksContext, sk: dict, ct: Ciphertext):
-    """-> u32[B, L, N] coefficient-domain residues of m + noise.
-    Handles rescaled ciphertexts (fewer limbs than the context)."""
-    s = sk["s_mont"][: ct.n_limbs]
-    phase = ops.mul_add(ct.c1, s[None], ct.c0, ctx)
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _decrypt_graph(ctx: CkksContext, token, s_mont, data):
+    c0 = data[..., 0, :]
+    c1 = data[..., 1, :]
+    phase = ops.mul_add(c1, s_mont[None], c0, ctx)
     return ops.ntt_inv(phase, ctx)
+
+
+def decrypt_to_coeffs(ctx: CkksContext, sk: dict, ct: Ciphertext):
+    """-> u32[B, L, N] coefficient-domain residues of m + noise — one jitted
+    graph.  Handles rescaled ciphertexts (fewer limbs than the context)."""
+    s = sk["s_mont"][: ct.n_limbs]
+    return _decrypt_graph(ctx, ops.backend_token(), s, ct.data)
 
 
 def decrypt_values(ctx: CkksContext, sk: dict, ct: Ciphertext):
@@ -231,62 +270,64 @@ def mul_plain_vec(ctx: CkksContext, ct: Ciphertext, pt_mont) -> Ciphertext:
     return Ciphertext(data=_limbs_to_minus3(out), scale=ct.scale * ctx.delta)
 
 
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _weighted_sum_graph(ctx: CkksContext, token, data, w_mont):
+    # fold the (c0,c1) component axis into batch: [C, ..., L, 2, N] ->
+    # [C, ..., 2, L, N] so the kernel sees limbs at axis -2.
+    x = jnp.moveaxis(data, -3, -2)
+    out = ops.weighted_sum(x, w_mont, ctx)
+    return jnp.moveaxis(out, -2, -3)
+
+
 def weighted_sum(ctx: CkksContext, cts: Ciphertext, weights) -> Ciphertext:
     """Fused FedAvg aggregation: sum_i w_i * ct_i over the leading axis.
 
     cts.data: u32[C, ..., L, 2, N]; weights: python floats len C.
-    Uses the fused kernel (single pass over client ciphertexts).
+    One jitted graph over the fused kernel (single pass over client
+    ciphertexts, all limbs in one launch).
     """
-    w_mont = np.stack([encoding.encode_scalar_residues(float(w), ctx)
-                       for w in weights], axis=0)     # [C, L]
-    # fold the (c0,c1) component axis into batch: [C, ..., L, 2, N] ->
-    # [C, ..., 2, L, N] so the kernel sees limbs at axis -2.
-    x = jnp.moveaxis(cts.data, -3, -2)
-    out = ops.weighted_sum(x, jnp.asarray(w_mont), ctx)
-    return Ciphertext(data=jnp.moveaxis(out, -2, -3),
-                      scale=cts.scale * ctx.delta)
+    w_mont = encoding.encode_weights_mont(weights, ctx)          # [C, L]
+    data = _weighted_sum_graph(ctx, ops.backend_token(), cts.data,
+                               jnp.asarray(w_mont))
+    return Ciphertext(data=data, scale=cts.scale * ctx.delta)
 
 
 def rescale(ctx: CkksContext, ct: Ciphertext) -> Ciphertext:
     """Drop the last RNS limb: c'_j = (c_j - lift(c_last)) * q_last^{-1} mod q_j.
 
     Needs a domain switch for the last limb (iNTT under q_last, re-NTT under
-    each remaining q_j) because NTT evaluation points differ per prime.
+    each remaining q_j) because NTT evaluation points differ per prime.  The
+    remaining-limb axis is vectorized via the fused engine — the per-limb
+    lift constants are u32[L-1] host tables broadcast into the graph.
     """
     l = ct.n_limbs
     assert l >= 2
     q_last = ctx.primes[l - 1]
     lc_last = ctx.limbs[l - 1]
+    t = ctx.tables.take(l - 1)
     # last limb to coefficient domain (exact)
     c_last_ntt = ct.data[..., l - 1, :, :]
     flat = c_last_ntt.reshape((-1, ctx.n_poly))
     c_last = _ref.ntt_inv(flat, jnp.asarray(lc_last.psi_inv_rev_mont),
                           np.asarray(lc_last.n_inv_mont),
                           np.uint32(q_last), np.uint32(lc_last.qinv_neg))
-    new_limbs = []
-    for j in range(l - 1):
-        qj = ctx.primes[j]
-        lcj = ctx.limbs[j]
-        # centered lift of v in [0, q_last) into Z_qj: primes are within 2x of
-        # each other, so v mod qj needs at most one conditional subtract.
-        half = np.uint32(q_last // 2)
-        if q_last > qj:
-            v_mod = jnp.where(c_last >= np.uint32(qj), c_last - np.uint32(qj),
-                              c_last)
-        else:
-            v_mod = c_last
-        lifted = jnp.where(
-            c_last > half,
-            _ref.mod_sub(v_mod, np.uint32(q_last % qj), np.uint32(qj)),
-            v_mod,
-        )
-        lifted_ntt = _ref.ntt_fwd(lifted, jnp.asarray(lcj.psi_rev_mont),
-                                  np.uint32(qj), np.uint32(lcj.qinv_neg))
-        cj = ct.data[..., j, :, :].reshape((-1, ctx.n_poly))
-        diff = _ref.mod_sub(cj, lifted_ntt, np.uint32(qj))
-        inv_mont = np.uint32(pow(q_last, -1, qj) * (1 << 32) % qj)
-        outj = _ref.mont_mul(diff, jnp.broadcast_to(inv_mont, diff.shape),
-                             np.uint32(qj), np.uint32(lcj.qinv_neg))
-        new_limbs.append(outj.reshape(ct.data[..., j, :, :].shape))
-    data = jnp.stack(new_limbs, axis=-3)
+    # centered lift of v in [0, q_last) into each Z_qj: primes are within 2x
+    # of each other, so v mod qj needs at most one conditional subtract.
+    qjs = t.qs[:, None]                                         # [L-1, 1]
+    v = c_last[..., None, :]                                    # [B, 1, N]
+    need_sub = (np.uint32(q_last) > t.qs)[:, None]              # [L-1, 1]
+    v_mod = jnp.where(need_sub & (v >= qjs), v - qjs, v)
+    half = np.uint32(q_last // 2)
+    q_last_mod = (np.uint32(q_last) % t.qs)[:, None]            # [L-1, 1]
+    lifted = jnp.where(jnp.broadcast_to(v > half, v_mod.shape),
+                       ops.mod_sub(v_mod, q_last_mod, ctx), v_mod)
+    lifted_ntt = ops.ntt_fwd(lifted, ctx)                       # [B, L-1, N]
+    cj = jnp.moveaxis(ct.data[..., : l - 1, :, :], -3, -2)      # [..., 2, L-1, N]
+    cj = cj.reshape((-1, l - 1, ctx.n_poly))
+    diff = ops.mod_sub(cj, lifted_ntt, ctx)
+    inv_mont = np.asarray([pow(q_last, -1, int(qj)) * (1 << 32) % int(qj)
+                           for qj in t.qs], dtype=np.uint32)[:, None]
+    out = ops.mont_mul(diff, inv_mont, ctx)
+    data = jnp.moveaxis(
+        out.reshape(ct.data.shape[:-3] + (2, l - 1, ctx.n_poly)), -2, -3)
     return Ciphertext(data=data, scale=ct.scale / q_last)

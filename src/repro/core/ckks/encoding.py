@@ -56,10 +56,8 @@ def encode_np(values: np.ndarray, ctx: CkksContext, delta: float | None = None
     buf[:, idx] = values.astype(np.float64)
     c = (2.0 / n) * np.real(np.fft.fft(buf, axis=-1))[:, :n]
     c_int = np.rint(c * delta).astype(np.int64)
-    out = np.empty((b, ctx.n_limbs, n), dtype=np.uint32)
-    for li, q in enumerate(ctx.primes):
-        out[:, li, :] = (c_int % q).astype(np.uint32)
-    return out
+    qs = np.asarray(ctx.primes, dtype=np.int64)[None, :, None]
+    return (c_int[:, None, :] % qs).astype(np.uint32)  # [B, L, N]
 
 
 def decode_np(residues: np.ndarray, ctx: CkksContext, scale: float) -> np.ndarray:
@@ -119,8 +117,9 @@ def encode_jnp(values, ctx: CkksContext, delta: float | None = None):
     buf = buf.at[:, idx].set(values.astype(jnp.complex64))
     c = (2.0 / n) * jnp.real(jnp.fft.fft(buf, axis=-1))[:, :n]
     c_int = jnp.rint(c * delta).astype(jnp.int32)
-    outs = [_ref.mod_reduce_centered(c_int, np.uint32(q)) for q in ctx.primes]
-    return jnp.stack(outs, axis=1)
+    # limb axis broadcast against the stacked prime table — no per-limb loop
+    return _ref.mod_reduce_centered(c_int[:, None, :],
+                                    ctx.tables.qs[:, None])  # [B, L, N]
 
 
 def decode_jnp(residues, ctx: CkksContext, scale: float):
@@ -164,12 +163,22 @@ def encode_scalar_residues(w: float, ctx: CkksContext, delta: float | None = Non
                            mont: bool = True) -> np.ndarray:
     """Scalar plaintext (constant poly) per-limb residues, optionally in
     Montgomery form — the FedAvg weight encoding. Returns u32[L]."""
+    return encode_weights_mont([w], ctx, delta=delta, mont=mont)[0]
+
+
+def encode_weights_mont(weights, ctx: CkksContext, delta: float | None = None,
+                        mont: bool = True) -> np.ndarray:
+    """Batch of scalar weights -> stacked per-limb residues u32[C, L].
+
+    Vectorized over both axes (exact: w*delta < 2**31 and q < 2**30, so the
+    int64 intermediates r * 2**32 < 2**62 never overflow); this is the weight
+    table handed to the fused weighted_sum/weighted_accum kernels.
+    """
     delta = float(delta if delta is not None else ctx.delta)
-    w_int = int(round(w * delta))
-    out = np.empty(ctx.n_limbs, dtype=np.uint32)
-    for li, q in enumerate(ctx.primes):
-        r = w_int % q
-        if mont:
-            r = r * (1 << 32) % q
-        out[li] = r
-    return out
+    w_int = np.asarray([int(round(float(w) * delta)) for w in weights],
+                       dtype=np.int64)[:, None]                  # [C, 1]
+    qs = np.asarray(ctx.primes, dtype=np.int64)[None, :]         # [1, L]
+    r = w_int % qs
+    if mont:
+        r = (r << 32) % qs
+    return r.astype(np.uint32)

@@ -154,6 +154,61 @@ def make_limb_context(q: int, n_poly: int) -> LimbContext:
 
 
 # ---------------------------------------------------------------------------
+# stacked limb tables (the limb-fused execution engine's constant layout)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LimbTables:
+    """Per-limb constants stacked along a leading limb axis.
+
+    This is the layout the limb-fused kernels consume: RNS limbs are a
+    grid/batch dimension, so every constant a kernel needs is a u32[L] (or
+    u32[L, N] for twiddles) table indexed by the limb coordinate instead of a
+    Python-level loop over `CkksContext.limbs`.  All arrays are host numpy;
+    jitted code embeds the (sliced) tables as constants.
+    """
+
+    qs: np.ndarray                # u32[L] limb primes
+    qinv_negs: np.ndarray         # u32[L] -q^{-1} mod 2**32
+    r2s: np.ndarray               # u32[L] R^2 mod q
+    one_monts: np.ndarray         # u32[L] R mod q
+    n_inv_monts: np.ndarray       # u32[L] N^{-1} * R mod q
+    psi_rev_mont: np.ndarray      # u32[L, N] forward twiddles (Montgomery)
+    psi_inv_rev_mont: np.ndarray  # u32[L, N] inverse twiddles (Montgomery)
+
+    @property
+    def n_limbs(self) -> int:
+        return int(self.qs.shape[0])
+
+    def take(self, l: int) -> "LimbTables":
+        """First-l-limb slice (limb-dropped ciphertexts keep leading limbs)."""
+        if l == self.n_limbs:
+            return self
+        assert 1 <= l <= self.n_limbs, (l, self.n_limbs)
+        return LimbTables(
+            qs=self.qs[:l], qinv_negs=self.qinv_negs[:l], r2s=self.r2s[:l],
+            one_monts=self.one_monts[:l], n_inv_monts=self.n_inv_monts[:l],
+            psi_rev_mont=self.psi_rev_mont[:l],
+            psi_inv_rev_mont=self.psi_inv_rev_mont[:l],
+        )
+
+
+def _stack_limb_tables(limbs: "tuple[LimbContext, ...]") -> LimbTables:
+    return LimbTables(
+        qs=np.asarray([lc.q for lc in limbs], dtype=np.uint32),
+        qinv_negs=np.asarray([lc.qinv_neg for lc in limbs], dtype=np.uint32),
+        r2s=np.asarray([lc.r2 for lc in limbs], dtype=np.uint32),
+        one_monts=np.asarray([lc.one_mont for lc in limbs], dtype=np.uint32),
+        n_inv_monts=np.asarray([lc.n_inv_mont for lc in limbs],
+                               dtype=np.uint32),
+        psi_rev_mont=np.stack([lc.psi_rev_mont for lc in limbs], axis=0),
+        psi_inv_rev_mont=np.stack([lc.psi_inv_rev_mont for lc in limbs],
+                                  axis=0),
+    )
+
+
+# ---------------------------------------------------------------------------
 # full CKKS context
 # ---------------------------------------------------------------------------
 
@@ -201,6 +256,11 @@ class CkksContext:
     @functools.cached_property
     def limbs(self) -> tuple[LimbContext, ...]:
         return tuple(make_limb_context(q, self.n_poly) for q in self.primes)
+
+    @functools.cached_property
+    def tables(self) -> LimbTables:
+        """Stacked u32[L]/u32[L, N] constant tables for the fused engine."""
+        return _stack_limb_tables(self.limbs)
 
     # -- serialized-size model (for the paper's communication tables) -------
     def ciphertext_bytes(self, packed: bool = True) -> int:

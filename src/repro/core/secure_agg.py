@@ -7,7 +7,8 @@ Data flow per round (single-key setup; threshold variant in fl/orchestrator):
            enc, plain = split_by_mask(vec, partition)         # static indices
            ct_i = Enc(pk, encode(enc))                        # [n_chunks] cts
            (optional) plain += Laplace(b)
-  server:  ct_glob   = sum_i alpha_i (*) ct_i                 # fused kernel
+  server:  ct_glob   = sum_i alpha_i (*) ct_i   # limb-fused kernel, one
+                                                # launch across all RNS limbs
            plain_glob = sum_i alpha_i * plain_i               # plaintext
   client:  enc_glob = decode(Dec(sk, ct_glob))
            W_glob = unflatten(merge(enc_glob, plain_glob))

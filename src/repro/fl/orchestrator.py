@@ -87,6 +87,10 @@ class FLTask:
         self.ctx = self.authority.ctx
 
         self.global_params = model.init(jax.random.PRNGKey(run_cfg.seed))
+        # base for per-(round, client) encryption keys, distinct from the
+        # model-init stream
+        self._round_key_base = jax.random.fold_in(
+            jax.random.PRNGKey(run_cfg.seed), 0x5EC)
         self.server: FLServer | None = None
         self.aggregator: SelectiveHEAggregator | None = None
         # the task owns round accounting: always (re)attach its ledger, so
@@ -170,7 +174,11 @@ class FLTask:
                 dropped += 1
                 continue                      # straggler cut at the deadline
             losses.append(loss)
-            key = jax.random.PRNGKey(rnd * 1000 + int(ci))
+            # collision-free per-(round, client) stream: fold_in is injective
+            # per step, unlike the old PRNGKey(rnd * 1000 + ci) arithmetic
+            # which collides once client indices reach the round stride
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._round_key_base, rnd), int(ci))
             if use_wire:
                 blob = client.protect_and_pack(
                     self.aggregator, local_params, rnd=rnd,

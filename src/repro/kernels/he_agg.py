@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused encrypted FedAvg aggregation (one RNS limb).
+"""Pallas TPU kernel: fused encrypted FedAvg aggregation, limb-fused.
 
 The server hot loop of the paper is  sum_i alpha_i * [[W_i]]  over client
 ciphertexts.  Library implementations (PALISADE/TenSEAL wrappers) materialize
@@ -7,9 +7,12 @@ intensity that doubles HBM traffic.  This kernel fuses weight-multiply +
 modular accumulate: each ciphertext element is read exactly once, the
 accumulator lives in VMEM.
 
-Layout: cts u32[n_clients, B, N] (normal form, NTT domain), w_mont
-u32[n_clients] Montgomery-form scalar weights (round(alpha_i * delta) * R).
-Grid tiles B; the client loop is unrolled inside the kernel.
+Layout: cts u32[n_clients, B, L, N] (normal form, NTT domain), w_mont
+u32[n_clients, L] Montgomery-form scalar weights (round(alpha_i * delta) * R
+mod q_l).  The grid is (L, ceil(B / block_b)): the RNS limb is a grid
+coordinate, its constants come from u32[L] VMEM tables, and one `pallas_call`
+covers every limb — kernel count is independent of limb depth.  The client
+loop is unrolled inside the kernel.
 
 VMEM: n_clients * block_b * N * 4B; for 16 clients, block_b=4, N=8192 ->
 2 MiB in + 128 KiB out.
@@ -25,47 +28,57 @@ from jax.experimental import pallas as pl
 from repro.kernels import ref as _ref
 
 
-def _agg_body(cts_ref, w_ref, o_ref, *, q: int, qinv_neg: int, n_clients: int):
-    w = w_ref[...]
-    acc = _ref.mont_mul(
-        cts_ref[0], jnp.broadcast_to(w[0], cts_ref[0].shape), q, qinv_neg
-    )
+def _agg_body(cts_ref, w_ref, q_ref, qinv_ref, o_ref, *, n_clients: int):
+    q = q_ref[0]
+    qinv_neg = qinv_ref[0]
+    w = w_ref[:, 0]
+    c0 = cts_ref[0, :, 0, :]
+    acc = _ref.mont_mul(c0, jnp.broadcast_to(w[0], c0.shape), q, qinv_neg)
     for i in range(1, n_clients):
-        term = _ref.mont_mul(
-            cts_ref[i], jnp.broadcast_to(w[i], cts_ref[i].shape), q, qinv_neg
-        )
+        ci = cts_ref[i, :, 0, :]
+        term = _ref.mont_mul(ci, jnp.broadcast_to(w[i], ci.shape), q,
+                             qinv_neg)
         acc = _ref.mod_add(acc, term, q)
-    o_ref[...] = acc
+    o_ref[:, 0, :] = acc
 
 
 @functools.lru_cache(maxsize=128)
-def _build(n_clients: int, b: int, n: int, q: int, qinv_neg: int,
-           block_b: int, interpret: bool):
-    body = functools.partial(_agg_body, q=q, qinv_neg=qinv_neg, n_clients=n_clients)
+def _build(n_clients: int, l: int, n: int, block_b: int, interpret: bool):
+    body = functools.partial(_agg_body, n_clients=n_clients)
+    tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
+    scalar = pl.BlockSpec((1,), lambda li, bi: (li,))
 
-    def call(cts, w_mont):
-        grid = (pl.cdiv(b, block_b),)
+    def call(cts, w_mont, qs, qinv_negs):
+        b = cts.shape[1]
         return pl.pallas_call(
             body,
-            grid=grid,
+            grid=(l, pl.cdiv(b, block_b)),
             in_specs=[
-                pl.BlockSpec((n_clients, block_b, n), lambda i: (0, i, 0)),
-                pl.BlockSpec((n_clients,), lambda i: (0,)),
+                pl.BlockSpec((n_clients, block_b, 1, n),
+                             lambda li, bi: (0, bi, li, 0)),
+                pl.BlockSpec((n_clients, 1), lambda li, bi: (0, li)),
+                scalar, scalar,
             ],
-            out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((b, l, n), jnp.uint32),
             interpret=interpret,
-        )(cts, w_mont)
+        )(cts, w_mont, qs, qinv_negs)
 
     return call
 
 
-def he_weighted_sum(cts, w_mont, q: int, qinv_neg: int, *, block_b: int = 4,
-                    interpret: bool = True):
-    """sum_i w_i (*) ct_i mod q.  cts: u32[C, B, N], w_mont: u32[C]."""
-    c, b, n = cts.shape
-    call = _build(c, b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
-    return call(cts, w_mont)
+def he_weighted_sum_fused(cts, w_mont, qs, qinv_negs, *, block_b: int = 4,
+                          interpret: bool = True):
+    """sum_i w_i (*) ct_i mod q_l, all limbs in one pallas_call.
+
+    cts: u32[C, ..., L, N]; w_mont: u32[C, L]; qs, qinv_negs: u32[L]."""
+    c = cts.shape[0]
+    l, n = cts.shape[-2], cts.shape[-1]
+    batch = cts.shape[1:-2]
+    cts2 = cts.reshape((c, -1, l, n))
+    b = cts2.shape[1]
+    call = _build(c, l, n, min(block_b, b), interpret)
+    return call(cts2, w_mont, qs, qinv_negs).reshape(batch + (l, n))
 
 
 # ---------------------------------------------------------------------------
@@ -81,36 +94,43 @@ def he_weighted_sum(cts, w_mont, q: int, qinv_neg: int, *, block_b: int = 4,
 # one in-flight ciphertext regardless of client count.
 
 
-def _accum_body(ct_ref, acc_ref, w_ref, o_ref, *, q: int, qinv_neg: int):
-    term = _ref.mont_mul(
-        ct_ref[...], jnp.broadcast_to(w_ref[0], ct_ref[...].shape), q, qinv_neg
-    )
-    o_ref[...] = _ref.mod_add(acc_ref[...], term, q)
+def _accum_body(ct_ref, acc_ref, w_ref, q_ref, qinv_ref, o_ref):
+    q = q_ref[0]
+    qinv_neg = qinv_ref[0]
+    ct = ct_ref[:, 0, :]
+    term = _ref.mont_mul(ct, jnp.broadcast_to(w_ref[0], ct.shape), q,
+                         qinv_neg)
+    o_ref[:, 0, :] = _ref.mod_add(acc_ref[:, 0, :], term, q)
 
 
 @functools.lru_cache(maxsize=128)
-def _build_accum(b: int, n: int, q: int, qinv_neg: int, block_b: int,
-                 interpret: bool):
-    body = functools.partial(_accum_body, q=q, qinv_neg=qinv_neg)
+def _build_accum(l: int, n: int, block_b: int, interpret: bool):
+    tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
+    scalar = pl.BlockSpec((1,), lambda li, bi: (li,))
 
-    def call(ct, acc, w_mont):
-        grid = (pl.cdiv(b, block_b),)
-        spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    def call(ct, acc, w_mont, qs, qinv_negs):
+        b = ct.shape[0]
         return pl.pallas_call(
-            body,
-            grid=grid,
-            in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
-            out_specs=spec,
-            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            _accum_body,
+            grid=(l, pl.cdiv(b, block_b)),
+            in_specs=[tile, tile, scalar, scalar, scalar],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((b, l, n), jnp.uint32),
             interpret=interpret,
-        )(ct, acc, w_mont)
+        )(ct, acc, w_mont, qs, qinv_negs)
 
     return call
 
 
-def he_weighted_accum(acc, ct, w_mont, q: int, qinv_neg: int, *,
-                      block_b: int = 8, interpret: bool = True):
-    """acc + w (*) ct mod q.  acc, ct: u32[B, N]; w_mont: u32[1]."""
-    b, n = ct.shape
-    call = _build_accum(b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
-    return call(ct, acc, w_mont)
+def he_weighted_accum_fused(acc, ct, w_mont, qs, qinv_negs, *,
+                            block_b: int = 8, interpret: bool = True):
+    """acc + w (*) ct mod q_l, all limbs in one pallas_call.
+
+    acc, ct: u32[..., L, N]; w_mont: u32[L] per-limb Montgomery weight."""
+    l, n = ct.shape[-2], ct.shape[-1]
+    batch = ct.shape[:-2]
+    ct2 = ct.reshape((-1, l, n))
+    acc2 = jnp.broadcast_to(acc, ct.shape).reshape((-1, l, n))
+    b = ct2.shape[0]
+    call = _build_accum(l, n, min(block_b, b), interpret)
+    return call(ct2, acc2, w_mont, qs, qinv_negs).reshape(batch + (l, n))

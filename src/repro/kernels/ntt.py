@@ -1,17 +1,25 @@
-"""Pallas TPU kernel: negacyclic NTT / iNTT over RNS limbs.
+"""Pallas TPU kernel: negacyclic NTT / iNTT, limb-fused over all RNS limbs.
 
-Target: TPU VPU (u32 lanes). Grid tiles the polynomial-batch axis; each kernel
-invocation holds a (block_b, N) tile plus the N-entry twiddle table in VMEM
+Target: TPU VPU (u32 lanes). The grid is (L, ceil(B / block_b)): the RNS limb
+is a *grid coordinate*, not a Python loop, so one `pallas_call` covers the
+whole u32[B, L, N] tensor and kernel count no longer scales with limb depth.
+Each invocation holds a (block_b, N) tile of one limb plus that limb's
+N-entry twiddle row and scalar constants (q, -q^{-1}, N^{-1}R) in VMEM
 (block_b=8, N=8192 -> 288 KiB of VMEM, well under budget) and runs all
 log2(N) butterfly stages in-register.  The DIF/DIT pairing keeps both
 directions permutation-free (bit-reversed NTT domain).
+
+Constants arrive as stacked u32[L] / u32[L, N] tables (params.LimbTables);
+the BlockSpec index map selects the limb's row, so the kernel body is
+identical for every limb — the shape of thing that later shards the limb
+axis across chips.
 
 Stages are unrolled in Python: every reshape has a static shape. On real TPU
 the final stages (t < 128 lanes) relayout across sublanes; a 4-step
 transpose-based NTT is the known fix and is listed in EXPERIMENTS.md §Perf.
 
 Validated in interpret mode against repro/kernels/ref.py with exact integer
-equality (tests/test_kernels.py).
+equality (tests/test_kernels.py, tests/test_fused_engine.py).
 """
 from __future__ import annotations
 
@@ -19,89 +27,100 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
 
 
-def _ntt_fwd_body(x_ref, psi_ref, o_ref, *, q: int, qinv_neg: int, n: int):
-    x = x_ref[...]
-    psi = psi_ref[...]
+def _ntt_fwd_body(x_ref, psi_ref, q_ref, qinv_ref, o_ref, *, n: int):
+    x = x_ref[:, 0, :]
+    psi = psi_ref[0]
+    q = q_ref[0]
+    qinv_neg = qinv_ref[0]
     m, t = 1, n
     while m < n:
         t //= 2
         xs = x.reshape((-1, m, 2, t))
         u = xs[:, :, 0, :]
-        s = jax.lax.dynamic_slice_in_dim(psi, m, m)[None, :, None]
-        v = _ref.mont_mul(xs[:, :, 1, :], jnp.broadcast_to(s, u.shape), q, qinv_neg)
+        s = psi[m:2 * m][None, :, None]
+        v = _ref.mont_mul(xs[:, :, 1, :], jnp.broadcast_to(s, u.shape), q,
+                          qinv_neg)
         x = jnp.stack(
             [_ref.mod_add(u, v, q), _ref.mod_sub(u, v, q)], axis=2
         ).reshape((-1, n))
         m *= 2
-    o_ref[...] = x
+    o_ref[:, 0, :] = x
 
 
-def _ntt_inv_body(x_ref, psi_inv_ref, o_ref, *, q, qinv_neg, n_inv_mont, n):
-    x = x_ref[...]
-    psi_inv = psi_inv_ref[...]
+def _ntt_inv_body(x_ref, psi_inv_ref, q_ref, qinv_ref, ninv_ref, o_ref, *,
+                  n: int):
+    x = x_ref[:, 0, :]
+    psi_inv = psi_inv_ref[0]
+    q = q_ref[0]
+    qinv_neg = qinv_ref[0]
     t, m = 1, n
     while m > 1:
         h = m // 2
         xs = x.reshape((-1, h, 2, t))
         u = xs[:, :, 0, :]
         v = xs[:, :, 1, :]
-        s = jax.lax.dynamic_slice_in_dim(psi_inv, h, h)[None, :, None]
+        s = psi_inv[h:2 * h][None, :, None]
         lo = _ref.mod_add(u, v, q)
-        hi = _ref.mont_mul(_ref.mod_sub(u, v, q), jnp.broadcast_to(s, u.shape), q, qinv_neg)
+        hi = _ref.mont_mul(_ref.mod_sub(u, v, q),
+                           jnp.broadcast_to(s, u.shape), q, qinv_neg)
         x = jnp.stack([lo, hi], axis=2).reshape((-1, n))
         t *= 2
         m = h
-    x = _ref.mont_mul(x, jnp.full_like(x, np.uint32(n_inv_mont)), q, qinv_neg)
-    o_ref[...] = x
+    x = _ref.mont_mul(x, jnp.broadcast_to(ninv_ref[0], x.shape), q, qinv_neg)
+    o_ref[:, 0, :] = x
 
 
 @functools.lru_cache(maxsize=128)
-def _build(direction: str, n: int, q: int, qinv_neg: int, n_inv_mont: int,
-           block_b: int, interpret: bool):
+def _build(direction: str, l: int, n: int, block_b: int, interpret: bool):
+    tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
+    row = pl.BlockSpec((1, n), lambda li, bi: (li, 0))
+    scalar = pl.BlockSpec((1,), lambda li, bi: (li,))
     if direction == "fwd":
-        body = functools.partial(_ntt_fwd_body, q=q, qinv_neg=qinv_neg, n=n)
+        body = functools.partial(_ntt_fwd_body, n=n)
+        in_specs = [tile, row, scalar, scalar]
     else:
-        body = functools.partial(
-            _ntt_inv_body, q=q, qinv_neg=qinv_neg, n_inv_mont=n_inv_mont, n=n
-        )
+        body = functools.partial(_ntt_inv_body, n=n)
+        in_specs = [tile, row, scalar, scalar, scalar]
 
-    def call(x, twiddles):
+    def call(x, *tables):
         b = x.shape[0]
-        grid = (pl.cdiv(b, block_b),)
         return pl.pallas_call(
             body,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_b, n), lambda i: (i, 0)),
-                pl.BlockSpec((n,), lambda i: (0,)),
-            ],
-            out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            grid=(l, pl.cdiv(b, block_b)),
+            in_specs=in_specs,
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((b, l, n), jnp.uint32),
             interpret=interpret,
-        )(x, twiddles)
+        )(x, *tables)
 
     return call
 
 
-def ntt_fwd(x, psi_rev_mont, q: int, qinv_neg: int, *, block_b: int = 8,
-            interpret: bool = True):
-    """x: u32[B, N] natural -> bit-reversed NTT domain."""
-    b = x.shape[0]
-    call = _build("fwd", x.shape[-1], int(q), int(qinv_neg), 0,
-                  min(block_b, b), interpret)
-    return call(x, psi_rev_mont)
+def _flatten(x):
+    l, n = x.shape[-2], x.shape[-1]
+    return x.reshape((-1, l, n)), x.shape[:-2]
 
 
-def ntt_inv(x, psi_inv_rev_mont, n_inv_mont, q: int, qinv_neg: int, *,
-            block_b: int = 8, interpret: bool = True):
-    """x: u32[B, N] bit-reversed NTT domain -> natural order."""
-    b = x.shape[0]
-    call = _build("inv", x.shape[-1], int(q), int(qinv_neg), int(n_inv_mont),
-                  min(block_b, b), interpret)
-    return call(x, psi_inv_rev_mont)
+def ntt_fwd_fused(x, psi_rev_mont, qs, qinv_negs, *, block_b: int = 8,
+                  interpret: bool = True):
+    """x: u32[..., L, N] natural -> bit-reversed NTT domain, all limbs in one
+    pallas_call.  psi_rev_mont: u32[L, N]; qs, qinv_negs: u32[L]."""
+    x2, batch = _flatten(x)
+    b, l, n = x2.shape
+    call = _build("fwd", l, n, min(block_b, b), interpret)
+    return call(x2, psi_rev_mont, qs, qinv_negs).reshape(batch + (l, n))
+
+
+def ntt_inv_fused(x, psi_inv_rev_mont, n_inv_monts, qs, qinv_negs, *,
+                  block_b: int = 8, interpret: bool = True):
+    """x: u32[..., L, N] bit-reversed NTT domain -> natural order."""
+    x2, batch = _flatten(x)
+    b, l, n = x2.shape
+    call = _build("inv", l, n, min(block_b, b), interpret)
+    return call(x2, psi_inv_rev_mont, qs, qinv_negs,
+                n_inv_monts).reshape(batch + (l, n))

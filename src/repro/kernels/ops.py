@@ -1,18 +1,35 @@
-"""Public jit'd wrappers over the HE kernels, with backend dispatch.
+"""Public wrappers over the limb-fused HE kernels, with a backend registry.
 
-Backends:
+Execution model
+---------------
+RNS limbs are a batch/grid dimension, never a Python loop: every op consumes
+the full u32[..., L, N] tensor in ONE call — a single fused jnp graph on the
+`ref` backend, a single `pallas_call` with the limb index in the grid on the
+`pallas` backend.  Per-limb constants (q, -q^{-1}, R^2, N^{-1}R, twiddle
+tables) come pre-stacked as u32[L] / u32[L, N] arrays from
+`CkksContext.tables` (params.LimbTables) and are sliced to the input's limb
+count, so limb-dropped ciphertexts work transparently.
+
+Backend registry
+----------------
+Each op is an entry in an op-table mapping backend name -> implementation:
+
   * "ref"    — pure-jnp oracle (repro/kernels/ref.py). Default on CPU: fast,
                exact, and what the FL examples/benchmarks run.
   * "pallas" — pl.pallas_call kernels. On CPU they run in interpret mode
                (kernel body executed in Python) for validation; on TPU they
-               compile natively. Select via REPRO_HE_BACKEND=pallas or
-               set_backend("pallas").
+               compile natively.
 
-All functions operate on multi-limb tensors: x u32[..., L, N] with one
-Montgomery context per limb (params.CkksContext.limbs).
+Selection is per-op: `set_backend("pallas")` flips every op,
+`set_backend("pallas", op="weighted_sum")` flips one.  The interpret/compile
+decision is made once (first use) from the JAX platform.  `backend_token()`
+returns a hashable snapshot of the whole assignment for use as a static jit
+key — the jitted encrypt/decrypt/aggregate graphs in core/ckks/cipher.py
+retrace when the registry changes.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
@@ -23,95 +40,151 @@ from repro.kernels import ntt as _ntt
 from repro.kernels import pointwise as _pointwise
 from repro.kernels import ref as _ref
 
-_BACKEND = os.environ.get("REPRO_HE_BACKEND", "ref")
+OPS = ("ntt_fwd", "ntt_inv", "mul_add", "weighted_sum", "weighted_accum")
+BACKENDS = ("ref", "pallas")
 
-
-def set_backend(name: str) -> None:
-    global _BACKEND
-    assert name in ("ref", "pallas"), name
-    _BACKEND = name
-
-
-def get_backend() -> str:
-    return _BACKEND
+_ASSIGN: dict[str, str] = {
+    op: os.environ.get("REPRO_HE_BACKEND", "ref") for op in OPS
+}
+_INTERPRET: bool | None = None
 
 
 def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
+    """Interpret vs native-compile, decided once per process at first build."""
+    global _INTERPRET
+    if _INTERPRET is None:
+        _INTERPRET = jax.default_backend() == "cpu"
+    return _INTERPRET
 
 
-def _per_limb(x, fn):
-    """Apply fn(limb_2d_array, limb_index) over x[..., L, N]."""
-    batch = x.shape[:-2]
-    l, n = x.shape[-2], x.shape[-1]
-    x2 = x.reshape((-1, l, n))
-    outs = [fn(x2[:, i, :], i) for i in range(l)]
-    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+def set_backend(name: str, op: str | None = None) -> None:
+    """Select the backend for every op (op=None) or one op."""
+    assert name in BACKENDS, name
+    if op is None:
+        for o in OPS:
+            _ASSIGN[o] = name
+    else:
+        assert op in OPS, op
+        _ASSIGN[op] = name
 
 
+def get_backend(op: str | None = None) -> str:
+    """Backend for `op`; with op=None, the common backend ("mixed" if the
+    per-op assignments diverge)."""
+    if op is not None:
+        return _ASSIGN[op]
+    names = set(_ASSIGN.values())
+    return names.pop() if len(names) == 1 else "mixed"
+
+
+def backend_token() -> tuple:
+    """Hashable snapshot of (per-op assignment, interpret flag) — the static
+    jit key that makes cached graphs retrace on registry changes."""
+    return tuple(sorted(_ASSIGN.items())) + (("interpret", _interpret()),)
+
+
+@functools.lru_cache(maxsize=256)
+def _tables(ctx, l: int):
+    """ctx's stacked constant tables sliced to the first l limbs."""
+    return ctx.tables.take(l)
+
+
+def _qcol(t):
+    return t.qs[:, None]
+
+
+# ---------------------------------------------------------------------------
+# op-table: one fused implementation per (op, backend)
+# ---------------------------------------------------------------------------
+
+
+def _ntt_fwd_ref(t, x):
+    return _ref.ntt_fwd_fused(x, t.psi_rev_mont, t.qs, t.qinv_negs)
+
+
+def _ntt_fwd_pallas(t, x):
+    return _ntt.ntt_fwd_fused(x, t.psi_rev_mont, t.qs, t.qinv_negs,
+                              interpret=_interpret())
+
+
+def _ntt_inv_ref(t, x):
+    return _ref.ntt_inv_fused(x, t.psi_inv_rev_mont, t.n_inv_monts, t.qs,
+                              t.qinv_negs)
+
+
+def _ntt_inv_pallas(t, x):
+    return _ntt.ntt_inv_fused(x, t.psi_inv_rev_mont, t.n_inv_monts, t.qs,
+                              t.qinv_negs, interpret=_interpret())
+
+
+def _mul_add_ref(t, x, y_mont, z):
+    return _ref.mul_add_fused(x, jnp.broadcast_to(y_mont, x.shape),
+                              jnp.broadcast_to(z, x.shape), t.qs, t.qinv_negs)
+
+
+def _mul_add_pallas(t, x, y_mont, z):
+    return _pointwise.mul_add_fused(x, y_mont, z, t.qs, t.qinv_negs,
+                                    interpret=_interpret())
+
+
+def _weighted_sum_ref(t, cts, w_mont):
+    return _ref.he_weighted_sum_fused(cts, w_mont, t.qs, t.qinv_negs)
+
+
+def _weighted_sum_pallas(t, cts, w_mont):
+    return _he_agg.he_weighted_sum_fused(cts, w_mont, t.qs, t.qinv_negs,
+                                         interpret=_interpret())
+
+
+def _weighted_accum_ref(t, acc, ct, w_mont):
+    return _ref.he_weighted_accum_fused(acc, ct, w_mont, t.qs, t.qinv_negs)
+
+
+def _weighted_accum_pallas(t, acc, ct, w_mont):
+    return _he_agg.he_weighted_accum_fused(acc, ct, w_mont, t.qs,
+                                           t.qinv_negs,
+                                           interpret=_interpret())
+
+
+_IMPL = {
+    "ntt_fwd": {"ref": _ntt_fwd_ref, "pallas": _ntt_fwd_pallas},
+    "ntt_inv": {"ref": _ntt_inv_ref, "pallas": _ntt_inv_pallas},
+    "mul_add": {"ref": _mul_add_ref, "pallas": _mul_add_pallas},
+    "weighted_sum": {"ref": _weighted_sum_ref,
+                     "pallas": _weighted_sum_pallas},
+    "weighted_accum": {"ref": _weighted_accum_ref,
+                       "pallas": _weighted_accum_pallas},
+}
+
+
+def _impl(op):
+    return _IMPL[op][_ASSIGN[op]]
+
+
+# ---------------------------------------------------------------------------
+# public fused ops (ciphertext-limb layout: u32[..., L, N])
 # ---------------------------------------------------------------------------
 
 
 def ntt_fwd(x, ctx):
-    """u32[..., L, N] natural -> bit-reversed NTT domain (per limb)."""
-    def fn(x2, i):
-        lc = ctx.limbs[i]
-        tw = jnp.asarray(lc.psi_rev_mont)
-        if _BACKEND == "pallas":
-            return _ntt.ntt_fwd(x2, tw, lc.q, lc.qinv_neg, interpret=_interpret())
-        return _ref.ntt_fwd(x2, tw, jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg))
-    return _per_limb(x, fn)
+    """u32[..., L, N] natural -> bit-reversed NTT domain, all limbs fused."""
+    return _impl("ntt_fwd")(_tables(ctx, x.shape[-2]), x)
 
 
 def ntt_inv(x, ctx):
-    def fn(x2, i):
-        lc = ctx.limbs[i]
-        tw = jnp.asarray(lc.psi_inv_rev_mont)
-        if _BACKEND == "pallas":
-            return _ntt.ntt_inv(x2, tw, int(lc.n_inv_mont), lc.q, lc.qinv_neg,
-                                interpret=_interpret())
-        return _ref.ntt_inv(x2, tw, jnp.asarray(lc.n_inv_mont),
-                            jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg))
-    return _per_limb(x, fn)
+    """u32[..., L, N] bit-reversed NTT domain -> natural, all limbs fused."""
+    return _impl("ntt_inv")(_tables(ctx, x.shape[-2]), x)
 
 
 def mul_add(x, y_mont, z, ctx):
-    """x (*) y_mont + z, all u32[..., L, N]."""
-    batch = x.shape[:-2]
-    l, n = x.shape[-2:]
-    x2 = x.reshape((-1, l, n))
-    y2 = jnp.broadcast_to(y_mont, x.shape).reshape((-1, l, n))
-    z2 = jnp.broadcast_to(z, x.shape).reshape((-1, l, n))
-    outs = []
-    for i in range(l):
-        lc = ctx.limbs[i]
-        if _BACKEND == "pallas":
-            outs.append(_pointwise.mul_add(x2[:, i], y2[:, i], z2[:, i],
-                                           lc.q, lc.qinv_neg, interpret=_interpret()))
-        else:
-            outs.append(_ref.mul_add(x2[:, i], y2[:, i], z2[:, i],
-                                     jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg)))
-    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+    """x (*) y_mont + z, all u32[..., L, N], one fused call."""
+    return _impl("mul_add")(_tables(ctx, x.shape[-2]), x, y_mont, z)
 
 
 def weighted_sum(cts, w_mont, ctx):
     """sum_i w_i (*) ct_i.  cts: u32[C, ..., L, N], w_mont: u32[C, L]."""
-    c = cts.shape[0]
-    batch = cts.shape[1:-2]
-    l, n = cts.shape[-2:]
-    cts2 = cts.reshape((c, -1, l, n))
-    outs = []
-    for i in range(l):
-        lc = ctx.limbs[i]
-        if _BACKEND == "pallas":
-            outs.append(_he_agg.he_weighted_sum(cts2[:, :, i, :], w_mont[:, i],
-                                                lc.q, lc.qinv_neg,
-                                                interpret=_interpret()))
-        else:
-            outs.append(_ref.he_weighted_sum(
-                cts2[:, :, i, :], w_mont[:, i].reshape((c,) + (1,) * 2),
-                jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg)))
-    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+    l = cts.shape[-2]
+    return _impl("weighted_sum")(_tables(ctx, l), cts, w_mont[:, :l])
 
 
 def weighted_accum(acc, ct, w_mont, ctx):
@@ -121,66 +194,39 @@ def weighted_accum(acc, ct, w_mont, ctx):
     One client folded into the running sum — the O(1)-memory server path
     (repro.wire.stream); bit-identical to weighted_sum applied in order.
     """
-    batch = ct.shape[:-2]
-    l, n = ct.shape[-2:]
-    ct2 = ct.reshape((-1, l, n))
-    acc2 = jnp.broadcast_to(acc, ct.shape).reshape((-1, l, n))
-    outs = []
-    for i in range(l):
-        lc = ctx.limbs[i]
-        if _BACKEND == "pallas":
-            outs.append(_he_agg.he_weighted_accum(
-                acc2[:, i], ct2[:, i], w_mont[i].reshape((1,)),
-                lc.q, lc.qinv_neg, interpret=_interpret()))
-        else:
-            outs.append(_ref.mul_add(ct2[:, i],
-                                     jnp.broadcast_to(w_mont[i], ct2[:, i].shape),
-                                     acc2[:, i],
-                                     jnp.uint32(lc.q), jnp.uint32(lc.qinv_neg)))
-    return jnp.stack(outs, axis=1).reshape(batch + (l, n))
+    l = ct.shape[-2]
+    return _impl("weighted_accum")(_tables(ctx, l), acc, ct, w_mont[:l])
 
 
-# limb-wise helpers that have no kernel (cheap, always ref) -----------------
+# limb-wise helpers with no dedicated kernel (cheap, always ref) ------------
 
 
 def mod_add(a, b, ctx):
-    qs = _limb_q(ctx, a.shape)
-    return _ref.mod_add(a, jnp.broadcast_to(b, a.shape), qs)
+    t = _tables(ctx, a.shape[-2])
+    return _ref.mod_add(a, jnp.broadcast_to(b, a.shape), _qcol(t))
 
 
 def mod_sub(a, b, ctx):
-    qs = _limb_q(ctx, a.shape)
-    return _ref.mod_sub(a, jnp.broadcast_to(b, a.shape), qs)
+    t = _tables(ctx, a.shape[-2])
+    return _ref.mod_sub(a, jnp.broadcast_to(b, a.shape), _qcol(t))
 
 
 def mod_neg(a, ctx):
-    return _ref.mod_neg(a, _limb_q(ctx, a.shape))
+    return _ref.mod_neg(a, _qcol(_tables(ctx, a.shape[-2])))
 
 
 def to_mont(a, ctx):
-    qs = _limb_q(ctx, a.shape)
-    qinvs = _limb_const(ctx, a.shape, "qinv_neg")
-    r2s = _limb_const(ctx, a.shape, "r2")
-    return _ref.mont_mul(a, r2s, qs, qinvs)
+    t = _tables(ctx, a.shape[-2])
+    return _ref.mont_mul(a, jnp.broadcast_to(t.r2s[:, None], a.shape),
+                         _qcol(t), t.qinv_negs[:, None])
 
 
 def from_mont(a, ctx):
-    qs = _limb_q(ctx, a.shape)
-    qinvs = _limb_const(ctx, a.shape, "qinv_neg")
-    return _ref.mont_mul(a, jnp.ones_like(a), qs, qinvs)
+    t = _tables(ctx, a.shape[-2])
+    return _ref.mont_mul(a, jnp.ones_like(a), _qcol(t), t.qinv_negs[:, None])
 
 
 def mont_mul(a, b_mont, ctx):
-    qs = _limb_q(ctx, a.shape)
-    qinvs = _limb_const(ctx, a.shape, "qinv_neg")
-    return _ref.mont_mul(a, jnp.broadcast_to(b_mont, a.shape), qs, qinvs)
-
-
-def _limb_q(ctx, shape):
-    return _limb_const(ctx, shape, "q")
-
-
-def _limb_const(ctx, shape, field):
-    """Broadcast per-limb constant over [..., L, N]."""
-    vals = jnp.asarray([getattr(lc, field) for lc in ctx.limbs], dtype=jnp.uint32)
-    return jnp.broadcast_to(vals[:, None], shape)
+    t = _tables(ctx, a.shape[-2])
+    return _ref.mont_mul(a, jnp.broadcast_to(b_mont, a.shape), _qcol(t),
+                         t.qinv_negs[:, None])

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused modular pointwise ops (one RNS limb).
+"""Pallas TPU kernel: fused modular pointwise ops, limb-fused over all limbs.
 
 `mul_add`:  out = x (*) y_mont + z  — the encrypt/decrypt workhorse:
     encrypt: c0 = pk0 (*) u + (e0 + m),  c1 = pk1 (*) u + e1
@@ -6,6 +6,10 @@
 Fusing the Montgomery multiply with the modular add keeps each operand to a
 single HBM read (arithmetic intensity of HE pointwise ops is ~0.5 int-op/B,
 firmly memory-bound — see EXPERIMENTS.md §Roofline-HE).
+
+The grid is (L, ceil(B / block_b)): the RNS limb is a grid coordinate and the
+per-limb Montgomery constants (q, -q^{-1}) are u32[L] VMEM tables indexed by
+it, so one `pallas_call` covers the whole u32[B, L, N] tensor.
 """
 from __future__ import annotations
 
@@ -18,33 +22,42 @@ from jax.experimental import pallas as pl
 from repro.kernels import ref as _ref
 
 
-def _mul_add_body(x_ref, y_ref, z_ref, o_ref, *, q: int, qinv_neg: int):
-    prod = _ref.mont_mul(x_ref[...], y_ref[...], q, qinv_neg)
-    o_ref[...] = _ref.mod_add(prod, z_ref[...], q)
+def _mul_add_body(x_ref, y_ref, z_ref, q_ref, qinv_ref, o_ref):
+    q = q_ref[0]
+    qinv_neg = qinv_ref[0]
+    prod = _ref.mont_mul(x_ref[:, 0, :], y_ref[:, 0, :], q, qinv_neg)
+    o_ref[:, 0, :] = _ref.mod_add(prod, z_ref[:, 0, :], q)
 
 
 @functools.lru_cache(maxsize=128)
-def _build(b: int, n: int, q: int, qinv_neg: int, block_b: int, interpret: bool):
-    body = functools.partial(_mul_add_body, q=q, qinv_neg=qinv_neg)
+def _build(l: int, n: int, block_b: int, interpret: bool):
+    tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
+    scalar = pl.BlockSpec((1,), lambda li, bi: (li,))
 
-    def call(x, y, z):
-        grid = (pl.cdiv(b, block_b),)
-        spec = pl.BlockSpec((block_b, n), lambda i: (i, 0))
+    def call(x, y, z, qs, qinv_negs):
+        b = x.shape[0]
         return pl.pallas_call(
-            body,
-            grid=grid,
-            in_specs=[spec, spec, spec],
-            out_specs=spec,
-            out_shape=jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            _mul_add_body,
+            grid=(l, pl.cdiv(b, block_b)),
+            in_specs=[tile, tile, tile, scalar, scalar],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((b, l, n), jnp.uint32),
             interpret=interpret,
-        )(x, y, z)
+        )(x, y, z, qs, qinv_negs)
 
     return call
 
 
-def mul_add(x, y_mont, z, q: int, qinv_neg: int, *, block_b: int = 8,
-            interpret: bool = True):
-    """out = x (*) y_mont + z mod q.  All u32[B, N]."""
-    b, n = x.shape
-    call = _build(b, n, int(q), int(qinv_neg), min(block_b, b), interpret)
-    return call(x, y_mont, z)
+def mul_add_fused(x, y_mont, z, qs, qinv_negs, *, block_b: int = 8,
+                  interpret: bool = True):
+    """out = x (*) y_mont + z mod q_l, all limbs in one pallas_call.
+
+    x, y_mont, z: u32[..., L, N]; qs, qinv_negs: u32[L]."""
+    l, n = x.shape[-2], x.shape[-1]
+    batch = x.shape[:-2]
+    x2 = x.reshape((-1, l, n))
+    y2 = jnp.broadcast_to(y_mont, x.shape).reshape((-1, l, n))
+    z2 = jnp.broadcast_to(z, x.shape).reshape((-1, l, n))
+    b = x2.shape[0]
+    call = _build(l, n, min(block_b, b), interpret)
+    return call(x2, y2, z2, qs, qinv_negs).reshape(batch + (l, n))

@@ -182,6 +182,113 @@ def he_weighted_sum(cts, w_mont, q, qinv_neg):
     return acc
 
 
+# ---------------------------------------------------------------------------
+# limb-fused variants: the whole u32[..., L, N] tensor in one jnp graph
+# ---------------------------------------------------------------------------
+#
+# Per-limb constants arrive as stacked u32[L] / u32[L, N] tables
+# (params.LimbTables); the limb axis is broadcast, never looped in Python.
+# These are the `ref` backend of the fused execution engine and the oracle
+# the limb-grid Pallas kernels are checked against.
+
+
+def _col(v):
+    """u32[L] -> u32[L, 1] so it broadcasts over [..., L, N]."""
+    return _u32(v)[:, None]
+
+
+def rand_limbed_np(rng, ctx, shape):
+    """Uniform per-limb residues u32[*shape, L, N] from a numpy RandomState —
+    the fused-layout input generator shared by tests and benchmarks."""
+    return np.stack(
+        [rng.randint(0, int(q), size=tuple(shape) + (ctx.n_poly,))
+         for q in ctx.primes], axis=-2).astype(np.uint32)
+
+
+def ntt_fwd_fused(x, psi_rev_mont, qs, qinv_negs):
+    """Forward negacyclic NTT over all limbs at once.
+
+    x: u32[..., L, N] natural order -> bit-reversed; psi_rev_mont: u32[L, N];
+    qs, qinv_negs: u32[L].
+    """
+    x = _u32(x)
+    l, n = x.shape[-2], x.shape[-1]
+    batch = x.shape[:-2]
+    x = x.reshape((-1, l, n))
+    q = _u32(qs)[None, :, None, None]
+    qi = _u32(qinv_negs)[None, :, None, None]
+    psi = _u32(psi_rev_mont)
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        xs = x.reshape((-1, l, m, 2, t))
+        u = xs[:, :, :, 0, :]
+        s = psi[:, m:2 * m][None, :, :, None]
+        v = mont_mul(xs[:, :, :, 1, :], jnp.broadcast_to(s, u.shape), q, qi)
+        x = jnp.stack([mod_add(u, v, q), mod_sub(u, v, q)],
+                      axis=3).reshape((-1, l, n))
+        m *= 2
+    return x.reshape(batch + (l, n))
+
+
+def ntt_inv_fused(x, psi_inv_rev_mont, n_inv_monts, qs, qinv_negs):
+    """Inverse negacyclic NTT over all limbs: bit-reversed -> natural."""
+    x = _u32(x)
+    l, n = x.shape[-2], x.shape[-1]
+    batch = x.shape[:-2]
+    x = x.reshape((-1, l, n))
+    q = _u32(qs)[None, :, None, None]
+    qi = _u32(qinv_negs)[None, :, None, None]
+    psi_inv = _u32(psi_inv_rev_mont)
+    t, m = 1, n
+    while m > 1:
+        h = m // 2
+        xs = x.reshape((-1, l, h, 2, t))
+        u = xs[:, :, :, 0, :]
+        v = xs[:, :, :, 1, :]
+        s = psi_inv[:, h:2 * h][None, :, :, None]
+        lo = mod_add(u, v, q)
+        hi = mont_mul(mod_sub(u, v, q), jnp.broadcast_to(s, u.shape), q, qi)
+        x = jnp.stack([lo, hi], axis=3).reshape((-1, l, n))
+        t *= 2
+        m = h
+    x = mont_mul(x, jnp.broadcast_to(_col(n_inv_monts), x.shape),
+                 _col(qs), _col(qinv_negs))
+    return x.reshape(batch + (l, n))
+
+
+def mul_add_fused(x, y_mont, z, qs, qinv_negs):
+    """x (*) y_mont + z over u32[..., L, N] with per-limb moduli."""
+    return mod_add(mont_mul(x, y_mont, _col(qs), _col(qinv_negs)), z,
+                   _col(qs))
+
+
+def he_weighted_sum_fused(cts, w_mont, qs, qinv_negs):
+    """sum_i w_i (*) ct_i over all limbs.
+
+    cts: u32[C, ..., L, N]; w_mont: u32[C, L] Montgomery scalar weights.
+    The client loop is unrolled (it is the fused-kernel accumulation order);
+    the limb axis broadcasts.
+    """
+    cts = _u32(cts)
+    w = _u32(w_mont)
+    n_clients = cts.shape[0]
+    wb = w.reshape((n_clients,) + (1,) * (cts.ndim - 3) + (w.shape[1], 1))
+    q = _col(qs)
+    qi = _col(qinv_negs)
+    acc = mont_mul(cts[0], jnp.broadcast_to(wb[0], cts[0].shape), q, qi)
+    for i in range(1, n_clients):
+        term = mont_mul(cts[i], jnp.broadcast_to(wb[i], cts[i].shape), q, qi)
+        acc = mod_add(acc, term, q)
+    return acc
+
+
+def he_weighted_accum_fused(acc, ct, w_mont, qs, qinv_negs):
+    """acc + w (*) ct over u32[..., L, N]; w_mont: u32[L]."""
+    return mul_add_fused(ct, jnp.broadcast_to(_col(w_mont), ct.shape), acc,
+                         qs, qinv_negs)
+
+
 def mul_wide(a, b):
     """Full 32x32 -> 64-bit product as a (hi, lo) u32 pair."""
     a = _u32(a)

@@ -64,8 +64,7 @@ class HeAggSpec:
 def make_he_agg_step(spec: HeAggSpec, weights: list[float]):
     """Server aggregation: sum_i w_i (*) ct_i (HE) + sum_i w_i plain_i."""
     ctx = spec.ctx
-    w_mont = np.stack([encoding.encode_scalar_residues(float(w), ctx)
-                       for w in weights], axis=0)          # [C, L]
+    w_mont = encoding.encode_weights_mont(weights, ctx)    # [C, L]
     w_plain = jnp.asarray(np.asarray(weights, np.float32))
 
     def step(cts, plain):

@@ -10,10 +10,11 @@ Client side — pack_update_frames() emits, per update:
 
 Server side — StreamIngest parses frames incrementally (any byte slicing)
 and performs  acc[chunk] = acc[chunk] + w (*) ct_chunk  the moment a chunk
-arrives, via the fused accumulate kernel (kernels/he_agg.he_weighted_accum
-through ops.weighted_accum).  Server-side update buffers are O(1) in the
-number of clients: one accumulator plus at most one in-flight chunk
-(peak_chunk_buffers instruments this; tests assert it).
+arrives, via the limb-fused accumulate kernel (he_agg.he_weighted_accum_fused
+through ops.weighted_accum — one launch covers every RNS limb) wrapped in a
+single jitted graph keyed on (ctx, backend registry).  Server-side update
+buffers are O(1) in the number of clients: one accumulator plus at most one
+in-flight chunk (peak_chunk_buffers instruments this; tests assert it).
 
 The modular arithmetic is identical to the batch weighted_sum applied in
 arrival order, so the streamed aggregate is bit-for-bit equal to the
@@ -22,8 +23,10 @@ in-memory path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import struct
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -101,6 +104,12 @@ def peek_update_meta(blob: bytes) -> UpdateMeta:
 # ---------------------------------------------------------------------------
 
 
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _accum_graph(ctx: CkksContext, token, acc, ct, w_mont):
+    """One fused fold: acc + w (*) ct over all limbs in a single launch."""
+    return ops.weighted_accum(acc, ct, w_mont, ctx)
+
+
 class StreamIngest:
     """Accumulates arriving client updates chunk-by-chunk.
 
@@ -151,7 +160,7 @@ class StreamIngest:
         acc = self._acc_ct.get(chunk_idx)
         if acc is None:
             acc = jnp.zeros((2, self._n_limbs, self._n), dtype=jnp.uint32)
-        out = ops.weighted_accum(acc, x[0], w_mont, self.ctx)
+        out = _accum_graph(self.ctx, ops.backend_token(), acc, x[0], w_mont)
         self._acc_ct[chunk_idx] = out
 
     def _fold_plain(self, arr, codec: str, qscale: float,

@@ -1,0 +1,240 @@
+"""Limb-fused execution engine: bit-exact parity against the per-limb
+reference across limb counts, backends, the streaming accumulate path, and
+limb-dropped ciphertexts — plus the backend registry contract."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ckks import cipher, encoding
+from repro.core.ckks import params as ckks_params
+from repro.kernels import ops, ref
+
+# L=1 needs a small delta for depth-1 modulus headroom; 2/3 use the default.
+_DELTA_BITS = {1: 12, 2: 20, 3: 20}
+
+
+def _ctx(n_limbs, n_poly=64):
+    return ckks_params.make_test_context(
+        n_poly=n_poly, n_limbs=n_limbs, delta_bits=_DELTA_BITS[n_limbs])
+
+
+def _rand_limbed(rng, ctx, shape):
+    return jnp.asarray(ref.rand_limbed_np(rng, ctx, shape))
+
+
+def _per_limb_ntt_fwd(x, ctx):
+    """The seed engine's execution model: one single-limb op per limb."""
+    return jnp.stack(
+        [ref.ntt_fwd(x[..., i, :], jnp.asarray(lc.psi_rev_mont),
+                     np.uint32(lc.q), np.uint32(lc.qinv_neg))
+         for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+
+def _per_limb_ntt_inv(x, ctx):
+    return jnp.stack(
+        [ref.ntt_inv(x[..., i, :], jnp.asarray(lc.psi_inv_rev_mont),
+                     np.asarray(lc.n_inv_mont), np.uint32(lc.q),
+                     np.uint32(lc.qinv_neg))
+         for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+
+def _per_limb_mul_add(x, y, z, ctx):
+    return jnp.stack(
+        [ref.mul_add(x[..., i, :], y[..., i, :], z[..., i, :],
+                     np.uint32(lc.q), np.uint32(lc.qinv_neg))
+         for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+
+def _per_limb_weighted_sum(cts, w, ctx):
+    c = cts.shape[0]
+    shape = (c,) + (1,) * (cts.ndim - 3)
+    return jnp.stack(
+        [ref.he_weighted_sum(cts[..., i, :], w[:, i].reshape(shape),
+                             np.uint32(lc.q), np.uint32(lc.qinv_neg))
+         for i, lc in enumerate(ctx.limbs)], axis=-2)
+
+
+@pytest.fixture(params=["ref", "pallas"])
+def backend(request):
+    old = {op: ops.get_backend(op) for op in ops.OPS}
+    ops.set_backend(request.param)
+    yield request.param
+    for op, name in old.items():
+        ops.set_backend(name, op=op)
+
+
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_ntt_parity(n_limbs, backend):
+    ctx = _ctx(n_limbs)
+    rng = np.random.RandomState(10 + n_limbs)
+    x = _rand_limbed(rng, ctx, (5,))
+    fwd = ops.ntt_fwd(x, ctx)
+    np.testing.assert_array_equal(np.asarray(fwd),
+                                  np.asarray(_per_limb_ntt_fwd(x, ctx)))
+    inv = ops.ntt_inv(fwd, ctx)
+    np.testing.assert_array_equal(np.asarray(inv),
+                                  np.asarray(_per_limb_ntt_inv(fwd, ctx)))
+    np.testing.assert_array_equal(np.asarray(inv), np.asarray(x))
+
+
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_mul_add_parity(n_limbs, backend):
+    ctx = _ctx(n_limbs)
+    rng = np.random.RandomState(20 + n_limbs)
+    x, y, z = (_rand_limbed(rng, ctx, (4,)) for _ in range(3))
+    np.testing.assert_array_equal(
+        np.asarray(ops.mul_add(x, y, z, ctx)),
+        np.asarray(_per_limb_mul_add(x, y, z, ctx)))
+
+
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_weighted_sum_parity(n_limbs, backend):
+    ctx = _ctx(n_limbs)
+    rng = np.random.RandomState(30 + n_limbs)
+    cts = _rand_limbed(rng, ctx, (4, 3))
+    w = jnp.asarray(np.stack([rng.randint(0, int(q), size=(4,))
+                              for q in ctx.primes], axis=1).astype(np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.weighted_sum(cts, w, ctx)),
+        np.asarray(_per_limb_weighted_sum(cts, w, ctx)))
+
+
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_weighted_accum_matches_weighted_sum(n_limbs, backend):
+    """Streaming accumulate path == batch weighted_sum, bit-for-bit, for any
+    limb count — the wire/stream ingest invariant."""
+    ctx = _ctx(n_limbs)
+    rng = np.random.RandomState(40 + n_limbs)
+    cts = _rand_limbed(rng, ctx, (3, 2))
+    w = jnp.asarray(np.stack([rng.randint(0, int(q), size=(3,))
+                              for q in ctx.primes], axis=1).astype(np.uint32))
+    batch = ops.weighted_sum(cts, w, ctx)
+    acc = jnp.zeros_like(cts[0])
+    for i in range(cts.shape[0]):
+        acc = ops.weighted_accum(acc, cts[i], w[i], ctx)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(batch))
+
+
+def test_limb_dropped_ciphertext_ops(backend):
+    """Ops on a ciphertext with fewer limbs than the context slice the
+    constant tables to the leading limbs (rescale keeps limb order)."""
+    ctx = _ctx(3)
+    rng = np.random.RandomState(50)
+    x = _rand_limbed(rng, ctx, (4,))
+    for keep in (2, 1):
+        xd = x[..., :keep, :]
+        fwd = ops.ntt_fwd(xd, ctx)
+        np.testing.assert_array_equal(
+            np.asarray(fwd),
+            np.asarray(_per_limb_ntt_fwd(x, ctx))[..., :keep, :])
+        np.testing.assert_array_equal(
+            np.asarray(ops.ntt_inv(fwd, ctx)), np.asarray(xd))
+
+
+def test_encrypt_decrypt_roundtrip_both_backends(backend):
+    ctx = _ctx(2, n_poly=128)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    vals = jnp.asarray(np.linspace(-1, 1, ctx.slots, dtype=np.float32))[None]
+    ct = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(1))
+    out = cipher.decrypt_values(ctx, sk, ct)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals), atol=2e-3)
+
+
+def test_seeded_encrypt_64bit_seed():
+    """a_seed is 64-bit on the wire: the seeded-encrypt graph must use the
+    same full-width PRNG stream as the server-side expand_a_rows."""
+    ctx = _ctx(2, n_poly=128)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(6))
+    vals = jnp.asarray(np.linspace(-0.5, 0.5, ctx.slots,
+                                   dtype=np.float32))[None]
+    coeffs = encoding.encode_jnp(vals, ctx)
+    a_seed = (1 << 33) + 12345
+    ct = cipher.encrypt_coeffs_seeded(ctx, sk, coeffs, jax.random.PRNGKey(7),
+                                      a_seed)
+    np.testing.assert_array_equal(
+        np.asarray(ct.c1), np.asarray(cipher.expand_a(ctx, a_seed, 1)))
+    out = cipher.decrypt_values(ctx, sk, ct)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals), atol=2e-3)
+
+
+def test_backend_parity_end_to_end():
+    """Same keys/inputs produce bit-identical ciphertexts on both backends
+    (the PRNG streams and modular math are backend-independent)."""
+    ctx = _ctx(2, n_poly=128)
+    vals = jnp.asarray(np.linspace(-0.5, 0.5, ctx.slots,
+                                   dtype=np.float32))[None]
+    datas = {}
+    old = ops.get_backend()
+    try:
+        for b in ("ref", "pallas"):
+            ops.set_backend(b)
+            sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(3))
+            ct = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(4))
+            datas[b] = (np.asarray(ct.data),
+                        np.asarray(cipher.decrypt_to_coeffs(ctx, sk, ct)))
+    finally:
+        ops.set_backend(old)
+    np.testing.assert_array_equal(datas["ref"][0], datas["pallas"][0])
+    np.testing.assert_array_equal(datas["ref"][1], datas["pallas"][1])
+
+
+def test_per_op_backend_selection():
+    """The registry flips one op at a time and reports 'mixed'."""
+    ctx = _ctx(2)
+    rng = np.random.RandomState(60)
+    x = _rand_limbed(rng, ctx, (2,))
+    old = {op: ops.get_backend(op) for op in ops.OPS}
+    try:
+        ops.set_backend("ref")
+        a = ops.ntt_fwd(x, ctx)
+        ops.set_backend("pallas", op="ntt_fwd")
+        assert ops.get_backend("ntt_fwd") == "pallas"
+        assert ops.get_backend("mul_add") == "ref"
+        assert ops.get_backend() == "mixed"
+        b = ops.ntt_fwd(x, ctx)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # token changes with the assignment — jitted graphs retrace
+        tok_mixed = ops.backend_token()
+        ops.set_backend("ref")
+        assert ops.backend_token() != tok_mixed
+    finally:
+        for op, name in old.items():
+            ops.set_backend(name, op=op)
+
+
+def test_streaming_ingest_parity_across_backends():
+    """wire.stream accumulate path: fused engine keeps the bit-parity
+    invariant with the batch weighted_sum on both backends."""
+    from repro.core.secure_agg import ProtectedUpdate
+    from repro.wire import stream as ws
+
+    ctx = _ctx(2, n_poly=128)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(5))
+    rng = np.random.RandomState(70)
+    n_clients = 3
+    upds = []
+    for i in range(n_clients):
+        vals = jnp.asarray(rng.randn(1, ctx.slots).astype(np.float32)) * 0.1
+        ct = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(80 + i))
+        upds.append(ProtectedUpdate(
+            ct=ct, plain=jnp.zeros((0,), jnp.float32)))
+    w = [1.0 / n_clients] * n_clients
+    stacked = cipher.Ciphertext(
+        data=jnp.stack([u.ct.data for u in upds]), scale=upds[0].ct.scale)
+    old = ops.get_backend()
+    datas = {}
+    try:
+        for b in ("ref", "pallas"):
+            ops.set_backend(b)
+            batch = cipher.weighted_sum(ctx, stacked, w)
+            ingest = ws.StreamIngest(ctx)
+            for u, wi in zip(upds, w):
+                ingest.ingest_update(u, wi)
+            streamed = ingest.finalize()
+            np.testing.assert_array_equal(np.asarray(streamed.ct.data),
+                                          np.asarray(batch.data))
+            datas[b] = np.asarray(batch.data)
+    finally:
+        ops.set_backend(old)
+    np.testing.assert_array_equal(datas["ref"], datas["pallas"])

@@ -87,52 +87,70 @@ def test_ntt_roundtrip_exact(n_poly, batch):
 
 
 # ---------------------------------------------------------------------------
-# Pallas (interpret mode) vs ref: exact equality sweeps
+# Pallas limb-grid kernels (interpret mode) vs fused ref: exact equality
 # ---------------------------------------------------------------------------
+
+
+def _rand_limbed(rng, ctx, shape):
+    return jnp.asarray(ref.rand_limbed_np(rng, ctx, shape))
 
 
 @pytest.mark.parametrize("n_poly", [64, 256, 1024])
 @pytest.mark.parametrize("batch", [1, 5, 8, 11])
 def test_pallas_ntt_exact(n_poly, batch):
     ctx = ckks_params.make_test_context(n_poly=n_poly, n_limbs=2)
-    lc = ctx.limbs[0]
+    t = ctx.tables
     rng = np.random.RandomState(5)
-    x = jnp.asarray(rng.randint(0, lc.q, size=(batch, n_poly)).astype(np.uint32))
-    tw = jnp.asarray(lc.psi_rev_mont)
-    a = ntt.ntt_fwd(x, tw, lc.q, lc.qinv_neg, interpret=True)
-    b = ref.ntt_fwd(x, tw, np.uint32(lc.q), np.uint32(lc.qinv_neg))
+    x = _rand_limbed(rng, ctx, (batch,))
+    a = ntt.ntt_fwd_fused(x, t.psi_rev_mont, t.qs, t.qinv_negs,
+                          interpret=True)
+    b = ref.ntt_fwd_fused(x, t.psi_rev_mont, t.qs, t.qinv_negs)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    twi = jnp.asarray(lc.psi_inv_rev_mont)
-    ai = ntt.ntt_inv(a, twi, int(lc.n_inv_mont), lc.q, lc.qinv_neg,
-                     interpret=True)
-    bi = ref.ntt_inv(b, twi, np.asarray(lc.n_inv_mont), np.uint32(lc.q),
-                     np.uint32(lc.qinv_neg))
+    ai = ntt.ntt_inv_fused(a, t.psi_inv_rev_mont, t.n_inv_monts, t.qs,
+                           t.qinv_negs, interpret=True)
+    bi = ref.ntt_inv_fused(b, t.psi_inv_rev_mont, t.n_inv_monts, t.qs,
+                           t.qinv_negs)
     np.testing.assert_array_equal(np.asarray(ai), np.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(ai), np.asarray(x))
 
 
 @pytest.mark.parametrize("batch,n", [(1, 64), (7, 256), (16, 512)])
 def test_pallas_mul_add_exact(batch, n):
     ctx = ckks_params.make_test_context(n_poly=max(n, 64), n_limbs=2)
-    lc = ctx.limbs[0]
+    t = ctx.tables
     rng = np.random.RandomState(6)
-    x, y, z = (jnp.asarray(rng.randint(0, lc.q, size=(batch, n)).astype(np.uint32))
-               for _ in range(3))
-    a = pointwise.mul_add(x, y, z, lc.q, lc.qinv_neg, interpret=True)
-    b = ref.mul_add(x, y, z, np.uint32(lc.q), np.uint32(lc.qinv_neg))
+    x, y, z = (_rand_limbed(rng, ctx, (batch,)) for _ in range(3))
+    a = pointwise.mul_add_fused(x, y, z, t.qs, t.qinv_negs, interpret=True)
+    b = ref.mul_add_fused(x, y, z, t.qs, t.qinv_negs)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @pytest.mark.parametrize("clients", [1, 2, 5, 16])
 def test_pallas_he_agg_exact(clients):
     ctx = ckks_params.make_test_context(n_poly=256, n_limbs=2)
-    lc = ctx.limbs[0]
+    t = ctx.tables
     rng = np.random.RandomState(7)
-    cts = jnp.asarray(rng.randint(0, lc.q, size=(clients, 6, 256))
-                      .astype(np.uint32))
-    w = jnp.asarray(rng.randint(0, lc.q, size=(clients,)).astype(np.uint32))
-    a = he_agg.he_weighted_sum(cts, w, lc.q, lc.qinv_neg, interpret=True)
-    b = ref.he_weighted_sum(cts, w[:, None, None], np.uint32(lc.q),
-                            np.uint32(lc.qinv_neg))
+    cts = _rand_limbed(rng, ctx, (clients, 6))
+    w = jnp.asarray(np.stack([rng.randint(0, int(q), size=(clients,))
+                              for q in ctx.primes], axis=1).astype(np.uint32))
+    a = he_agg.he_weighted_sum_fused(cts, w, t.qs, t.qinv_negs,
+                                     interpret=True)
+    b = ref.he_weighted_sum_fused(cts, w, t.qs, t.qinv_negs)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("batch", [1, 6])
+def test_pallas_he_accum_exact(batch):
+    ctx = ckks_params.make_test_context(n_poly=128, n_limbs=2)
+    t = ctx.tables
+    rng = np.random.RandomState(9)
+    acc = _rand_limbed(rng, ctx, (batch,))
+    ct = _rand_limbed(rng, ctx, (batch,))
+    w = jnp.asarray(np.asarray([rng.randint(0, int(q)) for q in ctx.primes],
+                               dtype=np.uint32))
+    a = he_agg.he_weighted_accum_fused(acc, ct, w, t.qs, t.qinv_negs,
+                                       interpret=True)
+    b = ref.he_weighted_accum_fused(acc, ct, w, t.qs, t.qinv_negs)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
