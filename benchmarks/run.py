@@ -1,13 +1,23 @@
 """Benchmark harness: one entry per paper table/figure + kernel
 microbenchmarks + the roofline summary table from dry-run artifacts.
 
-  PYTHONPATH=src python -m benchmarks.run             # everything
-  PYTHONPATH=src python -m benchmarks.run table4 fig8 # subset
+  PYTHONPATH=src python -m benchmarks.run               # everything
+  PYTHONPATH=src python -m benchmarks.run table4 fig8   # subset
+  PYTHONPATH=src python -m benchmarks.run --help        # modes + env vars
+
+Environment (full list in README.md "Environment variables & flags"):
+  REPRO_HE_BACKEND=ref|pallas   backend for every HE op (default ref)
+  XLA_FLAGS=--xla_force_host_platform_device_count=<n>
+      simulate <n> devices on one host; must be set before the first jax
+      import.  `agg-sharded` spawns its own subprocess per device count,
+      so it needs no flags from the caller.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -30,39 +40,46 @@ def _fmt(v):
 
 
 def bench_table4():
+    """Paper Table 4: fully-encrypted aggregation vs plaintext."""
     from benchmarks import paper_tables
     _rows("Table 4: fully-encrypted aggregation vs plaintext",
           paper_tables.table4())
 
 
 def bench_table6():
+    """Paper Table 6: crypto parameter sweep."""
     from benchmarks import paper_tables
     _rows("Table 6: crypto parameter sweep", paper_tables.table6())
 
 
 def bench_table7():
+    """Paper Table 7: selective-encryption ratio sweep (ViT-sized)."""
     from benchmarks import paper_tables
     _rows("Table 7: selective-encryption ratio sweep (ViT-sized)",
           paper_tables.table7())
 
 
 def bench_fig7():
+    """Paper Figure 7: overhead vs selection ratio."""
     from benchmarks import paper_tables
     _rows("Figure 7: overhead vs selection ratio", paper_tables.fig7())
 
 
 def bench_fig8():
+    """Paper Figure 8: training-cycle decomposition (SAR bandwidth)."""
     from benchmarks import paper_tables
     _rows("Figure 8: training-cycle decomposition (SAR bandwidth)",
           paper_tables.fig8())
 
 
 def bench_fig14a():
+    """Paper Figure 14a: aggregation cost vs clients."""
     from benchmarks import paper_tables
     _rows("Figure 14a: aggregation cost vs clients", paper_tables.fig14a())
 
 
 def bench_dp():
+    """Remarks 3.12-3.14: privacy-budget laws."""
     from benchmarks import paper_tables
     _rows("Remarks 3.12-3.14: privacy-budget laws",
           paper_tables.dp_advantage())
@@ -277,6 +294,52 @@ def bench_wire():
           f"naive all-encrypted = {naive} B)", rows)
 
 
+def bench_agg_sharded():
+    """Multi-chip sharded HE aggregation vs the single-device fused engine.
+
+    jax locks the device count at first init, so each point runs as a
+    subprocess of benchmarks/agg_sharded.py with
+    XLA_FLAGS=--xla_force_host_platform_device_count=<n>.  Records sharded
+    vs single-device weighted_sum, the streaming-ingest flush (one
+    chunk-batched accumulate launch per update), and bit-parity flags.
+    Emits BENCH_agg_sharded.json (repo root).
+    """
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    rows, per_dev = [], {}
+    for ndev in (1, 2, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
+        env["PYTHONPATH"] = os.path.join(root, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.agg_sharded",
+             "--devices", str(ndev)],
+            cwd=root, env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            # a partial artifact would silently shrink the README table —
+            # refuse to write anything unless every point succeeded
+            raise RuntimeError(
+                f"agg-sharded worker ndev={ndev} failed "
+                f"(BENCH_agg_sharded.json left untouched):\n{proc.stderr}")
+        r = json.loads(proc.stdout.strip().splitlines()[-1])
+        per_dev[str(ndev)] = r
+        rows.append({
+            "devices": ndev, "mesh": str(r["mesh"]),
+            "ws_single_ms": r["weighted_sum_single_ms"],
+            "ws_sharded_ms": r["weighted_sum_sharded_ms"],
+            "parity": r["sharded_parity"],
+            "ingest_ms": r["stream_ingest_single_ms"],
+            "ingest_sharded_ms": r["stream_ingest_sharded_ms"],
+            "launches_per_update": r["launches_per_update"],
+        })
+    results = {"bench": "agg_sharded", "per_devices": per_dev}
+    out_path = os.path.join(root, "BENCH_agg_sharded.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    _rows("Sharded HE aggregation: 1/2/8 host devices vs single-device "
+          "fused baseline (BENCH_agg_sharded.json written)", rows)
+
+
 def bench_roofline():
     """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
     art_dir = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -311,12 +374,36 @@ ALL = {
     "kernels": bench_kernels,
     "he": bench_he,
     "wire": bench_wire,
+    "agg-sharded": bench_agg_sharded,
     "roofline": bench_roofline,
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(ALL)
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        description="FedML-HE reproduction benchmark harness.",
+        epilog="modes:\n" + "\n".join(
+            f"  {name:<12} "
+            + ((fn.__doc__ or "").strip().splitlines() or [""])[0]
+            for name, fn in ALL.items())
+        + "\n\nenvironment (canonical list: README.md 'Environment "
+          "variables & flags'):\n"
+          "  REPRO_HE_BACKEND=ref|pallas\n"
+          "      backend for every HE op (default ref; pallas runs the\n"
+          "      kernels in interpret mode on CPU)\n"
+          "  XLA_FLAGS=--xla_force_host_platform_device_count=<n>\n"
+          "      simulate <n> host devices; must be set before the first\n"
+          "      jax import ('agg-sharded' manages this itself via\n"
+          "      subprocess workers)")
+    ap.add_argument("modes", nargs="*", metavar="mode",
+                    help="benchmark modes to run (default: all)")
+    args = ap.parse_args()
+    names = args.modes or list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        ap.error(f"unknown mode(s) {unknown}; choose from {list(ALL)}")
     for n in names:
         t0 = time.time()
         ALL[n]()

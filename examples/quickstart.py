@@ -79,7 +79,10 @@ def main():
         jax.tree_util.tree_leaves(rec_wire),
         jax.tree_util.tree_leaves(expect)))
     assert err_w < 1e-2, err_w
-    assert ingest.peak_chunk_buffers == 1    # O(1)-in-clients server memory
+    # O(1)-in-clients server memory: at most one update's ready chunks
+    # resident, folded by ONE accumulate launch per client update
+    assert ingest.peak_chunk_buffers == agg.part.n_chunks
+    assert ingest.accum_launches == ingest.clients_ingested
 
     s = ledger.round_summary(0)
     comp = ledger.compression_summary(ctx, agg.part, 0)

@@ -52,32 +52,46 @@ class Ciphertext:
 # ---------------------------------------------------------------------------
 # sampling helpers (all jittable)
 # ---------------------------------------------------------------------------
+#
+# Each sampler takes the stacked u32[L] prime table explicitly (not a ctx)
+# so the sharded engine (core/ckks/sharded.py) can hand in a per-shard limb
+# slice: the random draw's SHAPE never involves L for the ternary/gaussian
+# samplers, so the PRNG stream — and therefore the ciphertext — is
+# bit-identical however the limb axis is sharded.
 
-def _ternary_residues(key, shape, ctx: CkksContext):
+
+def _ternary_residues(key, shape, qs):
     """Uniform ternary {-1,0,1} -> per-limb residues u32[..., L, N].
 
-    One draw of ternary symbols, broadcast against the u32[L] prime table —
-    the limb axis is never looped."""
+    One draw of ternary symbols over `shape`, broadcast against the u32[L]
+    prime table `qs` — the limb axis is never looped (and never drawn)."""
     t = jax.random.randint(key, shape, 0, 3)[..., None, :]  # 0,1,2 ~ {-1,0,1}
-    qm1 = (ctx.tables.qs - np.uint32(1))[:, None]           # [L, 1]
+    qm1 = (jnp.asarray(qs) - np.uint32(1))[:, None]         # [L, 1]
     r = jnp.where(t == 0, qm1,
                   jnp.where(t == 1, np.uint32(0), np.uint32(1)))
     return r.astype(jnp.uint32)  # [..., L, N]
 
 
-def _gaussian_residues(key, shape, ctx: CkksContext, sigma: float | None = None):
-    sigma = float(sigma if sigma is not None else ctx.error_sigma)
-    e = jnp.rint(sigma * jax.random.normal(key, shape)).astype(jnp.int32)
+def _gaussian_residues(key, shape, qs, sigma: float):
+    """Discrete-gaussian residues u32[..., L, N]: one normal draw over
+    `shape`, centered-reduced against each limb prime."""
+    e = jnp.rint(float(sigma) * jax.random.normal(key, shape)) \
+        .astype(jnp.int32)
     return _ref.mod_reduce_centered(e[..., None, :],
-                                    ctx.tables.qs[:, None])  # [..., L, N]
+                                    jnp.asarray(qs)[:, None])  # [..., L, N]
 
 
-def _uniform_residues(key, shape, ctx: CkksContext):
-    """Uniform residues u32[..., L, N]: one randint draw with the per-limb
-    prime table as broadcast maxval."""
-    full = shape[:-1] + (ctx.n_limbs, shape[-1])
-    maxval = jnp.asarray(ctx.tables.qs, dtype=jnp.uint32)[:, None]
-    return jax.random.randint(key, full, jnp.uint32(0), maxval,
+def _uniform_residues(key, shape, qs):
+    """Uniform residues u32[..., L, N]: ONE randint draw of the full
+    [..., L, N] block with the per-limb prime table as broadcast maxval.
+
+    Unlike the other samplers, the draw shape includes L, so the stream
+    depends on the limb count: sharded keygen draws the FULL table on every
+    shard and slices its local limbs (see sharded.py) to stay bit-identical.
+    """
+    qs = jnp.asarray(qs, dtype=jnp.uint32)
+    full = shape[:-1] + (qs.shape[0], shape[-1])
+    return jax.random.randint(key, full, jnp.uint32(0), qs[:, None],
                               dtype=jnp.uint32)
 
 
@@ -89,10 +103,11 @@ def _uniform_residues(key, shape, ctx: CkksContext):
 def _keygen_graph(ctx: CkksContext, token, key):
     k_s, k_a, k_e = jax.random.split(key, 3)
     n = ctx.n_poly
-    s = ops.ntt_fwd(_ternary_residues(k_s, (n,), ctx), ctx)       # [L, N]
+    qs = ctx.tables.qs
+    s = ops.ntt_fwd(_ternary_residues(k_s, (n,), qs), ctx)        # [L, N]
     s_mont = ops.to_mont(s, ctx)
-    a = _uniform_residues(k_a, (n,), ctx)                         # NTT domain
-    e = ops.ntt_fwd(_gaussian_residues(k_e, (n,), ctx), ctx)
+    a = _uniform_residues(k_a, (n,), qs)                          # NTT domain
+    e = ops.ntt_fwd(_gaussian_residues(k_e, (n,), qs, ctx.error_sigma), ctx)
     a_s = ops.mont_mul(a, s_mont, ctx)
     pk0 = ops.mod_add(ops.mod_neg(a_s, ctx), e, ctx)
     return s_mont, ops.to_mont(pk0, ctx), ops.to_mont(a, ctx)
@@ -112,24 +127,54 @@ def keygen(ctx: CkksContext, key) -> tuple[dict, dict]:
 # encrypt / decrypt
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("ctx", "token"))
-def _encrypt_graph(ctx: CkksContext, token, pk0_mont, pk1_mont, m_coeff, key):
+def _encrypt_body(ctx: CkksContext, pk0_mont, pk1_mont, m_coeff, key):
+    """Shared trace of the public-key encrypt graph (m_coeff already
+    coefficient-domain residues)."""
     b = m_coeff.shape[0]
     n = ctx.n_poly
+    qs = ctx.tables.qs
     k_u, k_e0, k_e1 = jax.random.split(key, 3)
     m = ops.ntt_fwd(m_coeff, ctx)
-    u = ops.ntt_fwd(_ternary_residues(k_u, (b, n), ctx), ctx)
-    e0 = ops.ntt_fwd(_gaussian_residues(k_e0, (b, n), ctx), ctx)
-    e1 = ops.ntt_fwd(_gaussian_residues(k_e1, (b, n), ctx), ctx)
+    u = ops.ntt_fwd(_ternary_residues(k_u, (b, n), qs), ctx)
+    e0 = ops.ntt_fwd(_gaussian_residues(k_e0, (b, n), qs, ctx.error_sigma),
+                     ctx)
+    e1 = ops.ntt_fwd(_gaussian_residues(k_e1, (b, n), qs, ctx.error_sigma),
+                     ctx)
     c0 = ops.mul_add(u, pk0_mont[None], ops.mod_add(e0, m, ctx), ctx)
     c1 = ops.mul_add(u, pk1_mont[None], e1, ctx)
     return jnp.stack([c0, c1], axis=-2)
 
 
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _encrypt_graph(ctx: CkksContext, token, pk0_mont, pk1_mont, m_coeff, key):
+    return _encrypt_body(ctx, pk0_mont, pk1_mont, m_coeff, key)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _encrypt_values_graph(ctx: CkksContext, token, pk0_mont, pk1_mont,
+                          values, key):
+    """Encode (length-2N FFT) + encrypt as ONE jitted dispatch: a client
+    update goes weights -> ciphertext without leaving the graph."""
+    return _encrypt_body(ctx, pk0_mont, pk1_mont,
+                         encoding.encode_jnp(values, ctx), key)
+
+
 def encrypt_coeffs(ctx: CkksContext, pk: dict, m_coeff, key,
                    scale: float | None = None) -> Ciphertext:
-    """m_coeff: u32[B, L, N] coefficient-domain residues (from encode).
-    Sampling, NTTs and the two mul_adds run as one jitted graph."""
+    """Public-key encryption of pre-encoded residues.
+
+    Args:
+        ctx: CkksContext.
+        pk: {"pk0_mont", "pk1_mont": u32[L, N]} public key (Montgomery,
+            NTT domain).
+        m_coeff: u32[B, L, N] coefficient-domain residues (from encode).
+        key: jax PRNG key for the (u, e0, e1) draws.
+        scale: encoding scale of m_coeff (default ctx.delta).
+
+    Returns:
+        Ciphertext with data u32[B, L, 2, N]; sampling, NTTs and the two
+        mul_adds run as one jitted graph.
+    """
     scale = float(scale if scale is not None else ctx.delta)
     data = _encrypt_graph(ctx, ops.backend_token(), pk["pk0_mont"],
                           pk["pk1_mont"], m_coeff, key)
@@ -137,8 +182,14 @@ def encrypt_coeffs(ctx: CkksContext, pk: dict, m_coeff, key,
 
 
 def encrypt_values(ctx: CkksContext, pk: dict, values, key) -> Ciphertext:
-    """values: f32[B, slots] -> fresh ciphertext (jnp encode path)."""
-    return encrypt_coeffs(ctx, pk, encoding.encode_jnp(values, ctx), key)
+    """values: f32[B, slots] -> fresh ciphertext.
+
+    The canonical-embedding encode FFT is folded into the same jitted
+    graph as the encrypt sampling/NTTs — one dispatch end to end.
+    """
+    data = _encrypt_values_graph(ctx, ops.backend_token(), pk["pk0_mont"],
+                                 pk["pk1_mont"], values, key)
+    return Ciphertext(data=data, scale=float(ctx.delta))
 
 
 def expand_a_rows(ctx: CkksContext, a_seed: int, start: int, count: int):
@@ -154,7 +205,7 @@ def expand_a_rows(ctx: CkksContext, a_seed: int, start: int, count: int):
     keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
         jnp.arange(start, start + count))
     return jax.vmap(
-        lambda k: _uniform_residues(k, (ctx.n_poly,), ctx))(keys)
+        lambda k: _uniform_residues(k, (ctx.n_poly,), ctx.tables.qs))(keys)
     # [count, L, N]
 
 
@@ -185,15 +236,43 @@ def encrypt_coeffs_seeded(ctx: CkksContext, sk: dict, m_coeff, key,
 @functools.partial(jax.jit, static_argnames=("ctx", "token"))
 def _encrypt_seeded_graph(ctx: CkksContext, token, s_mont, m_coeff, key,
                           a_base):
+    return _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base)
+
+
+def _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base):
+    """Shared trace of the seeded secret-key encrypt graph."""
     b = m_coeff.shape[0]
     n = ctx.n_poly
+    qs = ctx.tables.qs
     m = ops.ntt_fwd(m_coeff, ctx)
     keys = jax.vmap(lambda i: jax.random.fold_in(a_base, i))(jnp.arange(b))
-    a = jax.vmap(lambda k: _uniform_residues(k, (n,), ctx))(keys)  # [B, L, N]
-    e = ops.ntt_fwd(_gaussian_residues(key, (b, n), ctx), ctx)
+    a = jax.vmap(lambda k: _uniform_residues(k, (n,), qs))(keys)  # [B, L, N]
+    e = ops.ntt_fwd(_gaussian_residues(key, (b, n), qs, ctx.error_sigma),
+                    ctx)
     a_s = ops.mont_mul(a, s_mont[None], ctx)
     c0 = ops.mod_add(ops.mod_neg(a_s, ctx), ops.mod_add(e, m, ctx), ctx)
     return jnp.stack([c0, a], axis=-2)
+
+
+@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+def _encrypt_seeded_values_graph(ctx: CkksContext, token, s_mont, values,
+                                 key, a_base):
+    return _seeded_body_from_coeffs(ctx, s_mont,
+                                    encoding.encode_jnp(values, ctx), key,
+                                    a_base)
+
+
+def encrypt_values_seeded(ctx: CkksContext, sk: dict, values, key,
+                          a_seed: int) -> Ciphertext:
+    """f32[B, slots] -> seeded secret-key ciphertext in ONE dispatch.
+
+    Same wire convention as encrypt_coeffs_seeded (c1 = PRG(a_seed)); the
+    encode FFT runs inside the jitted graph.
+    """
+    a_base = jax.random.PRNGKey(int(a_seed))
+    data = _encrypt_seeded_values_graph(ctx, ops.backend_token(),
+                                        sk["s_mont"], values, key, a_base)
+    return Ciphertext(data=data, scale=float(ctx.delta))
 
 
 def drop_limbs(ctx: CkksContext, ct: Ciphertext, keep: int) -> Ciphertext:

@@ -217,10 +217,17 @@ def _stack_limb_tables(limbs: "tuple[LimbContext, ...]") -> LimbTables:
 class CkksContext:
     """RNS-CKKS context, depth-1 chain (the paper's setting).
 
-    Ciphertext tensor layout everywhere: u32[..., n_limbs, 2, N] in
-    (bit-reversed) NTT domain.  `delta` is the encoding scale; after the one
-    ct x plain weighting the scale is delta**2 and we *lazily* skip rescale
-    (divide at decode) — see DESIGN.md §3.
+    Shape conventions (shared by every module downstream):
+      * ciphertext tensors: u32[..., L, 2, N] in bit-reversed NTT domain
+        (L = n_limbs RNS limbs, 2 polynomial components, ring degree N);
+      * kernel-level ops see limbs at axis -2: u32[..., L, N];
+      * per-limb constants: stacked u32[L] / u32[L, N] tables (`tables`).
+
+    `delta` is the encoding scale; after the one ct x plain weighting the
+    scale is delta**2 and we *lazily* skip rescale (divide at decode) —
+    see DESIGN.md §3.  Frozen and hashable: a context is the static jit
+    key of every cached crypto graph, and the sharded engine
+    (core/ckks/sharded.py) shards `tables` along its mesh's model axis.
     """
 
     n_poly: int                 # ring degree N (slots = N/2)

@@ -43,15 +43,15 @@ def threshold_keygen(ctx: CkksContext, key, n_parties: int
     """Interactive additive keygen. Returns (parties, joint pk)."""
     n = ctx.n_poly
     k_a, k_rest = jax.random.split(key)
-    a = cipher._uniform_residues(k_a, (n,), ctx)      # common reference poly
+    a = cipher._uniform_residues(k_a, (n,), ctx.tables.qs)      # common reference poly
     a_mont = ops.to_mont(a, ctx)
     parties = []
     b_sum = None
     for i in range(n_parties):
         k_s, k_e = jax.random.split(jax.random.fold_in(k_rest, i))
-        s_i = ops.ntt_fwd(cipher._ternary_residues(k_s, (n,), ctx), ctx)
+        s_i = ops.ntt_fwd(cipher._ternary_residues(k_s, (n,), ctx.tables.qs), ctx)
         s_i_mont = ops.to_mont(s_i, ctx)
-        e_i = ops.ntt_fwd(cipher._gaussian_residues(k_e, (n,), ctx), ctx)
+        e_i = ops.ntt_fwd(cipher._gaussian_residues(k_e, (n,), ctx.tables.qs, ctx.error_sigma), ctx)
         b_i = ops.mod_add(ops.mod_neg(ops.mont_mul(a, s_i_mont, ctx), ctx),
                           e_i, ctx)
         b_sum = b_i if b_sum is None else ops.mod_add(b_sum, b_i, ctx)
@@ -65,7 +65,7 @@ def partial_decrypt(ctx: CkksContext, party: ThresholdParty, ct: Ciphertext,
     """d_i = c1 (*) s_i + e_smudge  (NTT domain)."""
     b = ct.data.shape[0]
     e = ops.ntt_fwd(
-        cipher._gaussian_residues(key, (b, ctx.n_poly), ctx, sigma=smudge_sigma),
+        cipher._gaussian_residues(key, (b, ctx.n_poly), ctx.tables.qs, smudge_sigma),
         ctx)
     return ops.mul_add(ct.c1, party.s_mont[None], e, ctx)
 
@@ -93,7 +93,7 @@ def shamir_share_secret(ctx: CkksContext, sk: dict, key, n_parties: int,
     """Split sk into Shamir shares over each limb field."""
     s = ops.from_mont(sk["s_mont"], ctx)     # [L, N] normal form
     coeff_keys = jax.random.split(key, threshold - 1)
-    coeffs = [cipher._uniform_residues(k, (ctx.n_poly,), ctx)
+    coeffs = [cipher._uniform_residues(k, (ctx.n_poly,), ctx.tables.qs)
               for k in coeff_keys]           # each [L, N]
     parties = []
     for i in range(n_parties):
@@ -135,6 +135,6 @@ def shamir_partial_decrypt(ctx: CkksContext, party: ShamirParty,
     lam_share_mont = ops.to_mont(lam_share, ctx)
     b = ct.data.shape[0]
     e = ops.ntt_fwd(
-        cipher._gaussian_residues(key, (b, ctx.n_poly), ctx, sigma=smudge_sigma),
+        cipher._gaussian_residues(key, (b, ctx.n_poly), ctx.tables.qs, smudge_sigma),
         ctx)
     return ops.mul_add(ct.c1, lam_share_mont[None], e, ctx)

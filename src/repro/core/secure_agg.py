@@ -95,8 +95,9 @@ class SelectiveHEAggregator:
     def client_protect_vec(self, vec, pk: dict, key) -> ProtectedUpdate:
         enc_vals, plain = packing.split_by_mask(vec, self.part)
         k_enc, k_dp = jax.random.split(key)
-        coeffs = encoding.encode_jnp(enc_vals, self.ctx)
-        ct = cipher.encrypt_coeffs(self.ctx, pk, coeffs, k_enc)
+        # encode FFT + encrypt run as ONE jitted dispatch (weights ->
+        # ciphertext without leaving the graph)
+        ct = cipher.encrypt_values(self.ctx, pk, enc_vals, k_enc)
         if self.cfg.dp_b > 0:
             plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
         return ProtectedUpdate(ct=ct, plain=plain)
@@ -110,8 +111,8 @@ class SelectiveHEAggregator:
         vec, _ = packing.flatten_params(params)
         enc_vals, plain = packing.split_by_mask(vec, self.part)
         k_enc, k_dp = jax.random.split(key)
-        coeffs = encoding.encode_jnp(enc_vals, self.ctx)
-        ct = cipher.encrypt_coeffs_seeded(self.ctx, sk, coeffs, k_enc, a_seed)
+        ct = cipher.encrypt_values_seeded(self.ctx, sk, enc_vals, k_enc,
+                                          a_seed)
         if self.cfg.dp_b > 0:
             plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
         return ProtectedUpdate(ct=ct, plain=plain)
@@ -132,12 +133,28 @@ class SelectiveHEAggregator:
     # -- server side ---------------------------------------------------------
 
     def server_aggregate(self, updates: Sequence[ProtectedUpdate],
-                         weights: Sequence[float]) -> ProtectedUpdate:
-        """sum_i alpha_i [[enc_i]]  +  sum_i alpha_i plain_i."""
+                         weights: Sequence[float],
+                         sharded=None) -> ProtectedUpdate:
+        """sum_i alpha_i [[enc_i]]  +  sum_i alpha_i plain_i.
+
+        Args:
+            updates: one ProtectedUpdate per received client.
+            weights: FedAvg weights alpha_i (python floats).
+            sharded: optional core.ckks.sharded.ShardedHe; when given the
+                HE aggregation runs sharded over its mesh (ciphertext
+                chunks -> data axis, RNS limbs -> model axis) with
+                bit-identical results to the single-device path.
+
+        Returns:
+            The aggregated ProtectedUpdate (ct scale = in_scale * delta).
+        """
         cts = Ciphertext(
             data=jnp.stack([u.ct.data for u in updates]),
             scale=updates[0].ct.scale)
-        ct_glob = cipher.weighted_sum(self.ctx, cts, list(weights))
+        if sharded is not None:
+            ct_glob = sharded.weighted_sum(cts, list(weights))
+        else:
+            ct_glob = cipher.weighted_sum(self.ctx, cts, list(weights))
         w = jnp.asarray(np.asarray(weights, dtype=np.float32))
         plain_glob = jnp.einsum("c,cp->p",
                                 w, jnp.stack([u.plain for u in updates]))

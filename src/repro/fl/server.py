@@ -32,11 +32,23 @@ class ReceivedUpdate:
 class FLServer:
     def __init__(self, aggregator: SelectiveHEAggregator,
                  buffer_size: int = 0, staleness_half_life: float = 4.0,
-                 ledger: wire_budget.BandwidthLedger | None = None):
+                 ledger: wire_budget.BandwidthLedger | None = None,
+                 sharded=None):
+        """Args:
+            aggregator: the SelectiveHEAggregator (public ctx + mask).
+            buffer_size: 0 => synchronous; >0 => async FedBuff buffer.
+            staleness_half_life: async staleness discount half-life.
+            ledger: optional BandwidthLedger for measured uplink bytes.
+            sharded: optional core.ckks.sharded.ShardedHe engine; batch and
+                streaming HE aggregation then run sharded over its mesh
+                (chunks -> data axis, limbs -> model axis), bit-identical
+                to the single-device path.
+        """
         self.agg = aggregator
         self.buffer_size = buffer_size            # 0 => synchronous
         self.staleness_half_life = staleness_half_life
         self.ledger = ledger
+        self.sharded = sharded
         self._buffer: list[ReceivedUpdate] = []
         self.rounds_aggregated = 0
         self.last_ingest: wire_stream.StreamIngest | None = None
@@ -49,7 +61,8 @@ class FLServer:
         weights = np.asarray([r.n_samples for r in received], dtype=np.float64)
         weights = weights / weights.sum()
         out = self.agg.server_aggregate([r.update for r in received],
-                                        [float(w) for w in weights])
+                                        [float(w) for w in weights],
+                                        sharded=self.sharded)
         self.rounds_aggregated += 1
         return out
 
@@ -68,7 +81,7 @@ class FLServer:
         metas = [wire_stream.peek_update_meta(b) for b in blobs]
         weights = np.asarray([m.n_samples for m in metas], dtype=np.float64)
         weights = weights / weights.sum()
-        ingest = wire_stream.StreamIngest(self.agg.ctx)
+        ingest = wire_stream.StreamIngest(self.agg.ctx, sharded=self.sharded)
         for blob, meta, w in zip(blobs, metas, weights):
             ingest.ingest(blob, float(w))
             if self.ledger is not None:
@@ -96,7 +109,8 @@ class FLServer:
         ws = np.asarray(ws, dtype=np.float64)
         ws = ws / ws.sum()
         out = self.agg.server_aggregate([u.update for u in self._buffer],
-                                        [float(w) for w in ws])
+                                        [float(w) for w in ws],
+                                        sharded=self.sharded)
         self._buffer.clear()
         self.rounds_aggregated += 1
         return out

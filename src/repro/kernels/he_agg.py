@@ -134,3 +134,67 @@ def he_weighted_accum_fused(acc, ct, w_mont, qs, qinv_negs, *,
     b = ct2.shape[0]
     call = _build_accum(l, n, min(block_b, b), interpret)
     return call(ct2, acc2, w_mont, qs, qinv_negs).reshape(batch + (l, n))
+
+
+# ---------------------------------------------------------------------------
+# chunk-batched variant: the whole ready-chunk buffer in ONE launch
+# ---------------------------------------------------------------------------
+#
+# The per-chunk accumulate above still costs one kernel launch per arriving
+# ciphertext chunk — at n_chunks per update that makes the server's flush
+# latency launch-bound, not bandwidth-bound.  This kernel folds a whole
+# batch of ready chunks at once:  acc[k] += w[k] (*) ct[k]  with a PER-ROW
+# weight table u32[K, L] (rows of one flush may belong to different
+# clients), grid (L, ceil(K / block_k)).  The modular arithmetic per
+# (row, limb, coefficient) is identical to the per-chunk kernel, so a
+# flush stays bit-for-bit equal to folding its rows one at a time.
+
+
+def _accum_chunks_body(ct_ref, acc_ref, w_ref, q_ref, qinv_ref, o_ref):
+    q = q_ref[0]
+    qinv_neg = qinv_ref[0]
+    ct = ct_ref[:, 0, :]                       # [block_k, M]
+    w = w_ref[:, 0][:, None]                   # [block_k, 1] per-row weight
+    term = _ref.mont_mul(ct, jnp.broadcast_to(w, ct.shape), q, qinv_neg)
+    o_ref[:, 0, :] = _ref.mod_add(acc_ref[:, 0, :], term, q)
+
+
+@functools.lru_cache(maxsize=128)
+def _build_accum_chunks(l: int, m: int, block_k: int, interpret: bool):
+    tile = pl.BlockSpec((block_k, 1, m), lambda li, ki: (ki, li, 0))
+    wspec = pl.BlockSpec((block_k, 1), lambda li, ki: (ki, li))
+    scalar = pl.BlockSpec((1,), lambda li, ki: (li,))
+
+    def call(ct, acc, w_mont, qs, qinv_negs):
+        k = ct.shape[0]
+        return pl.pallas_call(
+            _accum_chunks_body,
+            grid=(l, pl.cdiv(k, block_k)),
+            in_specs=[tile, tile, wspec, scalar, scalar],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((k, l, m), jnp.uint32),
+            interpret=interpret,
+        )(ct, acc, w_mont, qs, qinv_negs)
+
+    return call
+
+
+def he_weighted_accum_chunks_fused(acc, cts, w_mont, qs, qinv_negs, *,
+                                   block_k: int = 4, interpret: bool = True):
+    """acc[k] + w[k] (*) ct[k] mod q_l for every row k, one pallas_call.
+
+    acc, cts: u32[K, ..., L, N]; w_mont: u32[K, L] per-row Montgomery
+    weights broadcast over the middle (...) dims; qs, qinv_negs: u32[L].
+    """
+    k, l, n = cts.shape[0], cts.shape[-2], cts.shape[-1]
+    mid = cts.shape[1:-2]
+    # [K, ..., L, N] -> [K, L, ..., N] -> [K, L, M]: every row owns a
+    # contiguous M-wide stripe per limb, so the per-row weight is constant
+    # within a tile row.
+    ct2 = jnp.moveaxis(cts, -2, 1).reshape((k, l, -1))
+    acc2 = jnp.moveaxis(jnp.broadcast_to(acc, cts.shape), -2, 1) \
+        .reshape((k, l, -1))
+    m = ct2.shape[-1]
+    call = _build_accum_chunks(l, m, min(block_k, k), interpret)
+    out = call(ct2, acc2, w_mont, qs, qinv_negs)
+    return jnp.moveaxis(out.reshape((k, l) + mid + (n,)), 1, -2)

@@ -11,8 +11,11 @@ directions permutation-free (bit-reversed NTT domain).
 
 Constants arrive as stacked u32[L] / u32[L, N] tables (params.LimbTables);
 the BlockSpec index map selects the limb's row, so the kernel body is
-identical for every limb — the shape of thing that later shards the limb
-axis across chips.
+identical for every limb.  This is exactly what lets the sharded engine
+(core/ckks/sharded.py, DESIGN.md §8) turn the limb grid axis into the
+`model` MESH axis: inside `shard_map` each shard passes its local table
+slice and launches this same kernel over its local limbs — the NTT runs
+within one limb's N coefficients, so limb sharding needs no collectives.
 
 Stages are unrolled in Python: every reshape has a static shape. On real TPU
 the final stages (t < 128 lanes) relayout across sublanes; a 4-step

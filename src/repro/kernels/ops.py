@@ -40,7 +40,8 @@ from repro.kernels import ntt as _ntt
 from repro.kernels import pointwise as _pointwise
 from repro.kernels import ref as _ref
 
-OPS = ("ntt_fwd", "ntt_inv", "mul_add", "weighted_sum", "weighted_accum")
+OPS = ("ntt_fwd", "ntt_inv", "mul_add", "weighted_sum", "weighted_accum",
+       "weighted_accum_chunks")
 BACKENDS = ("ref", "pallas")
 
 _ASSIGN: dict[str, str] = {
@@ -146,6 +147,17 @@ def _weighted_accum_pallas(t, acc, ct, w_mont):
                                            interpret=_interpret())
 
 
+def _weighted_accum_chunks_ref(t, acc, cts, w_mont):
+    return _ref.he_weighted_accum_chunks_fused(acc, cts, w_mont, t.qs,
+                                               t.qinv_negs)
+
+
+def _weighted_accum_chunks_pallas(t, acc, cts, w_mont):
+    return _he_agg.he_weighted_accum_chunks_fused(acc, cts, w_mont, t.qs,
+                                                  t.qinv_negs,
+                                                  interpret=_interpret())
+
+
 _IMPL = {
     "ntt_fwd": {"ref": _ntt_fwd_ref, "pallas": _ntt_fwd_pallas},
     "ntt_inv": {"ref": _ntt_inv_ref, "pallas": _ntt_inv_pallas},
@@ -154,11 +166,32 @@ _IMPL = {
                      "pallas": _weighted_sum_pallas},
     "weighted_accum": {"ref": _weighted_accum_ref,
                        "pallas": _weighted_accum_pallas},
+    "weighted_accum_chunks": {"ref": _weighted_accum_chunks_ref,
+                              "pallas": _weighted_accum_chunks_pallas},
 }
 
 
 def _impl(op):
     return _IMPL[op][_ASSIGN[op]]
+
+
+def apply(op, tables, *args):
+    """Dispatch `op` through the registry with explicit constant tables.
+
+    Args:
+        op: one of OPS.
+        tables: a `params.LimbTables` — may hold host numpy arrays (the
+            normal constant-embedding path) OR traced/sharded jnp arrays.
+            The sharded engine (core/ckks/sharded.py) builds per-shard
+            tables inside `shard_map` and routes every kernel through here,
+            so per-op backend selection applies unchanged across chips.
+        *args: the op's positional tensor arguments (see the public
+            wrappers below for each op's layout contract).
+
+    Returns:
+        The op's result with the same layout as the public wrapper.
+    """
+    return _IMPL[op][_ASSIGN[op]](tables, *args)
 
 
 # ---------------------------------------------------------------------------
@@ -167,22 +200,58 @@ def _impl(op):
 
 
 def ntt_fwd(x, ctx):
-    """u32[..., L, N] natural -> bit-reversed NTT domain, all limbs fused."""
+    """Forward negacyclic NTT over every limb in one launch.
+
+    Args:
+        x: u32[..., L, N] coefficient-domain residues, natural order.
+        ctx: CkksContext (tables sliced to x's limb count).
+
+    Returns:
+        u32[..., L, N] in bit-reversed NTT domain.
+    """
     return _impl("ntt_fwd")(_tables(ctx, x.shape[-2]), x)
 
 
 def ntt_inv(x, ctx):
-    """u32[..., L, N] bit-reversed NTT domain -> natural, all limbs fused."""
+    """Inverse negacyclic NTT over every limb in one launch.
+
+    Args:
+        x: u32[..., L, N] bit-reversed NTT-domain residues.
+        ctx: CkksContext.
+
+    Returns:
+        u32[..., L, N] coefficient-domain residues, natural order.
+    """
     return _impl("ntt_inv")(_tables(ctx, x.shape[-2]), x)
 
 
 def mul_add(x, y_mont, z, ctx):
-    """x (*) y_mont + z, all u32[..., L, N], one fused call."""
+    """Fused x (*) y_mont + z — the encrypt/decrypt workhorse.
+
+    Args:
+        x: u32[..., L, N] normal-form residues.
+        y_mont: u32[..., L, N] Montgomery-form operand (broadcastable to x).
+        z: u32[..., L, N] normal-form addend (broadcastable to x).
+        ctx: CkksContext.
+
+    Returns:
+        u32[..., L, N] normal-form result, one fused call over all limbs.
+    """
     return _impl("mul_add")(_tables(ctx, x.shape[-2]), x, y_mont, z)
 
 
 def weighted_sum(cts, w_mont, ctx):
-    """sum_i w_i (*) ct_i.  cts: u32[C, ..., L, N], w_mont: u32[C, L]."""
+    """Batch FedAvg aggregation: sum_i w_i (*) ct_i over the leading axis.
+
+    Args:
+        cts: u32[C, ..., L, N] client ciphertext residues (NTT domain).
+        w_mont: u32[C, L] Montgomery-form scalar weights per (client, limb).
+        ctx: CkksContext.
+
+    Returns:
+        u32[..., L, N] aggregate; each element read once, accumulator in
+        VMEM on the pallas backend.
+    """
     l = cts.shape[-2]
     return _impl("weighted_sum")(_tables(ctx, l), cts, w_mont[:, :l])
 
@@ -190,12 +259,39 @@ def weighted_sum(cts, w_mont, ctx):
 def weighted_accum(acc, ct, w_mont, ctx):
     """Streaming aggregation step: acc + w (*) ct.
 
-    acc, ct: u32[..., L, N]; w_mont: u32[L] Montgomery scalar weight.
-    One client folded into the running sum — the O(1)-memory server path
-    (repro.wire.stream); bit-identical to weighted_sum applied in order.
+    Args:
+        acc: u32[..., L, N] running modular accumulator.
+        ct: u32[..., L, N] one arriving ciphertext.
+        w_mont: u32[L] Montgomery scalar weight.
+        ctx: CkksContext.
+
+    Returns:
+        u32[..., L, N] updated accumulator.  One client folded into the
+        running sum — the O(1)-memory server path (repro.wire.stream);
+        bit-identical to weighted_sum applied in arrival order.
     """
     l = ct.shape[-2]
     return _impl("weighted_accum")(_tables(ctx, l), acc, ct, w_mont[:l])
+
+
+def weighted_accum_chunks(acc, cts, w_mont, ctx):
+    """Batched streaming flush: acc[k] + w[k] (*) ct[k] for every ready
+    chunk row k in ONE launch.
+
+    Args:
+        acc: u32[K, ..., L, N] per-row accumulators (zeros for fresh rows).
+        cts: u32[K, ..., L, N] ready ciphertext chunks; rows may belong to
+            different clients and different chunk indices.
+        w_mont: u32[K, L] per-row Montgomery scalar weights.
+        ctx: CkksContext.
+
+    Returns:
+        u32[K, ..., L, N] updated accumulators.  Bit-identical to calling
+        weighted_accum row by row — the wire/stream flush invariant.
+    """
+    l = cts.shape[-2]
+    return _impl("weighted_accum_chunks")(_tables(ctx, l), acc, cts,
+                                          w_mont[:, :l])
 
 
 # limb-wise helpers with no dedicated kernel (cheap, always ref) ------------

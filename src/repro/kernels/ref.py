@@ -289,6 +289,21 @@ def he_weighted_accum_fused(acc, ct, w_mont, qs, qinv_negs):
                          qs, qinv_negs)
 
 
+def he_weighted_accum_chunks_fused(acc, cts, w_mont, qs, qinv_negs):
+    """Batched streaming flush: acc[k] + w[k] (*) ct[k] for every ready
+    chunk row k, all limbs and rows in one graph.
+
+    acc, cts: u32[K, ..., L, N]; w_mont: u32[K, L] per-row Montgomery scalar
+    weights (rows may belong to different clients); qs, qinv_negs: u32[L].
+    """
+    cts = _u32(cts)
+    w = _u32(w_mont)
+    k = cts.shape[0]
+    wb = w.reshape((k,) + (1,) * (cts.ndim - 3) + (w.shape[1], 1))
+    return mul_add_fused(cts, jnp.broadcast_to(wb, cts.shape), acc,
+                         qs, qinv_negs)
+
+
 def mul_wide(a, b):
     """Full 32x32 -> 64-bit product as a (hi, lo) u32 pair."""
     a = _u32(a)

@@ -35,11 +35,28 @@ class WireRecord:
 
 
 class BandwidthLedger:
+    """Append-only log of measured wire traffic.
+
+    One WireRecord per serialized artifact that crossed the (simulated)
+    network; query helpers aggregate by round / client / direction /
+    artifact class.  Shared by FLServer (uplink), FLClient (downlink),
+    and the orchestrator's round logs.
+    """
+
     def __init__(self):
         self.records: list[WireRecord] = []
 
     def record(self, *, rnd: int, cid: int, direction: str, kind: str,
                nbytes: int) -> None:
+        """Append one entry.
+
+        Args:
+            rnd: FL round number.
+            cid: client id the bytes were sent by / to.
+            direction: UPLINK ("up") or DOWNLINK ("down").
+            kind: artifact class (one of the K_* constants).
+            nbytes: measured serialized size in bytes.
+        """
         self.records.append(WireRecord(int(rnd), int(cid), direction, kind,
                                        int(nbytes)))
 
@@ -47,6 +64,8 @@ class BandwidthLedger:
 
     def total(self, direction: str | None = None, rnd: int | None = None,
               kind: str | None = None, cid: int | None = None) -> int:
+        """Sum of measured bytes over records matching every given filter
+        (None = match all).  Returns an int byte count."""
         return sum(r.nbytes for r in self.records
                    if (direction is None or r.direction == direction)
                    and (rnd is None or r.round == rnd)
@@ -74,9 +93,11 @@ class BandwidthLedger:
         }
 
     def rounds(self) -> list[int]:
+        """Sorted round numbers that have at least one record."""
         return sorted({r.round for r in self.records})
 
     def per_client_uplink(self, rnd: int) -> dict[int, int]:
+        """Measured uplink bytes per client id for one round."""
         out: dict[int, int] = defaultdict(int)
         for r in self.records:
             if r.round == rnd and r.direction == UPLINK:
@@ -85,9 +106,18 @@ class BandwidthLedger:
 
     def record_blob(self, blob: bytes, *, rnd: int, cid: int,
                     direction: str) -> int:
-        """Split a serialized artifact stream into per-artifact-class
-        entries (header bytes count toward the class they envelope).
-        Returns total bytes recorded."""
+        """Split a serialized frame stream into per-artifact-class entries.
+
+        Args:
+            blob: concatenated wire frames (repro.wire.format layout).
+            rnd, cid, direction: as for record().
+
+        Returns:
+            Total bytes recorded (== len(blob) when every frame parses).
+            Header bytes count toward the class they envelope; nested
+            PROTECTED_UPDATE frames are split into their inner ct/plain
+            classes with the envelope accounted as K_META.
+        """
         from repro.wire import format as wf
         off = 0
         total = 0

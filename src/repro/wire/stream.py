@@ -1,4 +1,4 @@
-"""Streaming uplink ingest: fold each arriving ciphertext chunk into the
+"""Streaming uplink ingest: fold arriving ciphertext chunks into the
 running modular accumulator, never materializing all n_clients updates.
 
 Client side — pack_update_frames() emits, per update:
@@ -8,17 +8,27 @@ Client side — pack_update_frames() emits, per update:
     PLAIN_SEGMENT  (quantized plaintext partition)
     UPDATE_END
 
-Server side — StreamIngest parses frames incrementally (any byte slicing)
-and performs  acc[chunk] = acc[chunk] + w (*) ct_chunk  the moment a chunk
-arrives, via the limb-fused accumulate kernel (he_agg.he_weighted_accum_fused
-through ops.weighted_accum — one launch covers every RNS limb) wrapped in a
-single jitted graph keyed on (ctx, backend registry).  Server-side update
-buffers are O(1) in the number of clients: one accumulator plus at most one
-in-flight chunk (peak_chunk_buffers instruments this; tests assert it).
+Server side — StreamIngest parses frames incrementally (any byte slicing),
+BUFFERS each decoded chunk in a ready queue, and folds the whole queue in
+ONE chunk-batched accumulate launch per flush:
+
+    acc[k] = acc[k] + w[k] (*) ct[k]    for every ready row k
+
+via `ops.weighted_accum_chunks` (kernels/he_agg.he_weighted_accum_chunks —
+the RNS-limb axis and the ready-row axis are both grid dimensions of a
+single `pallas_call`).  `ingest()` flushes once per client update, so the
+launch count is O(clients), not O(clients * n_chunks); `accum_launches`
+instruments this and tests assert it.  Attaching a `ShardedHe` engine
+(core/ckks/sharded.py) shards the flush over the device mesh — ready rows
+along ``data``, limbs along ``model`` — with no change in results.
+
+Server-side update buffers stay O(1) in the number of clients: one
+accumulator plus at most ONE update's worth of ready chunks
+(`peak_chunk_buffers` instruments this; tests assert it).
 
 The modular arithmetic is identical to the batch weighted_sum applied in
 arrival order, so the streamed aggregate is bit-for-bit equal to the
-in-memory path.
+in-memory path — flush batching does not change a single bit.
 """
 from __future__ import annotations
 
@@ -64,8 +74,18 @@ def pack_update_frames(upd: ProtectedUpdate, *, cid: int, n_samples: int,
                        plain_codec: str = "f32") -> bytes:
     """One client's ProtectedUpdate -> concatenated wire frames.
 
-    If `seeded` is given (from compress.seed_compress on a seeded encryption)
-    each CT_CHUNK carries (seed, c0-chunk) instead of the full chunk.
+    Args:
+        upd: the update (ct data u32[n_chunks, L, 2, N] + plain f32).
+        cid: client id for the UPDATE_BEGIN header.
+        n_samples: local sample count (the server's FedAvg weight input).
+        rnd: round number for the header.
+        seeded: optional compress.seed_compress result; each CT_CHUNK then
+            carries (seed, c0-chunk) instead of the full chunk.
+        plain_codec: "f32" | "f16" | "i8" quantizer for the plain segment.
+
+    Returns:
+        bytes: UPDATE_BEGIN + CT_CHUNK * n_chunks + PLAIN_SEGMENT +
+        UPDATE_END, each a length-prefixed wire frame (DESIGN.md §6.1).
     """
     n_chunks = int(upd.ct.data.shape[0])
     kind = CT_SEEDED if seeded is not None else CT_FULL
@@ -105,33 +125,56 @@ def peek_update_meta(blob: bytes) -> UpdateMeta:
 
 
 @functools.partial(jax.jit, static_argnames=("ctx", "token"))
-def _accum_graph(ctx: CkksContext, token, acc, ct, w_mont):
-    """One fused fold: acc + w (*) ct over all limbs in a single launch."""
-    return ops.weighted_accum(acc, ct, w_mont, ctx)
+def _accum_chunks_graph(ctx: CkksContext, token, accs, cts, w_mont):
+    """One chunk-batched fold: acc[k] + w[k] (*) ct[k] for every ready row,
+    all limbs and rows in a single launch."""
+    return ops.weighted_accum_chunks(accs, cts, w_mont, ctx)
 
 
 class StreamIngest:
     """Accumulates arriving client updates chunk-by-chunk.
+
+    Decoded chunks are buffered in a ready queue and folded by `flush()` —
+    one chunk-batched accumulate launch per flush, not one per chunk.
+    `ingest()`/`ingest_update()` flush automatically at the end of each
+    update, so at most one update's worth of chunks is ever resident
+    (O(1) in the client count; `peak_chunk_buffers` proves it) and the
+    launch count is one per client (`accum_launches` proves it).
 
     Usage:
         ingest = StreamIngest(ctx)
         for blob, w in arriving:   # any interleaving of byte slices works
             ingest.ingest(blob, weight=w)
         agg = ingest.finalize()    # ProtectedUpdate, scale = in_scale*delta
+
+    Attributes:
+        accum_launches: accumulate launches issued so far (== flushes that
+            had ready chunks; the one-launch-per-flush invariant).
+        peak_chunk_buffers: max decoded-but-unfolded chunks ever resident.
+        clients_ingested / bytes_ingested: ingest counters.
     """
 
-    def __init__(self, ctx: CkksContext):
+    def __init__(self, ctx: CkksContext, sharded=None):
+        """Args:
+            ctx: CkksContext of the arriving ciphertexts.
+            sharded: optional core.ckks.sharded.ShardedHe; when given,
+                flushes run as sharded graphs over its mesh (ready rows ->
+                data axis, limbs -> model axis), bit-identical results.
+        """
         self.ctx = ctx
-        self._acc_ct = None            # u32[n_chunks, L, 2, N]
+        self.sharded = sharded
+        self._acc_ct = None            # dict chunk_idx -> u32[2, L, N]
         self._acc_plain = None         # f32[n_plain]
         self._in_scale = None
+        self._pending = []             # ready queue: (chunk_idx, data, w)
         self.clients_ingested = 0
         self.bytes_ingested = 0
+        self.accum_launches = 0
         # O(1)-memory instrumentation: decoded ciphertext chunk buffers
         # resident beyond the accumulator.  Incremented where a chunk is
-        # decoded, decremented once it has been folded — so a regression
-        # that decodes a whole update (or several) before folding shows up
-        # as peak > 1 on the serialized path.
+        # decoded, decremented once it has been folded — a regression that
+        # buffers several updates before folding shows up as peak >
+        # n_chunks of one update.
         self._resident_chunks = 0
         self.peak_chunk_buffers = 0
 
@@ -146,22 +189,49 @@ class StreamIngest:
         self.peak_chunk_buffers = max(self.peak_chunk_buffers,
                                       self._resident_chunks)
 
-    def _fold_chunk(self, chunk_idx: int, data, scale: float, w_mont) -> None:
-        """data: u32[1, L, 2, N] one decoded chunk; folds and discards."""
+    def _buffer_chunk(self, chunk_idx: int, data, scale: float,
+                      w_mont) -> None:
+        """Queue one decoded chunk (data u32[1, L, 2, N]) for the next
+        flush; validates the scale against the running aggregation."""
         if self._in_scale is None:
             self._in_scale = float(scale)
         elif abs(self._in_scale - scale) > 1e-6 * self._in_scale:
             raise wf.WireError("mixed ciphertext scales in one aggregation")
-        x = jnp.moveaxis(jnp.asarray(data), -3, -2)       # [1, 2, L, N]
         if self._acc_ct is None:
-            n_limbs, n = data.shape[-3], data.shape[-1]
-            self._n_limbs, self._n = n_limbs, n
+            self._n_limbs, self._n = data.shape[-3], data.shape[-1]
             self._acc_ct = {}
-        acc = self._acc_ct.get(chunk_idx)
-        if acc is None:
-            acc = jnp.zeros((2, self._n_limbs, self._n), dtype=jnp.uint32)
-        out = _accum_graph(self.ctx, ops.backend_token(), acc, x[0], w_mont)
-        self._acc_ct[chunk_idx] = out
+        self._note_decoded(+1)
+        # limbs to axis -2 (ops layout): [1, L, 2, N] -> [2, L, N]
+        x = jnp.moveaxis(jnp.asarray(data), -3, -2)[0]
+        self._pending.append((int(chunk_idx), x, w_mont))
+
+    def flush(self) -> None:
+        """Fold every ready chunk into the accumulator — ONE chunk-batched
+        accumulate launch per pass (a second pass only happens if the same
+        chunk index was buffered twice, to preserve arrival order)."""
+        while self._pending:
+            batch, rest, seen = [], [], set()
+            for item in self._pending:
+                if item[0] in seen:
+                    rest.append(item)
+                else:
+                    seen.add(item[0])
+                    batch.append(item)
+            self._pending = rest
+            idxs = [i for i, _, _ in batch]
+            cts = jnp.stack([x for _, x, _ in batch])          # [K, 2, L, N]
+            ws = jnp.stack([w for _, _, w in batch])           # [K, L]
+            zero = jnp.zeros((2, self._n_limbs, self._n), dtype=jnp.uint32)
+            accs = jnp.stack([self._acc_ct.get(i, zero) for i in idxs])
+            if self.sharded is not None:
+                out = self.sharded.weighted_accum_chunks(accs, cts, ws)
+            else:
+                out = _accum_chunks_graph(self.ctx, ops.backend_token(),
+                                          accs, cts, ws)
+            self.accum_launches += 1
+            for j, i in enumerate(idxs):
+                self._acc_ct[i] = out[j]
+            self._note_decoded(-len(batch))
 
     def _fold_plain(self, arr, codec: str, qscale: float,
                     weight: float) -> None:
@@ -173,73 +243,101 @@ class StreamIngest:
     # -- public API ---------------------------------------------------------
 
     def ingest(self, blob: bytes, weight: float) -> UpdateMeta:
-        """Parse one client's frames and fold them into the accumulator.
+        """Parse one client's frames, buffer its chunks, and flush them in
+        one accumulate launch.
 
         Validates the stream against its own UPDATE_BEGIN header: the set
         of received chunk indices must be exactly {0..n_chunks-1} — a
         dropped or duplicated CT_CHUNK frame is an error, never a silent
         partial contribution to the aggregate.
+
+        Args:
+            blob: one client's serialized frame stream.
+            weight: FedAvg weight for this client.
+
+        Returns:
+            The update's UpdateMeta header.
         """
         meta = None
         w_mont = self._w_mont(weight)
         saw_end = False
         chunks_seen: set[int] = set()
-        for ftype, _, payload in wf.iter_frames(blob):
-            if ftype == wf.T_UPDATE_BEGIN:
-                cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(
-                    payload, 0)
-                meta = UpdateMeta(cid, n_samples, rnd, n_chunks,
-                                  kind == CT_SEEDED)
-            elif ftype == wf.T_CT_CHUNK:
-                if meta is None:
-                    raise wf.WireError("CT_CHUNK before UPDATE_BEGIN")
-                (chunk_idx,) = struct.unpack_from("<I", payload, 0)
-                if chunk_idx >= meta.n_chunks:
-                    raise wf.WireError(
-                        f"chunk index {chunk_idx} >= declared "
-                        f"n_chunks {meta.n_chunks}")
-                if chunk_idx in chunks_seen:
-                    raise wf.WireError(f"duplicate chunk {chunk_idx}")
-                chunks_seen.add(chunk_idx)
-                inner, _ = wf.deserialize(payload, self.ctx, off=4)
-                if isinstance(inner, _c.SeededCiphertext):
-                    inner = inner.expand(self.ctx)
-                self._note_decoded(+1)
-                self._fold_chunk(chunk_idx, inner.data, inner.scale, w_mont)
-                self._note_decoded(-1)
-            elif ftype == wf.T_PLAIN_SEGMENT:
-                arr, codec, qscale = wf._parse_plain_segment(payload)
-                self._fold_plain(arr, codec, qscale, weight)
-            elif ftype == wf.T_UPDATE_END:
-                saw_end = True
-            else:
-                raise wf.WireError(f"unexpected frame type {ftype:#x} "
-                                   "in update stream")
-        if meta is None or not saw_end:
-            raise wf.WireError("truncated update stream")
-        if len(chunks_seen) != meta.n_chunks:
-            raise wf.WireError(
-                f"update declared {meta.n_chunks} chunks, "
-                f"received {len(chunks_seen)}")
+        plain_segments = []            # folded only after validation
+        n_buffered = 0
+        prev_in_scale = self._in_scale
+        acc_was_uninit = self._acc_ct is None
+        try:
+            for ftype, _, payload in wf.iter_frames(blob):
+                if ftype == wf.T_UPDATE_BEGIN:
+                    cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(
+                        payload, 0)
+                    meta = UpdateMeta(cid, n_samples, rnd, n_chunks,
+                                      kind == CT_SEEDED)
+                elif ftype == wf.T_CT_CHUNK:
+                    if meta is None:
+                        raise wf.WireError("CT_CHUNK before UPDATE_BEGIN")
+                    (chunk_idx,) = struct.unpack_from("<I", payload, 0)
+                    if chunk_idx >= meta.n_chunks:
+                        raise wf.WireError(
+                            f"chunk index {chunk_idx} >= declared "
+                            f"n_chunks {meta.n_chunks}")
+                    if chunk_idx in chunks_seen:
+                        raise wf.WireError(f"duplicate chunk {chunk_idx}")
+                    chunks_seen.add(chunk_idx)
+                    inner, _ = wf.deserialize(payload, self.ctx, off=4)
+                    if isinstance(inner, _c.SeededCiphertext):
+                        inner = inner.expand(self.ctx)
+                    self._buffer_chunk(chunk_idx, inner.data, inner.scale,
+                                       w_mont)
+                    n_buffered += 1
+                elif ftype == wf.T_PLAIN_SEGMENT:
+                    plain_segments.append(wf._parse_plain_segment(payload))
+                elif ftype == wf.T_UPDATE_END:
+                    saw_end = True
+                else:
+                    raise wf.WireError(f"unexpected frame type {ftype:#x} "
+                                       "in update stream")
+            if meta is None or not saw_end:
+                raise wf.WireError("truncated update stream")
+            if len(chunks_seen) != meta.n_chunks:
+                raise wf.WireError(
+                    f"update declared {meta.n_chunks} chunks, "
+                    f"received {len(chunks_seen)}")
+        except Exception:
+            # rejected update: NOTHING of it may reach the accumulator —
+            # drop its queued chunks and roll back any state its chunks
+            # initialized (struct.error etc. count as rejections too)
+            if n_buffered:
+                del self._pending[len(self._pending) - n_buffered:]
+                self._note_decoded(-n_buffered)
+            self._in_scale = prev_in_scale
+            if acc_was_uninit:
+                # the rejected chunks must not pin the limb/poly dims either
+                self._acc_ct = None
+            raise
+        for arr, codec, qscale in plain_segments:
+            self._fold_plain(arr, codec, qscale, weight)
+        self.flush()
         self.clients_ingested += 1
         self.bytes_ingested += len(blob)
         return meta
 
     def ingest_update(self, upd: ProtectedUpdate, weight: float) -> None:
         """In-memory streaming (no serialization): the caller already holds
-        the whole decoded update, so one update's worth of chunk buffers is
-        resident for the duration — still O(1) in the client count."""
+        the whole decoded update; its chunks are buffered and folded in one
+        flush — still O(1) in the client count."""
         w_mont = self._w_mont(weight)
         data = np.asarray(upd.ct.data)
-        n_chunks = data.shape[0]
-        self._note_decoded(+n_chunks)
-        for b in range(n_chunks):
-            self._fold_chunk(b, data[b:b + 1], upd.ct.scale, w_mont)
-        self._note_decoded(-n_chunks)
+        for b in range(data.shape[0]):
+            self._buffer_chunk(b, data[b:b + 1], upd.ct.scale, w_mont)
+        self.flush()
         self._fold_plain(np.asarray(upd.plain), "f32", 1.0, weight)
         self.clients_ingested += 1
 
     def finalize(self) -> ProtectedUpdate:
+        """-> aggregated ProtectedUpdate (ct scale = in_scale * delta).
+        Raises WireError if nothing arrived or chunk indices have holes."""
+        self.flush()
         if self.clients_ingested == 0 or self._acc_ct is None:
             raise wf.WireError("no updates ingested")
         n_chunks = max(self._acc_ct) + 1

@@ -139,8 +139,12 @@ def test_wire_transport_measured_bytes():
     assert all(l.comm_up_bytes > 0 and l.comm_down_bytes > 0 for l in logs)
     assert all(l.comm_bytes == l.comm_up_bytes + l.comm_down_bytes
                for l in logs)
-    # streaming ingest kept server update buffers O(1) in clients
-    assert task.server.last_ingest.peak_chunk_buffers == 1
+    # streaming ingest kept server update buffers O(1) in clients (at most
+    # one update's ready chunks resident) with one accumulate launch per
+    # client update, not per chunk
+    ing = task.server.last_ingest
+    assert ing.peak_chunk_buffers == task.aggregator.part.n_chunks
+    assert ing.accum_launches == ing.clients_ingested
     # ledger breakdown exists per artifact class
     s = task.ledger.round_summary(0)
     assert s["by_kind"]["up/seeded_ciphertext"] > 0

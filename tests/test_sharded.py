@@ -1,0 +1,206 @@
+"""Multi-chip sharded HE engine: bit-exact parity against the single-device
+fused engine for L in {1, 2, 3} across 1/2/4-device meshes, plus the
+streaming flush contract (one chunk-batched accumulate launch per update).
+
+Device counts above what the process has are skipped — CI runs a leg with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 to cover them (jax
+locks the device count at first init, so it cannot be raised from inside
+a test)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ckks import cipher, encoding
+from repro.core.ckks import params as ckks_params
+from repro.core.ckks.sharded import ShardedHe
+from repro.core.secure_agg import ProtectedUpdate
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_he_mesh
+from repro.wire import stream as ws
+
+_DELTA_BITS = {1: 12, 2: 20, 3: 20}
+
+
+def _ctx(n_limbs, n_poly=64):
+    return ckks_params.make_test_context(
+        n_poly=n_poly, n_limbs=n_limbs, delta_bits=_DELTA_BITS[n_limbs])
+
+
+def _engine(ctx, n_dev):
+    if jax.device_count() < n_dev:
+        pytest.skip(f"needs {n_dev} host devices, have "
+                    f"{jax.device_count()} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    return ShardedHe(ctx, make_he_mesh(ctx.n_limbs, n_dev))
+
+
+def _ct_stack(rng, ctx, c, b):
+    """Cipher-layout stack u32[C, B, L, 2, N]."""
+    raw = ref.rand_limbed_np(rng, ctx, (c, b, 2))      # [C, B, 2, L, N]
+    return jnp.asarray(np.moveaxis(raw, -2, -3))
+
+
+@pytest.fixture(params=["ref", "pallas"])
+def backend(request):
+    old = {op: ops.get_backend(op) for op in ops.OPS}
+    ops.set_backend(request.param)
+    yield request.param
+    for op, name in old.items():
+        ops.set_backend(name, op=op)
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_sharded_weighted_sum_bitexact(n_limbs, n_dev, backend):
+    ctx = _ctx(n_limbs)
+    eng = _engine(ctx, n_dev)
+    rng = np.random.RandomState(100 * n_limbs + n_dev)
+    data = _ct_stack(rng, ctx, 4, 3)
+    w = [0.1, 0.2, 0.3, 0.4]
+    cts = cipher.Ciphertext(data=data, scale=float(ctx.delta))
+    single = cipher.weighted_sum(ctx, cts, w)
+    shard = eng.weighted_sum(cts, w)
+    np.testing.assert_array_equal(np.asarray(single.data),
+                                  np.asarray(shard.data))
+    assert single.scale == shard.scale
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_sharded_weighted_accum_bitexact(n_limbs, n_dev, backend):
+    ctx = _ctx(n_limbs)
+    eng = _engine(ctx, n_dev)
+    rng = np.random.RandomState(200 * n_limbs + n_dev)
+    data = _ct_stack(rng, ctx, 2, 3)
+    acc = cipher.Ciphertext(data=data[0], scale=float(ctx.delta))
+    ct = cipher.Ciphertext(data=data[1], scale=float(ctx.delta))
+    w = 0.25
+    w_mont = jnp.asarray(encoding.encode_scalar_residues(w, ctx))
+    single = ops.weighted_accum(jnp.moveaxis(acc.data, -3, -2),
+                                jnp.moveaxis(ct.data, -3, -2), w_mont, ctx)
+    shard = eng.weighted_accum(acc, ct, w)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.moveaxis(single, -2, -3)), np.asarray(shard.data))
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_sharded_accum_chunks_bitexact(n_limbs, n_dev, backend):
+    """The flush kernel: rows with per-row weights, sharded == per-row
+    single-device weighted_accum."""
+    ctx = _ctx(n_limbs)
+    eng = _engine(ctx, n_dev)
+    rng = np.random.RandomState(300 * n_limbs + n_dev)
+    k = 5
+    accs = jnp.asarray(ref.rand_limbed_np(rng, ctx, (k, 2)))
+    cts = jnp.asarray(ref.rand_limbed_np(rng, ctx, (k, 2)))
+    w = jnp.asarray(np.stack(
+        [rng.randint(0, int(q), size=(k,)) for q in ctx.primes],
+        axis=1).astype(np.uint32))
+    single = ops.weighted_accum_chunks(accs, cts, w, ctx)
+    rows = jnp.stack([ops.weighted_accum(accs[i], cts[i], w[i], ctx)
+                      for i in range(k)])
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(rows))
+    shard = eng.weighted_accum_chunks(accs, cts, w)
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(shard))
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_sharded_keygen_encrypt_decrypt_bitexact(n_dev):
+    """The full client path is bit-identical however the limb axis is
+    sharded: same keys, same ciphertext, same decrypted residues."""
+    ctx = _ctx(2, n_poly=128)
+    eng = _engine(ctx, n_dev)
+    rng = np.random.RandomState(7)
+    sk1, pk1 = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    sk2, pk2 = eng.keygen(jax.random.PRNGKey(0))
+    for k in sk1:
+        np.testing.assert_array_equal(np.asarray(sk1[k]), np.asarray(sk2[k]))
+    for k in pk1:
+        np.testing.assert_array_equal(np.asarray(pk1[k]), np.asarray(pk2[k]))
+    vals = jnp.asarray(rng.randn(2, ctx.slots).astype(np.float32)) * 0.1
+    ct1 = cipher.encrypt_values(ctx, pk1, vals, jax.random.PRNGKey(1))
+    ct2 = eng.encrypt_values(pk2, vals, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(ct1.data), np.asarray(ct2.data))
+    d1 = cipher.decrypt_to_coeffs(ctx, sk1, ct1)
+    d2 = eng.decrypt_to_coeffs(sk2, ct2)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    out = eng.decrypt_values(sk2, ct2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals), atol=2e-3)
+
+
+def test_sharded_rejects_indivisible_limbs():
+    """A 3-limb context on a model-axis-2 mesh must fail loudly, pointing
+    at make_he_mesh."""
+    if jax.device_count() < 2:
+        pytest.skip("needs 2 host devices")
+    ctx = _ctx(3)
+    mesh2 = make_he_mesh(2, 2)          # model axis size 2 does not divide 3
+    with pytest.raises(ValueError, match="not divisible"):
+        ShardedHe(ctx, mesh2).weighted_sum(
+            cipher.Ciphertext(
+                data=jnp.zeros((1, 1, 3, 2, ctx.n_poly), jnp.uint32),
+                scale=1.0), [1.0])
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_streaming_flush_sharded_matches_batch(n_dev, backend):
+    """StreamIngest with a sharded engine: bit-identical to the batch
+    weighted_sum AND one accumulate launch per update."""
+    ctx = _ctx(2, n_poly=128)
+    eng = _engine(ctx, n_dev)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(5))
+    rng = np.random.RandomState(70)
+    n_clients = 3
+    upds = []
+    for i in range(n_clients):
+        vals = jnp.asarray(rng.randn(2, ctx.slots).astype(np.float32)) * 0.1
+        ct = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(80 + i))
+        upds.append(ProtectedUpdate(ct=ct,
+                                    plain=jnp.zeros((0,), jnp.float32)))
+    w = [1.0 / n_clients] * n_clients
+    stacked = cipher.Ciphertext(
+        data=jnp.stack([u.ct.data for u in upds]), scale=upds[0].ct.scale)
+    batch = cipher.weighted_sum(ctx, stacked, w)
+    ing = ws.StreamIngest(ctx, sharded=eng)
+    for u, wi in zip(upds, w):
+        ing.ingest_update(u, wi)
+    streamed = ing.finalize()
+    np.testing.assert_array_equal(np.asarray(streamed.ct.data),
+                                  np.asarray(batch.data))
+    # one chunk-batched launch per client update — not one per chunk
+    assert ing.accum_launches == n_clients
+    assert ing.peak_chunk_buffers == int(upds[0].ct.data.shape[0])
+
+
+def test_stream_flush_one_launch_per_update_serialized():
+    """Serialized path: n_chunks >= 2 chunks per update still cost exactly
+    one accumulate launch per ingested blob."""
+    from repro.wire import compress as wc
+
+    ctx = _ctx(2, n_poly=64)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(9))
+    rng = np.random.RandomState(11)
+    n_clients, n_chunks = 3, 4
+    blobs = []
+    for i in range(n_clients):
+        vals = jnp.asarray(
+            rng.randn(n_chunks, ctx.slots).astype(np.float32)) * 0.1
+        ct = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(20 + i))
+        upd = ProtectedUpdate(ct=ct, plain=jnp.zeros((0,), jnp.float32))
+        blobs.append(ws.pack_update_frames(upd, cid=i, n_samples=1))
+    ing = ws.StreamIngest(ctx)
+    for b in blobs:
+        ing.ingest(b, 1.0 / n_clients)
+    out = ing.finalize()
+    assert out.ct.data.shape[0] == n_chunks
+    assert ing.accum_launches == n_clients          # one per update
+    assert ing.peak_chunk_buffers == n_chunks       # one update resident
+    # bit parity with the in-memory ingest path over the same updates
+    ing2 = ws.StreamIngest(ctx)
+    for b in blobs:
+        assert ws.peek_update_meta(b).n_chunks == n_chunks
+        ing2.ingest(b, 1.0 / n_clients)
+    np.testing.assert_array_equal(np.asarray(out.ct.data),
+                                  np.asarray(ing2.finalize().ct.data))

@@ -206,11 +206,12 @@ def test_streaming_bitexact_vs_batch_and_o1_buffers():
     assert out.ct.scale == batch.ct.scale
     np.testing.assert_allclose(np.asarray(batch.plain), np.asarray(out.plain),
                                atol=1e-5)
-    # server-side update buffers stay O(1) in the client count: the
-    # in-memory path holds at most ONE update's chunks at a time (the
-    # serialized path, asserted elsewhere, holds a single chunk)
+    # server-side update buffers stay O(1) in the client count: at most ONE
+    # update's chunks are resident between flushes
     assert ing.peak_chunk_buffers == agg.part.n_chunks
     assert ing.clients_ingested == 6
+    # one chunk-batched accumulate launch per flush, one flush per update
+    assert ing.accum_launches == 6
 
 
 def test_serialized_seeded_stream_recovers_fedavg():
@@ -235,7 +236,10 @@ def test_serialized_seeded_stream_recovers_fedavg():
     err = max(float(jnp.abs(a - b).max()) for a, b in zip(
         jax.tree_util.tree_leaves(rec), jax.tree_util.tree_leaves(expect)))
     assert err < 1e-2
-    assert ing.peak_chunk_buffers == 1
+    # ready-chunk buffering: one update's chunks resident at the peak,
+    # folded by ONE accumulate launch per client update (not per chunk)
+    assert ing.peak_chunk_buffers == agg.part.n_chunks
+    assert ing.accum_launches == n
 
 
 def test_stream_rejects_truncated_update():
@@ -248,6 +252,59 @@ def test_stream_rejects_truncated_update():
     ing = ws.StreamIngest(CTX)
     with pytest.raises(wf.WireError):
         ing.ingest(truncated, 1.0)
+
+
+def test_stream_rejected_update_contributes_nothing():
+    """A rejected update must leave NO trace: not its chunks, not its
+    plain segment, not the scale it tried to establish."""
+    agg, m = make_agg()
+    good = ws.pack_update_frames(agg.client_protect(
+        m, PK, jax.random.PRNGKey(1)), cid=0, n_samples=1)
+    bad_upd = agg.client_protect(m, PK, jax.random.PRNGKey(2))
+    bad = ws.pack_update_frames(bad_upd, cid=1, n_samples=1)
+    # chop off the END frame -> rejected, but its PLAIN_SEGMENT and chunks
+    # were already parsed by then
+    truncated = bad[:len(bad) - wf.HEADER_BYTES]
+
+    ing_clean = ws.StreamIngest(CTX)
+    ing_clean.ingest(good, 1.0)
+    clean = ing_clean.finalize()
+
+    ing = ws.StreamIngest(CTX)
+    with pytest.raises(wf.WireError):
+        ing.ingest(truncated, 1.0)
+    assert ing._in_scale is None and not ing._pending
+    # the rejected chunks must not have pinned accumulator dims either
+    assert ing._acc_ct is None
+    ing.ingest(good, 1.0)
+    out = ing.finalize()
+    np.testing.assert_array_equal(np.asarray(out.ct.data),
+                                  np.asarray(clean.ct.data))
+    np.testing.assert_array_equal(np.asarray(out.plain),
+                                  np.asarray(clean.plain))
+
+
+def test_stream_corrupt_chunk_payload_drops_buffered_chunks():
+    """Non-WireError parse failures (e.g. struct.error on a short payload)
+    must also roll the rejected update's buffered chunks back."""
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    blob = ws.pack_update_frames(upd, cid=0, n_samples=1)
+    frames = []
+    off = 0
+    while off < len(blob):
+        _, _, _, end = wf.parse_frame(blob, off)
+        frames.append(blob[off:end])
+        off = end
+    # replace the SECOND chunk with a syntactically-valid frame whose
+    # payload is too short to parse
+    corrupt = wf.frame(wf.T_CT_CHUNK, b"\x01")
+    mangled = b"".join(frames[:2] + [corrupt] + frames[3:])
+    ing = ws.StreamIngest(CTX)
+    with pytest.raises(Exception):
+        ing.ingest(mangled, 1.0)
+    assert not ing._pending          # first chunk was rolled back
+    assert ing.peak_chunk_buffers <= agg.part.n_chunks
 
 
 def test_stream_rejects_missing_or_duplicate_chunk():

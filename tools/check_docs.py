@@ -1,0 +1,170 @@
+#!/usr/bin/env python
+"""Docs checker: the CI docs job and the README bench-table generator.
+
+Checks (default mode — exit nonzero on any failure):
+  1. every intra-repo markdown link in README.md / DESIGN.md / ROADMAP.md
+     resolves to an existing file or directory;
+  2. the benchmark tables in README.md match what the checked-in
+     BENCH_he.json / BENCH_agg_sharded.json render to;
+  3. the README quickstart snippet (first ```bash block after the
+     "quickstart" heading) executes successfully (skipped with
+     --no-exec for fast local runs).
+
+`--write` regenerates the README tables in place between the
+BENCH_TABLES_START/END markers instead of failing on drift.
+
+Usage:
+    python tools/check_docs.py            # full check (CI docs job)
+    python tools/check_docs.py --no-exec  # links + tables only
+    python tools/check_docs.py --write    # refresh README bench tables
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DOC_FILES = ("README.md", "DESIGN.md", "ROADMAP.md")
+MARK_START = "<!-- BENCH_TABLES_START -->"
+MARK_END = "<!-- BENCH_TABLES_END -->"
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def check_links() -> list[str]:
+    """Every relative markdown link must resolve inside the repo."""
+    errors = []
+    for doc in DOC_FILES:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            errors.append(f"{doc}: file missing")
+            continue
+        text = open(path).read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            resolved = os.path.normpath(os.path.join(ROOT, target))
+            if not resolved.startswith(ROOT):
+                errors.append(f"{doc}: link escapes repo: {target}")
+            elif not os.path.exists(resolved):
+                errors.append(f"{doc}: broken link: {target}")
+    return errors
+
+
+def render_bench_tables() -> str:
+    """Markdown tables from the checked-in BENCH json artifacts."""
+    out = []
+
+    he_path = os.path.join(ROOT, "BENCH_he.json")
+    he = json.load(open(he_path))
+    out.append(
+        f"**Limb-fused engine vs per-limb dispatch baseline** "
+        f"(`benchmarks/run.py he`; N={he['n_poly']}, L={he['n_limbs']}, "
+        f"{he['n_clients']} clients, backend `{he['backend']}`):\n")
+    out.append("| op | per-limb ms | fused ms | speedup |")
+    out.append("|----|------------:|---------:|--------:|")
+    for op, r in he["ops"].items():
+        per = r.get("per_limb_ms")
+        per_s = f"{per:.2f}" if per is not None else "—"
+        spd = r.get("speedup")
+        spd_s = f"{spd:.0f}x" if spd is not None else "—"
+        out.append(f"| {op} | {per_s} | {r['fused_ms']:.2f} | {spd_s} |")
+    out.append("")
+
+    ag_path = os.path.join(ROOT, "BENCH_agg_sharded.json")
+    ag = json.load(open(ag_path))
+    rows = [ag["per_devices"][k] for k in sorted(ag["per_devices"],
+                                                key=lambda s: int(s))]
+    r0 = rows[0]
+    out.append(
+        f"**Sharded vs single-device aggregation** "
+        f"(`benchmarks/run.py agg-sharded`; N={r0['n_poly']}, "
+        f"L={r0['n_limbs']}, {r0['n_clients']} clients x "
+        f"{r0['n_chunks']} chunks, simulated host devices):\n")
+    out.append("| devices | mesh (data x model) | weighted_sum single ms | "
+               "weighted_sum sharded ms | stream ingest ms | "
+               "launches/update | bit-parity |")
+    out.append("|--------:|---------------------|----------------------:|"
+               "------------------------:|-----------------:|"
+               "----------------:|:----------:|")
+    for r in rows:
+        mesh = f"{r['mesh']['data']} x {r['mesh']['model']}"
+        out.append(
+            f"| {r['devices']} | {mesh} | "
+            f"{r['weighted_sum_single_ms']:.2f} | "
+            f"{r['weighted_sum_sharded_ms']:.2f} | "
+            f"{r['stream_ingest_sharded_ms']:.0f} | "
+            f"{r['launches_per_update']:.0f} | "
+            f"{'yes' if r['sharded_parity'] else 'NO'} |")
+    return "\n".join(out) + "\n"
+
+
+def check_or_write_tables(write: bool) -> list[str]:
+    path = os.path.join(ROOT, "README.md")
+    text = open(path).read()
+    if MARK_START not in text or MARK_END not in text:
+        return [f"README.md: missing {MARK_START}/{MARK_END} markers"]
+    head, rest = text.split(MARK_START, 1)
+    _, tail = rest.split(MARK_END, 1)
+    rendered = MARK_START + "\n" + render_bench_tables() + MARK_END
+    new = head + rendered + tail
+    if new == text:
+        return []
+    if write:
+        open(path, "w").write(new)
+        print("README.md bench tables refreshed")
+        return []
+    return ["README.md: bench tables out of date with BENCH json "
+            "(run `python tools/check_docs.py --write`)"]
+
+
+def run_quickstart() -> list[str]:
+    """Extract and execute the first ```bash block after 'quickstart'."""
+    text = open(os.path.join(ROOT, "README.md")).read()
+    m = re.search(r"quickstart.*?```bash\n(.*?)```", text,
+                  re.IGNORECASE | re.DOTALL)
+    if not m:
+        return ["README.md: no ```bash quickstart block found"]
+    script = m.group(1)
+    with tempfile.NamedTemporaryFile("w", suffix=".sh", delete=False) as f:
+        f.write("set -euo pipefail\n" + script)
+        name = f.name
+    try:
+        proc = subprocess.run(["bash", name], cwd=ROOT, capture_output=True,
+                              text=True, timeout=900)
+    finally:
+        os.unlink(name)
+    if proc.returncode != 0:
+        return [f"README quickstart failed (exit {proc.returncode}):\n"
+                f"{proc.stdout}\n{proc.stderr}"]
+    print(f"README quickstart OK: {proc.stdout.strip().splitlines()[-1]}")
+    return []
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true",
+                    help="refresh README bench tables instead of checking")
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip executing the README quickstart snippet")
+    args = ap.parse_args()
+
+    errors = check_links()
+    errors += check_or_write_tables(write=args.write)
+    if not args.no_exec and not args.write:
+        errors += run_quickstart()
+    for e in errors:
+        print(f"DOCS ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print("docs check passed")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
