@@ -9,8 +9,8 @@ Environment (full list in README.md "Environment variables & flags"):
   REPRO_HE_BACKEND=ref|pallas   backend for every HE op (default ref)
   XLA_FLAGS=--xla_force_host_platform_device_count=<n>
       simulate <n> devices on one host; must be set before the first jax
-      import.  `agg-sharded` spawns its own subprocess per device count,
-      so it needs no flags from the caller.
+      import.  `agg-sharded` and `uplink-sharded` spawn their own
+      subprocess per device count, so they need no flags from the caller.
 """
 from __future__ import annotations
 
@@ -294,37 +294,53 @@ def bench_wire():
           f"naive all-encrypted = {naive} B)", rows)
 
 
-def bench_agg_sharded():
-    """Multi-chip sharded HE aggregation vs the single-device fused engine.
+def _run_sharded_workers(module: str, bench: str, artifact: str,
+                         ndevs=(1, 2, 8)) -> dict:
+    """Shared scaffold for the subprocess-per-device-count benchmarks.
 
-    jax locks the device count at first init, so each point runs as a
-    subprocess of benchmarks/agg_sharded.py with
-    XLA_FLAGS=--xla_force_host_platform_device_count=<n>.  Records sharded
-    vs single-device weighted_sum, the streaming-ingest flush (one
-    chunk-batched accumulate launch per update), and bit-parity flags.
-    Emits BENCH_agg_sharded.json (repo root).
+    jax locks the device count at first init, so each point runs `module`
+    in its own subprocess with
+    XLA_FLAGS=--xla_force_host_platform_device_count=<n> and collects the
+    worker's last stdout line as JSON.  Writes {bench, per_devices} to
+    `artifact` (repo root) only if EVERY point succeeded — a partial
+    artifact would silently shrink the README table.  Returns per_devices.
     """
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-    rows, per_dev = [], {}
-    for ndev in (1, 2, 8):
+    per_dev = {}
+    for ndev in ndevs:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ndev}"
         env["PYTHONPATH"] = os.path.join(root, "src") + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
         proc = subprocess.run(
-            [sys.executable, "-m", "benchmarks.agg_sharded",
-             "--devices", str(ndev)],
+            [sys.executable, "-m", module, "--devices", str(ndev)],
             cwd=root, env=env, capture_output=True, text=True)
-        if proc.returncode != 0:
-            # a partial artifact would silently shrink the README table —
-            # refuse to write anything unless every point succeeded
+        out_lines = proc.stdout.strip().splitlines()
+        if proc.returncode != 0 or not out_lines:
             raise RuntimeError(
-                f"agg-sharded worker ndev={ndev} failed "
-                f"(BENCH_agg_sharded.json left untouched):\n{proc.stderr}")
-        r = json.loads(proc.stdout.strip().splitlines()[-1])
-        per_dev[str(ndev)] = r
+                f"{bench} worker ndev={ndev} failed "
+                f"({artifact} left untouched):\n{proc.stdout}\n{proc.stderr}")
+        per_dev[str(ndev)] = json.loads(out_lines[-1])
+    with open(os.path.join(root, artifact), "w") as f:
+        json.dump({"bench": bench, "per_devices": per_dev}, f, indent=2)
+    return per_dev
+
+
+def bench_agg_sharded():
+    """Multi-chip sharded HE aggregation vs the single-device fused engine.
+
+    Subprocess per device count (see _run_sharded_workers).  Records
+    sharded vs single-device weighted_sum, the streaming-ingest flush (one
+    chunk-batched accumulate launch per update), and bit-parity flags.
+    Emits BENCH_agg_sharded.json (repo root).
+    """
+    per_dev = _run_sharded_workers("benchmarks.agg_sharded", "agg_sharded",
+                                   "BENCH_agg_sharded.json")
+    rows = []
+    for ndev in sorted(per_dev, key=int):
+        r = per_dev[ndev]
         rows.append({
-            "devices": ndev, "mesh": str(r["mesh"]),
+            "devices": int(ndev), "mesh": str(r["mesh"]),
             "ws_single_ms": r["weighted_sum_single_ms"],
             "ws_sharded_ms": r["weighted_sum_sharded_ms"],
             "parity": r["sharded_parity"],
@@ -332,12 +348,36 @@ def bench_agg_sharded():
             "ingest_sharded_ms": r["stream_ingest_sharded_ms"],
             "launches_per_update": r["launches_per_update"],
         })
-    results = {"bench": "agg_sharded", "per_devices": per_dev}
-    out_path = os.path.join(root, "BENCH_agg_sharded.json")
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=2)
     _rows("Sharded HE aggregation: 1/2/8 host devices vs single-device "
           "fused baseline (BENCH_agg_sharded.json written)", rows)
+
+
+def bench_uplink_sharded():
+    """Sharded client uplink (seeded encrypt) vs the single-device path.
+
+    Times `ShardedHe.encrypt_values_seeded` (weights -> seeded ciphertext,
+    chunks sharded over `data`, limbs over `model`) against
+    `cipher.encrypt_values_seeded`, plus the pk encrypt pair and the
+    measured seeded-vs-full frame bytes.  Subprocess per device count (see
+    _run_sharded_workers).  Emits BENCH_uplink_sharded.json (repo root).
+    """
+    per_dev = _run_sharded_workers("benchmarks.uplink_sharded",
+                                   "uplink_sharded",
+                                   "BENCH_uplink_sharded.json")
+    rows = []
+    for ndev in sorted(per_dev, key=int):
+        r = per_dev[ndev]
+        rows.append({
+            "devices": int(ndev), "mesh": str(r["mesh"]),
+            "seeded_single_ms": r["encrypt_seeded_single_ms"],
+            "seeded_sharded_ms": r["encrypt_seeded_sharded_ms"],
+            "pk_single_ms": r["encrypt_pk_single_ms"],
+            "pk_sharded_ms": r["encrypt_pk_sharded_ms"],
+            "parity": r["sharded_parity"],
+            "uplink_ratio": r["uplink_ratio"],
+        })
+    _rows("Sharded client uplink: seeded encrypt at 1/2/8 host devices vs "
+          "single-device (BENCH_uplink_sharded.json written)", rows)
 
 
 def bench_roofline():
@@ -375,6 +415,7 @@ ALL = {
     "he": bench_he,
     "wire": bench_wire,
     "agg-sharded": bench_agg_sharded,
+    "uplink-sharded": bench_uplink_sharded,
     "roofline": bench_roofline,
 }
 
@@ -395,8 +436,11 @@ def main() -> None:
           "      kernels in interpret mode on CPU)\n"
           "  XLA_FLAGS=--xla_force_host_platform_device_count=<n>\n"
           "      simulate <n> host devices; must be set before the first\n"
-          "      jax import ('agg-sharded' manages this itself via\n"
-          "      subprocess workers)")
+          "      jax import ('agg-sharded' / 'uplink-sharded' manage this\n"
+          "      themselves via subprocess workers)\n"
+          "  REPRO_WIRE_VERSION=1|2\n"
+          "      pin the wire emit version (default 2; 1 = legacy layout\n"
+          "      for staged rollouts)")
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help="benchmark modes to run (default: all)")
     args = ap.parse_args()

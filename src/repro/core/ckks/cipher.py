@@ -58,6 +58,13 @@ class Ciphertext:
 # slice: the random draw's SHAPE never involves L for the ternary/gaussian
 # samplers, so the PRNG stream — and therefore the ciphertext — is
 # bit-identical however the limb axis is sharded.
+#
+# The encrypt bodies additionally derive one PRNG key PER CIPHERTEXT CHUNK
+# via fold_in(key, chunk_id) (`_chunk_keys`) and draw each chunk's samples
+# with shape (N,): no draw shape involves the batch size either, so the
+# stream is invariant under sharding the chunk axis across devices — each
+# shard re-derives its local chunks' keys from the global chunk ids.  This
+# is the wire-v2 derivation contract (DESIGN.md §9).
 
 
 def _ternary_residues(key, shape, qs):
@@ -79,6 +86,18 @@ def _gaussian_residues(key, shape, qs, sigma: float):
         .astype(jnp.int32)
     return _ref.mod_reduce_centered(e[..., None, :],
                                     jnp.asarray(qs)[:, None])  # [..., L, N]
+
+
+def _chunk_keys(key, start: int, count: int):
+    """Per-chunk PRNG keys for ciphertext chunks [start, start+count).
+
+    Chunk i's key is fold_in(key, i) with i the GLOBAL chunk index, so any
+    contiguous slice of the chunk axis can re-derive exactly its own keys —
+    the property that lets the sharded engine split the batch across the
+    `data` mesh axis without changing a single sampled bit (DESIGN.md §9).
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(start, start + count))
 
 
 def _uniform_residues(key, shape, qs):
@@ -127,19 +146,30 @@ def keygen(ctx: CkksContext, key) -> tuple[dict, dict]:
 # encrypt / decrypt
 # ---------------------------------------------------------------------------
 
-def _encrypt_body(ctx: CkksContext, pk0_mont, pk1_mont, m_coeff, key):
+def _encrypt_body(ctx: CkksContext, pk0_mont, pk1_mont, m_coeff, key,
+                  chunk_start: int = 0):
     """Shared trace of the public-key encrypt graph (m_coeff already
-    coefficient-domain residues)."""
+    coefficient-domain residues).
+
+    Chunk i's (u, e0, e1) draws come from split(fold_in(key, i), 3) — one
+    (N,)-shaped draw per chunk, never a (B, N) batch draw — so the stream
+    only depends on each chunk's global index, not on how many chunks this
+    trace happens to hold.  `chunk_start` offsets the global ids; the
+    sharded engine passes each shard's row offset and gets bit-identical
+    ciphertexts (DESIGN.md §9)."""
     b = m_coeff.shape[0]
     n = ctx.n_poly
     qs = ctx.tables.qs
-    k_u, k_e0, k_e1 = jax.random.split(key, 3)
+    sigma = ctx.error_sigma
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(
+        _chunk_keys(key, chunk_start, b))                    # [B, 3] keys
     m = ops.ntt_fwd(m_coeff, ctx)
-    u = ops.ntt_fwd(_ternary_residues(k_u, (b, n), qs), ctx)
-    e0 = ops.ntt_fwd(_gaussian_residues(k_e0, (b, n), qs, ctx.error_sigma),
-                     ctx)
-    e1 = ops.ntt_fwd(_gaussian_residues(k_e1, (b, n), qs, ctx.error_sigma),
-                     ctx)
+    u = ops.ntt_fwd(jax.vmap(
+        lambda k: _ternary_residues(k, (n,), qs))(k3[:, 0]), ctx)
+    e0 = ops.ntt_fwd(jax.vmap(
+        lambda k: _gaussian_residues(k, (n,), qs, sigma))(k3[:, 1]), ctx)
+    e1 = ops.ntt_fwd(jax.vmap(
+        lambda k: _gaussian_residues(k, (n,), qs, sigma))(k3[:, 2]), ctx)
     c0 = ops.mul_add(u, pk0_mont[None], ops.mod_add(e0, m, ctx), ctx)
     c1 = ops.mul_add(u, pk1_mont[None], e1, ctx)
     return jnp.stack([c0, c1], axis=-2)
@@ -219,10 +249,13 @@ def encrypt_coeffs_seeded(ctx: CkksContext, sk: dict, m_coeff, key,
     """Secret-key encryption with seed-expandable c1 (uplink compression).
 
     ct = (c0, c1) with c1 = a = PRG(a_seed) and c0 = -(a s) + e + m, so the
-    wire only needs (a_seed, c0) — half the fresh-ciphertext bytes.  The
-    decryption identity c0 + c1 s = m + e matches the public-key path, so
-    seeded and pk ciphertexts mix freely under the homomorphic ops.
-    `a_seed` must be unique per (client, round); reuse leaks m1 - m2.
+    wire only needs (a_seed, c0) — half the fresh-ciphertext bytes.  Chunk
+    b's c1 row expands from fold_in(PRNGKey(a_seed), b): the wire-v2
+    DERIVE_FOLD_CHUNK algorithm (DESIGN.md §9.2), matched bit for bit by
+    expand_a_rows and by the sharded client.  The decryption identity
+    c0 + c1 s = m + e matches the public-key path, so seeded and pk
+    ciphertexts mix freely under the homomorphic ops.  `a_seed` must be
+    unique per (client, round); reuse leaks m1 - m2.
     """
     scale = float(scale if scale is not None else ctx.delta)
     # PRNGKey is built host-side: a_seed is 64-bit on the wire, and the key
@@ -239,16 +272,26 @@ def _encrypt_seeded_graph(ctx: CkksContext, token, s_mont, m_coeff, key,
     return _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base)
 
 
-def _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base):
-    """Shared trace of the seeded secret-key encrypt graph."""
+def _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base,
+                             chunk_start: int = 0):
+    """Shared trace of the seeded secret-key encrypt graph.
+
+    Both streams are per-chunk (wire-v2 derivation, DESIGN.md §9):
+      c1 chunk i = uniform from fold_in(a_base, i)  — public, matches the
+          server-side expand_a_rows regeneration;
+      e  chunk i = gaussian from fold_in(key, i)    — secret noise, one
+          (N,) draw per chunk so the stream is chunk-shard-invariant.
+    """
     b = m_coeff.shape[0]
     n = ctx.n_poly
     qs = ctx.tables.qs
+    sigma = ctx.error_sigma
     m = ops.ntt_fwd(m_coeff, ctx)
-    keys = jax.vmap(lambda i: jax.random.fold_in(a_base, i))(jnp.arange(b))
-    a = jax.vmap(lambda k: _uniform_residues(k, (n,), qs))(keys)  # [B, L, N]
-    e = ops.ntt_fwd(_gaussian_residues(key, (b, n), qs, ctx.error_sigma),
-                    ctx)
+    a = jax.vmap(lambda k: _uniform_residues(k, (n,), qs))(
+        _chunk_keys(a_base, chunk_start, b))                 # [B, L, N]
+    e = ops.ntt_fwd(jax.vmap(
+        lambda k: _gaussian_residues(k, (n,), qs, sigma))(
+            _chunk_keys(key, chunk_start, b)), ctx)
     a_s = ops.mont_mul(a, s_mont[None], ctx)
     c0 = ops.mod_add(ops.mod_neg(a_s, ctx), ops.mod_add(e, m, ctx), ctx)
     return jnp.stack([c0, a], axis=-2)
@@ -266,8 +309,10 @@ def encrypt_values_seeded(ctx: CkksContext, sk: dict, values, key,
                           a_seed: int) -> Ciphertext:
     """f32[B, slots] -> seeded secret-key ciphertext in ONE dispatch.
 
-    Same wire convention as encrypt_coeffs_seeded (c1 = PRG(a_seed)); the
-    encode FFT runs inside the jitted graph.
+    Same wire convention as encrypt_coeffs_seeded (c1 = PRG(a_seed),
+    per-chunk DERIVE_FOLD_CHUNK expansion); the encode FFT runs inside the
+    jitted graph.  ShardedHe.encrypt_values_seeded is the multi-chip
+    version and produces identical bits.
     """
     a_base = jax.random.PRNGKey(int(a_seed))
     data = _encrypt_seeded_values_graph(ctx, ops.backend_token(),

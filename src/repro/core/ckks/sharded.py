@@ -30,9 +30,11 @@ Sharding rules:
   * batch axes are zero-padded up to a multiple of the ``data`` axis size
     inside the graph and sliced back after (zeros are inert under the
     modular ops and the padded rows are discarded).
-  * encrypt/keygen replicate over ``data`` (their PRNG draws must keep the
-    single-device shape); weighted_sum / weighted_accum / decrypt shard
-    both axes.
+  * every batched graph — including encrypt and seeded encrypt — shards
+    BOTH axes.  Encrypt sampling stays shard-invariant because every draw
+    is per chunk, keyed on fold_in(key, global_chunk_id) (DESIGN.md §9):
+    a shard re-derives exactly its own rows' keys from its row offset.
+    Only keygen replicates over ``data`` (its tensors have no batch axis).
 """
 from __future__ import annotations
 
@@ -153,10 +155,17 @@ class ShardedHe:
                 {"pk0_mont": pk0_mont, "pk1_mont": pk1_mont})
 
     def encrypt_values(self, pk: dict, values, key) -> Ciphertext:
-        """f32[B, slots] -> fresh ciphertext, encode FFT + encrypt in one
-        sharded dispatch.  Limbs shard over `model_axis`; the batch is
-        replicated over `data_axis` (the PRNG draw shape must not depend
-        on the sharding).  Bit-identical to cipher.encrypt_values."""
+        """f32[B, slots] -> fresh ciphertext, encode FFT + encrypt in ONE
+        sharded dispatch with no collective.
+
+        Limbs shard over `model_axis` AND the chunk/batch axis shards over
+        `data_axis`: every (u, e0, e1) draw is per chunk, keyed on
+        fold_in(key, global_chunk_id), so each shard re-derives exactly
+        the rows it owns and the result is bit-identical to
+        cipher.encrypt_values on one device for ANY mesh shape (the
+        shard-invariance contract, DESIGN.md §9.1; asserted in
+        tests/test_sharded.py).  Batches that do not divide the data axis
+        are zero-padded in-graph and sliced back."""
         self._check_limbs(self.ctx.n_limbs)
         data = _encrypt_values_graph(self, ops.backend_token(),
                                      pk["pk0_mont"], pk["pk1_mont"],
@@ -165,12 +174,49 @@ class ShardedHe:
 
     def encrypt_coeffs(self, pk: dict, m_coeff, key,
                        scale: float | None = None) -> Ciphertext:
-        """u32[B, L, N] encoded residues -> ciphertext (sharded encrypt)."""
+        """u32[B, L, N] encoded residues -> ciphertext; same sharding and
+        bit-identity contract as encrypt_values (chunks -> `data_axis`,
+        limbs -> `model_axis`, per-chunk key derivation)."""
         self._check_limbs(m_coeff.shape[-2])
         scale = float(scale if scale is not None else self.ctx.delta)
         data = _encrypt_coeffs_graph(self, ops.backend_token(),
                                      pk["pk0_mont"], pk["pk1_mont"],
                                      m_coeff, key)
+        return Ciphertext(data=data, scale=scale)
+
+    def encrypt_values_seeded(self, sk: dict, values, key,
+                              a_seed: int) -> Ciphertext:
+        """f32[B, slots] -> seeded secret-key ciphertext (uplink path) in
+        ONE sharded dispatch with no collective.
+
+        Same wire convention as cipher.encrypt_values_seeded: chunk b's
+        c1 row is PRG-expanded from fold_in(PRNGKey(a_seed), b) (wire-v2
+        derive id 1, DESIGN.md §9.2), so the wire layer ships (a_seed, c0)
+        at ~0.5x fresh-ciphertext bytes and a streaming server regenerates
+        each chunk independently.  Chunks shard over `data_axis`, limbs
+        over `model_axis`; the result is bit-identical to the
+        single-device path for any mesh shape — the noise stream is per
+        chunk, and the public `a` stream (whose draw shape includes L) is
+        drawn full-table per model shard and sliced, like keygen's `a`.
+        `a_seed` must be unique per (client, round); reuse leaks m1 - m2.
+        """
+        self._check_limbs(self.ctx.n_limbs)
+        a_base = jax.random.PRNGKey(int(a_seed))
+        data = _encrypt_seeded_values_graph(self, ops.backend_token(),
+                                            sk["s_mont"], values, key,
+                                            a_base)
+        return Ciphertext(data=data, scale=float(self.ctx.delta))
+
+    def encrypt_coeffs_seeded(self, sk: dict, m_coeff, key, a_seed: int,
+                              scale: float | None = None) -> Ciphertext:
+        """u32[B, L, N] encoded residues -> seeded ciphertext; sharding,
+        derivation, and uniqueness contract as encrypt_values_seeded."""
+        self._check_limbs(m_coeff.shape[-2])
+        scale = float(scale if scale is not None else self.ctx.delta)
+        a_base = jax.random.PRNGKey(int(a_seed))
+        data = _encrypt_seeded_coeffs_graph(self, ops.backend_token(),
+                                            sk["s_mont"], m_coeff, key,
+                                            a_base)
         return Ciphertext(data=data, scale=scale)
 
     def decrypt_to_coeffs(self, sk: dict, ct: Ciphertext):
@@ -352,53 +398,135 @@ def _keygen_graph(eng: ShardedHe, token, key):
     return f(key, *table_arrays(ctx.tables))
 
 
+def _local_chunk_keys(eng: ShardedHe, key, b_loc: int):
+    """Keys for this data-shard's chunk rows, derived from GLOBAL chunk ids.
+
+    Shard d of the data axis owns the contiguous rows
+    [d * b_loc, (d + 1) * b_loc); fold_in(key, global_id) re-derives exactly
+    the keys the single-device trace would use for those rows — the whole
+    shard-count-invariance argument in one line (DESIGN.md §9.1)."""
+    start = jax.lax.axis_index(eng.data_axis) * b_loc
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        start + jnp.arange(b_loc))
+
+
 def _encrypt_body_sharded(eng: ShardedHe, pk0, pk1, m_coeff, key, tabs):
-    """Per-shard encrypt body: same op sequence as cipher._encrypt_body,
-    limb constants from the local table shard."""
+    """Per-shard encrypt body: same op sequence and per-chunk key
+    derivation as cipher._encrypt_body, limb constants from the local table
+    shard, chunk keys from the shard's global row offset."""
     ctx = eng.ctx
-    b, n = m_coeff.shape[0], ctx.n_poly
+    b_loc, n = m_coeff.shape[0], ctx.n_poly
     sigma = float(ctx.error_sigma)
     t = local_tables(tabs)
-    q, qi = _col(t.qs), _col(t.qinv_negs)
-    k_u, k_e0, k_e1 = jax.random.split(key, 3)
+    q = _col(t.qs)
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(
+        _local_chunk_keys(eng, key, b_loc))
     m = ops.apply("ntt_fwd", t, m_coeff)
-    u = ops.apply("ntt_fwd", t, _ternary_residues(k_u, (b, n), t.qs))
-    e0 = ops.apply("ntt_fwd", t,
-                   _gaussian_residues(k_e0, (b, n), t.qs, sigma))
-    e1 = ops.apply("ntt_fwd", t,
-                   _gaussian_residues(k_e1, (b, n), t.qs, sigma))
+    u = ops.apply("ntt_fwd", t, jax.vmap(
+        lambda k: _ternary_residues(k, (n,), t.qs))(k3[:, 0]))
+    e0 = ops.apply("ntt_fwd", t, jax.vmap(
+        lambda k: _gaussian_residues(k, (n,), t.qs, sigma))(k3[:, 1]))
+    e1 = ops.apply("ntt_fwd", t, jax.vmap(
+        lambda k: _gaussian_residues(k, (n,), t.qs, sigma))(k3[:, 2]))
     c0 = ops.apply("mul_add", t, u, pk0[None], _ref.mod_add(e0, m, q))
     c1 = ops.apply("mul_add", t, u, pk1[None], e1)
     return jnp.stack([c0, c1], axis=-2)
 
 
-def _encrypt_shard_map(eng: ShardedHe, l: int):
-    ma = eng.model_axis
+def _encrypt_shard_map(eng: ShardedHe):
+    da, ma = eng.data_axis, eng.model_axis
 
     def body(pk0, pk1, m_coeff, key, *tabs):
         return _encrypt_body_sharded(eng, pk0, pk1, m_coeff, key, tabs)
 
     return shard_map(
         body, mesh=eng.mesh,
-        in_specs=(P(ma, None), P(ma, None), P(None, ma, None), P(None))
+        in_specs=(P(ma, None), P(ma, None), P(da, ma, None), P(None))
         + table_specs(ma),
-        out_specs=P(None, ma, None, None), check_rep=False)
+        out_specs=P(da, ma, None, None), check_rep=False)
 
 
 @functools.partial(jax.jit, static_argnames=("eng", "token"))
 def _encrypt_coeffs_graph(eng: ShardedHe, token, pk0, pk1, m_coeff, key):
     l = m_coeff.shape[-2]
     t = eng.ctx.tables.take(l)
-    return _encrypt_shard_map(eng, l)(pk0[:l], pk1[:l], m_coeff, key,
-                                      *table_arrays(t))
+    x, r = _pad_rows(m_coeff, eng.n_data)
+    out = _encrypt_shard_map(eng)(pk0[:l], pk1[:l], x, key,
+                                  *table_arrays(t))
+    return out[:r]
 
 
 @functools.partial(jax.jit, static_argnames=("eng", "token"))
 def _encrypt_values_graph(eng: ShardedHe, token, pk0, pk1, values, key):
     m_coeff = encoding.encode_jnp(values, eng.ctx)
     t = eng.ctx.tables
-    return _encrypt_shard_map(eng, eng.ctx.n_limbs)(pk0, pk1, m_coeff, key,
-                                                    *table_arrays(t))
+    x, r = _pad_rows(m_coeff, eng.n_data)
+    out = _encrypt_shard_map(eng)(pk0, pk1, x, key, *table_arrays(t))
+    return out[:r]
+
+
+def _encrypt_seeded_body_sharded(eng: ShardedHe, s_mont, m_coeff, key,
+                                 a_base, tabs):
+    """Per-shard seeded (secret-key) encrypt body.
+
+    The public c1 = a stream must match the server-side expand_a_rows
+    regeneration bit for bit, and its draw shape includes L — so, like
+    keygen's uniform `a`, every model shard draws the FULL limb table per
+    chunk and slices its local limbs.  The secret noise draw is (N,) per
+    chunk and limb-free, so it broadcasts against the local primes."""
+    ctx = eng.ctx
+    b_loc, n = m_coeff.shape[0], ctx.n_poly
+    sigma = float(ctx.error_sigma)
+    t = local_tables(tabs)
+    q = _col(t.qs)
+    l_loc = ctx.n_limbs // eng.n_model
+    qs_full = np.asarray(ctx.tables.qs)
+    m = ops.apply("ntt_fwd", t, m_coeff)
+    a_full = jax.vmap(lambda k: _uniform_residues(k, (n,), qs_full))(
+        _local_chunk_keys(eng, a_base, b_loc))        # [b_loc, L_full, N]
+    li = jax.lax.axis_index(eng.model_axis)
+    a = jax.lax.dynamic_slice_in_dim(a_full, li * l_loc, l_loc, axis=1)
+    e = ops.apply("ntt_fwd", t, jax.vmap(
+        lambda k: _gaussian_residues(k, (n,), t.qs, sigma))(
+            _local_chunk_keys(eng, key, b_loc)))
+    a_s = _ref.mont_mul(a, s_mont[None], q, _col(t.qinv_negs))
+    c0 = _ref.mod_add(_ref.mod_neg(a_s, q), _ref.mod_add(e, m, q), q)
+    return jnp.stack([c0, a], axis=-2)
+
+
+def _encrypt_seeded_shard_map(eng: ShardedHe):
+    da, ma = eng.data_axis, eng.model_axis
+
+    def body(s_mont, m_coeff, key, a_base, *tabs):
+        return _encrypt_seeded_body_sharded(eng, s_mont, m_coeff, key,
+                                            a_base, tabs)
+
+    return shard_map(
+        body, mesh=eng.mesh,
+        in_specs=(P(ma, None), P(da, ma, None), P(None), P(None))
+        + table_specs(ma),
+        out_specs=P(da, ma, None, None), check_rep=False)
+
+
+@functools.partial(jax.jit, static_argnames=("eng", "token"))
+def _encrypt_seeded_coeffs_graph(eng: ShardedHe, token, s_mont, m_coeff,
+                                 key, a_base):
+    t = eng.ctx.tables
+    x, r = _pad_rows(m_coeff, eng.n_data)
+    out = _encrypt_seeded_shard_map(eng)(s_mont, x, key, a_base,
+                                         *table_arrays(t))
+    return out[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("eng", "token"))
+def _encrypt_seeded_values_graph(eng: ShardedHe, token, s_mont, values, key,
+                                 a_base):
+    m_coeff = encoding.encode_jnp(values, eng.ctx)
+    t = eng.ctx.tables
+    x, r = _pad_rows(m_coeff, eng.n_data)
+    out = _encrypt_seeded_shard_map(eng)(s_mont, x, key, a_base,
+                                         *table_arrays(t))
+    return out[:r]
 
 
 @functools.partial(jax.jit, static_argnames=("eng", "token"))

@@ -88,31 +88,51 @@ class SelectiveHEAggregator:
 
     # -- client side ---------------------------------------------------------
 
-    def client_protect(self, params, pk: dict, key) -> ProtectedUpdate:
+    def client_protect(self, params, pk: dict, key,
+                       sharded=None) -> ProtectedUpdate:
         vec, _ = packing.flatten_params(params)
-        return self.client_protect_vec(vec, pk, key)
+        return self.client_protect_vec(vec, pk, key, sharded=sharded)
 
-    def client_protect_vec(self, vec, pk: dict, key) -> ProtectedUpdate:
+    def client_protect_vec(self, vec, pk: dict, key,
+                           sharded=None) -> ProtectedUpdate:
+        """Protect one flat update vector.
+
+        With `sharded` (a core.ckks.sharded.ShardedHe), the encode FFT +
+        encrypt run as one sharded dispatch over its mesh — ciphertext
+        chunks along `data`, limbs along `model` — bit-identical to the
+        single-device path (per-chunk key derivation, DESIGN.md §9).
+        """
         enc_vals, plain = packing.split_by_mask(vec, self.part)
         k_enc, k_dp = jax.random.split(key)
         # encode FFT + encrypt run as ONE jitted dispatch (weights ->
         # ciphertext without leaving the graph)
-        ct = cipher.encrypt_values(self.ctx, pk, enc_vals, k_enc)
+        if sharded is not None:
+            ct = sharded.encrypt_values(pk, enc_vals, k_enc)
+        else:
+            ct = cipher.encrypt_values(self.ctx, pk, enc_vals, k_enc)
         if self.cfg.dp_b > 0:
             plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
         return ProtectedUpdate(ct=ct, plain=plain)
 
-    def client_protect_seeded(self, params, sk: dict, key,
-                              a_seed: int) -> ProtectedUpdate:
+    def client_protect_seeded(self, params, sk: dict, key, a_seed: int,
+                              sharded=None) -> ProtectedUpdate:
         """client_protect via the seeded secret-key encrypt path: c1 is
         PRG(a_seed), so the wire layer (repro.wire) can ship (seed, c0) and
         halve uplink ciphertext bytes.  `a_seed` must be unique per
-        (client, round)."""
+        (client, round).
+
+        With `sharded`, the whole weights -> seeded-ciphertext graph is one
+        multi-chip dispatch (ShardedHe.encrypt_values_seeded) producing the
+        same bits as the single-device path — the uplink counterpart of the
+        server's sharded aggregation."""
         vec, _ = packing.flatten_params(params)
         enc_vals, plain = packing.split_by_mask(vec, self.part)
         k_enc, k_dp = jax.random.split(key)
-        ct = cipher.encrypt_values_seeded(self.ctx, sk, enc_vals, k_enc,
-                                          a_seed)
+        if sharded is not None:
+            ct = sharded.encrypt_values_seeded(sk, enc_vals, k_enc, a_seed)
+        else:
+            ct = cipher.encrypt_values_seeded(self.ctx, sk, enc_vals, k_enc,
+                                              a_seed)
         if self.cfg.dp_b > 0:
             plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
         return ProtectedUpdate(ct=ct, plain=plain)

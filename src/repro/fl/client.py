@@ -99,15 +99,19 @@ class FLClient:
     def protect_and_pack(self, aggregator, local_params, *, rnd: int,
                          policy: wire_compress.WirePolicy,
                          pk: dict | None = None, sk: dict | None = None,
-                         key=None) -> bytes:
+                         key=None, sharded=None) -> bytes:
         """Protect the local update and serialize it for the uplink.
 
         With policy.seed_ciphertexts and an available sk, the seeded
         secret-key encrypt path is used and the wire carries (seed, c0) —
-        roughly half the ciphertext bytes.  Bytes are accounted at the
-        receiving end: the server ledgers this uplink blob when it ingests
-        it (FLServer.aggregate_wire); this client ledgers the downlink it
-        receives (receive_global).
+        roughly half the ciphertext bytes.  With `sharded` (a
+        core.ckks.sharded.ShardedHe), the weights -> ciphertext graph runs
+        as one sharded dispatch over its mesh and — because the per-chunk
+        key derivation is shard-invariant (DESIGN.md §9) — the emitted
+        frames are byte-identical to the single-device client's.  Bytes
+        are accounted at the receiving end: the server ledgers this uplink
+        blob when it ingests it (FLServer.aggregate_wire); this client
+        ledgers the downlink it receives (receive_global).
         """
         key = key if key is not None else jax.random.PRNGKey(
             rnd * 100_003 + self.cid)
@@ -115,10 +119,11 @@ class FLClient:
         if policy.seed_ciphertexts and sk is not None:
             a_seed = rnd * 1_000_003 + self.cid   # unique per (client, round)
             upd = aggregator.client_protect_seeded(local_params, sk, key,
-                                                   a_seed)
+                                                   a_seed, sharded=sharded)
             seeded = wire_compress.seed_compress(upd.ct, a_seed)
         else:
-            upd = aggregator.client_protect(local_params, pk, key)
+            upd = aggregator.client_protect(local_params, pk, key,
+                                            sharded=sharded)
         return wire_stream.pack_update_frames(
             upd, cid=self.cid, n_samples=max(1, self.n_samples), rnd=rnd,
             seeded=seeded, plain_codec=policy.plain_codec)

@@ -20,16 +20,29 @@ import numpy as np
 
 
 def _make_mesh(shape, axes, devices):
-    """jax.make_mesh across jax versions: axis_types only where supported."""
+    """jax.make_mesh across jax versions: axis_types only where supported.
+
+    Failures (usually a device count that cannot fill `shape`) re-raise
+    with a pointer to the knob that fixes them — like every other error in
+    this module, it names the README section so operators never have to
+    read this source to recover."""
     import inspect
 
     import jax
 
-    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
-        return jax.make_mesh(
-            shape, axes, devices=devices,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes, devices=devices)
+    try:
+        if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+            return jax.make_mesh(
+                shape, axes, devices=devices,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        return jax.make_mesh(shape, axes, devices=devices)
+    except ValueError as e:
+        raise RuntimeError(
+            f"could not build mesh {dict(zip(axes, shape))}: {e}. "
+            "Host-simulated devices come from XLA_FLAGS="
+            "--xla_force_host_platform_device_count=<n>, which must be set "
+            "before the first jax import — see README.md 'Environment "
+            "variables & flags'.") from e
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -9,12 +9,14 @@ See DESIGN.md §6.
 """
 from repro.wire.budget import (BandwidthLedger, DOWNLINK, K_CIPHERTEXT,
                                K_META, K_PLAIN, K_SEEDED_CT, UPLINK)
-from repro.wire.compress import (COMPACT, LOSSLESS, SeededCiphertext,
-                                 WirePolicy, dequantize_plain, limb_drop,
+from repro.wire.compress import (COMPACT, DERIVE_FOLD_CHUNK, LOSSLESS,
+                                 SeededCiphertext, WirePolicy,
+                                 dequantize_plain, limb_drop,
                                  quantize_plain, seed_compress)
-from repro.wire.format import (FrameReader, WireError, deserialize,
-                               iter_frames, serialize_ciphertext,
-                               serialize_keyset, serialize_partition,
+from repro.wire.format import (SUPPORTED_VERSIONS, VERSION, FrameReader,
+                               WireError, deserialize, iter_frames,
+                               serialize_ciphertext, serialize_keyset,
+                               serialize_partition,
                                serialize_seeded_ciphertext, serialize_update)
 from repro.wire.stream import (StreamIngest, UpdateMeta, pack_update_frames,
                                peek_update_meta)
@@ -22,6 +24,7 @@ from repro.wire.stream import (StreamIngest, UpdateMeta, pack_update_frames,
 __all__ = [
     "BandwidthLedger", "UPLINK", "DOWNLINK", "K_CIPHERTEXT", "K_SEEDED_CT",
     "K_PLAIN", "K_META", "WirePolicy", "LOSSLESS", "COMPACT",
+    "VERSION", "SUPPORTED_VERSIONS", "DERIVE_FOLD_CHUNK",
     "SeededCiphertext", "seed_compress", "limb_drop", "quantize_plain",
     "dequantize_plain", "FrameReader", "WireError", "deserialize",
     "iter_frames", "serialize_ciphertext", "serialize_seeded_ciphertext",

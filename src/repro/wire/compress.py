@@ -58,42 +58,62 @@ COMPACT = WirePolicy(seed_ciphertexts=True, downlink_keep_limbs=0,
 # seed-expanded ciphertexts
 # ---------------------------------------------------------------------------
 
+# Per-chunk seed-derivation algorithm ids (wire v2 SEEDED_CIPHERTEXT frames
+# carry one; v1 frames imply DERIVE_FOLD_CHUNK).  Defined here rather than
+# in wire/format.py because format.py imports SeededCiphertext from this
+# module; format re-exports them as the wire-facing names.
+#
+# DERIVE_FOLD_CHUNK: chunk b's c1 row is the uniform-residue expansion of
+# fold_in(PRNGKey(seed), chunk_offset + b) — the algorithm implemented by
+# cipher.expand_a_rows and, identically, by the sharded client encrypt
+# (normative pseudocode: DESIGN.md §9.2).
+DERIVE_FOLD_CHUNK = 1
+
 
 @dataclasses.dataclass
 class SeededCiphertext:
     """Wire form of a fresh seeded encryption: c0 plus the c1 PRNG seed.
 
     c0: u32[B, L, N] (NTT domain); expand() regenerates c1 = PRG(seed) and
-    returns the full in-memory Ciphertext.  Chunk b's c1 row derives from
-    fold_in(PRNGKey(seed), chunk_index), so a streaming receiver expands
-    each arriving chunk independently (chunk_offset tracks the index of
-    c0's first row within the original update).
+    returns the full in-memory Ciphertext.  `derive` names the per-chunk
+    seed-derivation algorithm (DERIVE_FOLD_CHUNK: chunk b's c1 row comes
+    from fold_in(PRNGKey(seed), chunk_offset + b)), so a streaming
+    receiver expands each arriving chunk independently (chunk_offset
+    tracks the index of c0's first row within the original update).  The
+    field rides in wire-v2 frames; v1 frames imply DERIVE_FOLD_CHUNK.
     """
 
     c0: Any
     seed: int
     scale: float
     chunk_offset: int = 0
+    derive: int = DERIVE_FOLD_CHUNK
 
     @property
     def n_chunks(self) -> int:
         return int(self.c0.shape[0])
 
     def expand(self, ctx: CkksContext) -> Ciphertext:
+        if self.derive != DERIVE_FOLD_CHUNK:
+            raise ValueError(
+                f"unknown seed-derivation id {self.derive}; this build "
+                f"implements {DERIVE_FOLD_CHUNK} (DESIGN.md §9.2)")
         a = cipher.expand_a_rows(ctx, self.seed, self.chunk_offset,
                                  self.n_chunks)
         data = jnp.stack([jnp.asarray(self.c0), a], axis=-2)  # [B, L, 2, N]
         return Ciphertext(data=data, scale=self.scale)
 
 
-def seed_compress(ct: Ciphertext, seed: int) -> SeededCiphertext:
+def seed_compress(ct: Ciphertext, seed: int,
+                  derive: int = DERIVE_FOLD_CHUNK) -> SeededCiphertext:
     """Strip the deterministic c1 from a seeded encryption for the wire.
 
-    `ct` must have come from cipher.encrypt_coeffs_seeded with this seed;
+    `ct` must have come from cipher.encrypt_coeffs_seeded /
+    ShardedHe.encrypt_*_seeded with this seed and derivation algorithm;
     caller-enforced (a mismatch decrypts to noise, caught by tests).
     """
     return SeededCiphertext(c0=ct.data[..., 0, :], seed=int(seed),
-                            scale=ct.scale)
+                            scale=ct.scale, derive=int(derive))
 
 
 # ---------------------------------------------------------------------------

@@ -12,10 +12,28 @@ frame).  Arrays inside payloads are encoded as
     [u8 dtype_code][u8 ndim][u32 dims...][raw little-endian bytes]
 
 All integers are little-endian.  See DESIGN.md §6 for the full layout and
-the compression flags.
+the compression flags; DESIGN.md §9.2 is the normative v2 appendix.
+
+Versioning (DESIGN.md §9.2)
+---------------------------
+The header's version byte is per FRAME, so frames of different versions mix
+freely in one stream (a v2 update may nest a v1 ciphertext frame and vice
+versa).  This build speaks versions 1 and 2:
+
+  * v1 — the PR-1 layout.  Decoded forever; never removed.
+  * v2 — identical to v1 for every frame type EXCEPT SEEDED_CIPHERTEXT,
+    which gains a trailing `u8 derive` field in the fixed header naming the
+    per-chunk seed-derivation algorithm (DERIVE_* below).  v1 seeded frames
+    decode with the implicit v1 algorithm, DERIVE_FOLD_CHUNK.
+
+Emission defaults to `VERSION` (= 2); set REPRO_WIRE_VERSION=1 to pin a
+sender to the legacy layout during rollout (canonical knob list: README.md
+"Environment variables & flags").  Unknown versions raise WireError — the
+protocol never guesses at layouts it postdates.
 """
 from __future__ import annotations
 
+import os
 import struct
 from typing import Iterator
 
@@ -23,25 +41,33 @@ import numpy as np
 
 from repro.core.ckks.cipher import Ciphertext
 from repro.core.packing import MaskPartition
-from repro.wire.compress import SeededCiphertext
+from repro.wire.compress import DERIVE_FOLD_CHUNK, SeededCiphertext
 
 MAGIC = b"RPWR"
-VERSION = 1
+VERSION = 2                      # default emit version
+SUPPORTED_VERSIONS = (1, 2)      # what parse_frame accepts
 
 _HEADER = struct.Struct("<4sBBHQ")
 HEADER_BYTES = _HEADER.size
 
-# frame types
-T_CIPHERTEXT = 0x01
-T_SEEDED_CIPHERTEXT = 0x02
-T_PROTECTED_UPDATE = 0x03
-T_KEYSET = 0x04            # named-array bundle: pk / eval keys / sk shares
-T_MASK_PARTITION = 0x05
-# streaming uplink protocol (repro.wire.stream)
-T_UPDATE_BEGIN = 0x06
-T_CT_CHUNK = 0x07
-T_PLAIN_SEGMENT = 0x08
-T_UPDATE_END = 0x09
+# frame types (payload layouts: DESIGN.md §8.5 for v1, §9.2 for the v2 diff)
+T_CIPHERTEXT = 0x01          # f64 scale + u32[B, L, 2, N] array (all versions)
+T_SEEDED_CIPHERTEXT = 0x02   # v1: f64 scale, u64 seed, u32 chunk_offset +
+                             #     u32[B, L, N] c0
+                             # v2: + u8 derive between chunk_offset and c0
+T_PROTECTED_UPDATE = 0x03    # nested (SEEDED_)CIPHERTEXT + PLAIN_SEGMENT
+T_KEYSET = 0x04              # named-array bundle: pk / eval keys / sk shares
+T_MASK_PARTITION = 0x05      # u64 n_total, u32 slots + enc/plain idx arrays
+# streaming uplink protocol (repro.wire.stream); layouts version-invariant
+T_UPDATE_BEGIN = 0x06        # u32 cid, n_samples, round, n_chunks; u8 ct_kind
+T_CT_CHUNK = 0x07            # u32 chunk_idx + one nested one-chunk ct frame
+T_PLAIN_SEGMENT = 0x08       # u8 codec, f64 qscale + quantized array
+T_UPDATE_END = 0x09          # empty payload
+
+# seed-derivation algorithm ids carried by v2 SEEDED_CIPHERTEXT frames
+# (DESIGN.md §9.2; DERIVE_FOLD_CHUNK lives in compress.py to avoid a
+# circular import and is re-exported here as the wire-facing name)
+DERIVES = (DERIVE_FOLD_CHUNK,)
 
 _DTYPE_CODES = {
     np.dtype(np.uint32): 0, np.dtype(np.float32): 1, np.dtype(np.float16): 2,
@@ -62,29 +88,81 @@ class NeedMoreData(WireError):
     """Raised when a buffer ends mid-frame (incremental readers catch it)."""
 
 
+def _emit_version_from_env() -> int:
+    """Sender-side pin for staged rollouts: REPRO_WIRE_VERSION=1 makes
+    every frame() call emit the legacy layout (README.md "Environment
+    variables & flags").  Read once at import, like REPRO_HE_BACKEND;
+    bad values fail HERE, loudly, not at the first emit."""
+    raw = os.environ.get("REPRO_WIRE_VERSION")
+    if raw is None:
+        return VERSION
+    try:
+        v = int(raw)
+    except ValueError:
+        v = None
+    if v not in SUPPORTED_VERSIONS:
+        raise WireError(
+            f"REPRO_WIRE_VERSION={raw!r} is not a supported wire version; "
+            f"this build speaks {SUPPORTED_VERSIONS} (README.md "
+            "'Environment variables & flags')")
+    return v
+
+
+EMIT_VERSION = _emit_version_from_env()
+
+
 # ---------------------------------------------------------------------------
 # frame envelope
 # ---------------------------------------------------------------------------
 
 
-def frame(ftype: int, payload: bytes, flags: int = 0) -> bytes:
-    return _HEADER.pack(MAGIC, VERSION, ftype, flags, len(payload)) + payload
+def frame(ftype: int, payload: bytes, flags: int = 0,
+          version: int | None = None) -> bytes:
+    """Wrap `payload` in a frame envelope.
+
+    `version` defaults to EMIT_VERSION (the REPRO_WIRE_VERSION override,
+    else VERSION); pass it explicitly to emit a specific legacy layout —
+    the caller is responsible for the payload matching that version."""
+    version = EMIT_VERSION if version is None else version
+    if version not in SUPPORTED_VERSIONS:
+        raise WireError(
+            f"cannot emit wire version {version}; this build speaks "
+            f"{SUPPORTED_VERSIONS} (README.md 'Environment variables & "
+            "flags', REPRO_WIRE_VERSION)")
+    return _HEADER.pack(MAGIC, version, ftype, flags, len(payload)) + payload
 
 
-def parse_frame(buf, off: int = 0) -> tuple[int, int, memoryview, int]:
-    """-> (ftype, flags, payload, next_off).  Raises NeedMoreData/WireError."""
+def parse_frame_v(buf, off: int = 0) -> tuple[int, int, int, memoryview, int]:
+    """-> (ftype, flags, version, payload, next_off).
+
+    Raises NeedMoreData on a truncated buffer; WireError on bad magic or a
+    version this build does not speak (the error names the README section
+    and the REPRO_WIRE_VERSION sender pin so operators know which side to
+    flip)."""
     view = memoryview(buf)
     if len(view) - off < HEADER_BYTES:
         raise NeedMoreData("incomplete frame header")
     magic, version, ftype, flags, plen = _HEADER.unpack_from(view, off)
     if magic != MAGIC:
         raise WireError(f"bad magic {magic!r} at offset {off}")
-    if version != VERSION:
-        raise WireError(f"unsupported wire version {version}")
+    if version not in SUPPORTED_VERSIONS:
+        raise WireError(
+            f"unsupported wire version {version}: this build speaks "
+            f"versions {SUPPORTED_VERSIONS}. Upgrade this receiver, or pin "
+            "the sender to a legacy layout with REPRO_WIRE_VERSION=1 — see "
+            "README.md 'Environment variables & flags' and the version "
+            "rules in DESIGN.md §9.2")
     end = off + HEADER_BYTES + plen
     if len(view) < end:
         raise NeedMoreData("incomplete frame payload")
-    return ftype, flags, view[off + HEADER_BYTES:end], end
+    return ftype, flags, version, view[off + HEADER_BYTES:end], end
+
+
+def parse_frame(buf, off: int = 0) -> tuple[int, int, memoryview, int]:
+    """-> (ftype, flags, payload, next_off); parse_frame_v without the
+    version (kept for callers that only split frames)."""
+    ftype, flags, _, payload, end = parse_frame_v(buf, off)
+    return ftype, flags, payload, end
 
 
 def iter_frames(buf) -> Iterator[tuple[int, int, memoryview]]:
@@ -159,10 +237,11 @@ def unpack_array(payload, off: int = 0) -> tuple[np.ndarray, int]:
 # ---------------------------------------------------------------------------
 
 
-def serialize_ciphertext(ct: Ciphertext) -> bytes:
+def serialize_ciphertext(ct: Ciphertext, version: int | None = None) -> bytes:
+    """Full ciphertext -> one frame (payload layout version-invariant)."""
     payload = struct.pack("<d", float(ct.scale)) + pack_array(
         np.asarray(ct.data, dtype=np.uint32))
-    return frame(T_CIPHERTEXT, payload)
+    return frame(T_CIPHERTEXT, payload, version=version)
 
 
 def _parse_ciphertext(payload) -> Ciphertext:
@@ -171,18 +250,44 @@ def _parse_ciphertext(payload) -> Ciphertext:
     return Ciphertext(data=data, scale=scale)
 
 
-def serialize_seeded_ciphertext(sct: SeededCiphertext) -> bytes:
-    payload = struct.pack("<dQI", float(sct.scale), int(sct.seed),
-                          int(sct.chunk_offset)) + pack_array(
-        np.asarray(sct.c0, dtype=np.uint32))
-    return frame(T_SEEDED_CIPHERTEXT, payload)
+def serialize_seeded_ciphertext(sct: SeededCiphertext,
+                                version: int | None = None) -> bytes:
+    """Seeded ciphertext -> one frame.
+
+    v2 (default) carries sct.derive as the per-chunk seed-derivation id;
+    v1 has no derive field and can only express DERIVE_FOLD_CHUNK (the
+    implicit v1 algorithm) — any other derive id refuses to down-serialize
+    rather than silently changing meaning."""
+    version = EMIT_VERSION if version is None else version
+    arr = pack_array(np.asarray(sct.c0, dtype=np.uint32))
+    head = struct.pack("<dQI", float(sct.scale), int(sct.seed),
+                       int(sct.chunk_offset))
+    if version == 1:
+        if sct.derive != DERIVE_FOLD_CHUNK:
+            raise WireError(
+                f"seed-derivation id {sct.derive} is not expressible in "
+                "wire v1 frames (v1 implies derive="
+                f"{DERIVE_FOLD_CHUNK}); emit v2 (DESIGN.md §9.2)")
+        return frame(T_SEEDED_CIPHERTEXT, head + arr, version=1)
+    return frame(T_SEEDED_CIPHERTEXT,
+                 head + struct.pack("<B", int(sct.derive)) + arr,
+                 version=version)
 
 
-def _parse_seeded_ciphertext(payload) -> SeededCiphertext:
+def _parse_seeded_ciphertext(payload, version: int = 1) -> SeededCiphertext:
     scale, seed, chunk_offset = struct.unpack_from("<dQI", payload, 0)
-    c0, _ = unpack_array(payload, struct.calcsize("<dQI"))
+    off = struct.calcsize("<dQI")
+    derive = DERIVE_FOLD_CHUNK
+    if version >= 2:
+        (derive,) = struct.unpack_from("<B", payload, off)
+        off += 1
+        if derive not in DERIVES:
+            raise WireError(
+                f"unknown seed-derivation id {derive} in v{version} seeded "
+                f"ciphertext; this build knows {DERIVES} (DESIGN.md §9.2)")
+    c0, _ = unpack_array(payload, off)
     return SeededCiphertext(c0=c0, seed=seed, scale=scale,
-                            chunk_offset=chunk_offset)
+                            chunk_offset=chunk_offset, derive=derive)
 
 
 # ---------------------------------------------------------------------------
@@ -190,11 +295,11 @@ def _parse_seeded_ciphertext(payload) -> SeededCiphertext:
 # ---------------------------------------------------------------------------
 
 
-def serialize_plain_segment(arr: np.ndarray, codec: str,
-                            qscale: float) -> bytes:
+def serialize_plain_segment(arr: np.ndarray, codec: str, qscale: float,
+                            version: int | None = None) -> bytes:
     payload = struct.pack("<Bd", _PLAIN_CODEC_IDS[codec], float(qscale)) \
         + pack_array(arr)
-    return frame(T_PLAIN_SEGMENT, payload)
+    return frame(T_PLAIN_SEGMENT, payload, version=version)
 
 
 def _parse_plain_segment(payload) -> tuple[np.ndarray, str, float]:
@@ -209,30 +314,35 @@ def _parse_plain_segment(payload) -> tuple[np.ndarray, str, float]:
 
 
 def serialize_update(upd, *, seeded: SeededCiphertext | None = None,
-                     plain_codec: str = "f32") -> bytes:
+                     plain_codec: str = "f32",
+                     version: int | None = None) -> bytes:
     """ProtectedUpdate -> one nested frame.
 
     If `seeded` is given it replaces upd.ct on the wire (the caller got it
     from compress.seed_compress on a seeded encryption of the same values).
+    `version` pins every frame in the nest (default: the emit default).
     """
     from repro.wire import compress as _c
-    ct_frame = (serialize_seeded_ciphertext(seeded) if seeded is not None
-                else serialize_ciphertext(upd.ct))
+    ct_frame = (serialize_seeded_ciphertext(seeded, version=version)
+                if seeded is not None
+                else serialize_ciphertext(upd.ct, version=version))
     arr, qscale = _c.quantize_plain(np.asarray(upd.plain), plain_codec)
     return frame(T_PROTECTED_UPDATE,
-                 ct_frame + serialize_plain_segment(arr, plain_codec, qscale))
+                 ct_frame + serialize_plain_segment(arr, plain_codec, qscale,
+                                                    version=version),
+                 version=version)
 
 
 def _parse_update(payload, ctx):
     from repro.core.secure_agg import ProtectedUpdate
     from repro.wire import compress as _c
-    ftype, _, ct_payload, off = parse_frame(payload, 0)
+    ftype, _, ct_version, ct_payload, off = parse_frame_v(payload, 0)
     if ftype == T_CIPHERTEXT:
         ct = _parse_ciphertext(ct_payload)
     elif ftype == T_SEEDED_CIPHERTEXT:
         if ctx is None:
             raise WireError("seeded ciphertext needs a ctx to expand")
-        ct = _parse_seeded_ciphertext(ct_payload).expand(ctx)
+        ct = _parse_seeded_ciphertext(ct_payload, ct_version).expand(ctx)
     else:
         raise WireError(f"unexpected inner frame type {ftype}")
     ftype, _, pl_payload, _ = parse_frame(payload, off)
@@ -293,19 +403,24 @@ def _parse_partition(payload) -> MaskPartition:
 # ---------------------------------------------------------------------------
 
 _PARSERS = {
-    T_CIPHERTEXT: lambda p, ctx: _parse_ciphertext(p),
-    T_SEEDED_CIPHERTEXT: lambda p, ctx: _parse_seeded_ciphertext(p),
-    T_PROTECTED_UPDATE: _parse_update,
-    T_KEYSET: lambda p, ctx: _parse_keyset(p),
-    T_MASK_PARTITION: lambda p, ctx: _parse_partition(p),
+    T_CIPHERTEXT: lambda p, ctx, v: _parse_ciphertext(p),
+    T_SEEDED_CIPHERTEXT: lambda p, ctx, v: _parse_seeded_ciphertext(p, v),
+    T_PROTECTED_UPDATE: lambda p, ctx, v: _parse_update(p, ctx),
+    T_KEYSET: lambda p, ctx, v: _parse_keyset(p),
+    T_MASK_PARTITION: lambda p, ctx, v: _parse_partition(p),
 }
 
 
 def deserialize(buf, ctx=None, off: int = 0):
     """One frame -> (artifact, next_off).  `ctx` is needed to expand seeded
-    ciphertexts nested in protected updates."""
-    ftype, _, payload, end = parse_frame(buf, off)
+    ciphertexts nested in protected updates.
+
+    Version handling is per frame (header byte): v1 and v2 frames decode
+    transparently — the only layout difference is the seeded-ciphertext
+    derive field (DESIGN.md §9.2) — and unsupported versions raise
+    WireError before any payload is touched."""
+    ftype, _, version, payload, end = parse_frame_v(buf, off)
     parser = _PARSERS.get(ftype)
     if parser is None:
         raise WireError(f"no parser for frame type {ftype:#x}")
-    return parser(payload, ctx), end
+    return parser(payload, ctx, version), end

@@ -71,7 +71,8 @@ class UpdateMeta:
 def pack_update_frames(upd: ProtectedUpdate, *, cid: int, n_samples: int,
                        rnd: int = 0,
                        seeded: _c.SeededCiphertext | None = None,
-                       plain_codec: str = "f32") -> bytes:
+                       plain_codec: str = "f32",
+                       version: int | None = None) -> bytes:
     """One client's ProtectedUpdate -> concatenated wire frames.
 
     Args:
@@ -80,31 +81,40 @@ def pack_update_frames(upd: ProtectedUpdate, *, cid: int, n_samples: int,
         n_samples: local sample count (the server's FedAvg weight input).
         rnd: round number for the header.
         seeded: optional compress.seed_compress result; each CT_CHUNK then
-            carries (seed, c0-chunk) instead of the full chunk.
+            carries (seed, c0-chunk) instead of the full chunk, and its
+            `derive` id rides in every per-chunk seeded frame (wire v2).
         plain_codec: "f32" | "f16" | "i8" quantizer for the plain segment.
+        version: wire version for every emitted frame (default: the
+            REPRO_WIRE_VERSION / wf.VERSION emit default).  version=1
+            requires seeded.derive == DERIVE_FOLD_CHUNK.
 
     Returns:
         bytes: UPDATE_BEGIN + CT_CHUNK * n_chunks + PLAIN_SEGMENT +
-        UPDATE_END, each a length-prefixed wire frame (DESIGN.md §6.1).
+        UPDATE_END, each a length-prefixed wire frame (DESIGN.md §6.1,
+        §9.2 for the v2 layout diff).
     """
     n_chunks = int(upd.ct.data.shape[0])
     kind = CT_SEEDED if seeded is not None else CT_FULL
     out = [wf.frame(wf.T_UPDATE_BEGIN,
-                    _BEGIN.pack(cid, n_samples, rnd, n_chunks, kind))]
+                    _BEGIN.pack(cid, n_samples, rnd, n_chunks, kind),
+                    version=version)]
     ct_host = np.asarray(seeded.c0 if seeded is not None else upd.ct.data)
     for b in range(n_chunks):
         if seeded is not None:
             chunk = _c.SeededCiphertext(c0=ct_host[b:b + 1],
                                         seed=seeded.seed, scale=seeded.scale,
-                                        chunk_offset=b)
-            inner = wf.serialize_seeded_ciphertext(chunk)
+                                        chunk_offset=b,
+                                        derive=seeded.derive)
+            inner = wf.serialize_seeded_ciphertext(chunk, version=version)
         else:
             inner = wf.serialize_ciphertext(Ciphertext(
-                data=ct_host[b:b + 1], scale=upd.ct.scale))
-        out.append(wf.frame(wf.T_CT_CHUNK, struct.pack("<I", b) + inner))
+                data=ct_host[b:b + 1], scale=upd.ct.scale), version=version)
+        out.append(wf.frame(wf.T_CT_CHUNK, struct.pack("<I", b) + inner,
+                            version=version))
     arr, qscale = _c.quantize_plain(np.asarray(upd.plain), plain_codec)
-    out.append(wf.serialize_plain_segment(arr, plain_codec, qscale))
-    out.append(wf.frame(wf.T_UPDATE_END, b""))
+    out.append(wf.serialize_plain_segment(arr, plain_codec, qscale,
+                                          version=version))
+    out.append(wf.frame(wf.T_UPDATE_END, b"", version=version))
     return b"".join(out)
 
 

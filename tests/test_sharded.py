@@ -130,6 +130,122 @@ def test_sharded_keygen_encrypt_decrypt_bitexact(n_dev):
     np.testing.assert_allclose(np.asarray(out), np.asarray(vals), atol=2e-3)
 
 
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_sharded_encrypt_values_data_sharded_bitexact(n_limbs, n_dev,
+                                                      backend):
+    """Data-axis-sharded pk encrypt: per-chunk key derivation makes the
+    sampled streams shard-count-invariant, so the ciphertext is
+    bit-identical to cipher.encrypt_values on any mesh."""
+    ctx = _ctx(n_limbs)
+    eng = _engine(ctx, n_dev)
+    rng = np.random.RandomState(400 * n_limbs + n_dev)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(1))
+    vals = jnp.asarray(rng.randn(4, ctx.slots).astype(np.float32)) * 0.1
+    ct1 = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(2))
+    ct2 = eng.encrypt_values(pk, vals, jax.random.PRNGKey(2))
+    np.testing.assert_array_equal(np.asarray(ct1.data), np.asarray(ct2.data))
+    # batch that does NOT divide the data axis (padding path)
+    ct1 = cipher.encrypt_values(ctx, pk, vals[:3], jax.random.PRNGKey(3))
+    ct2 = eng.encrypt_values(pk, vals[:3], jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(ct1.data), np.asarray(ct2.data))
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+@pytest.mark.parametrize("n_limbs", [1, 2, 3])
+def test_sharded_encrypt_values_seeded_bitexact(n_limbs, n_dev, backend):
+    """Sharded seeded (uplink) encrypt: bit-identical ciphertext AND a c1
+    that still matches the server-side expand_a_rows regeneration (the
+    wire-v2 derive=1 contract)."""
+    from repro.wire import compress as wc
+
+    ctx = _ctx(n_limbs)
+    eng = _engine(ctx, n_dev)
+    rng = np.random.RandomState(500 * n_limbs + n_dev)
+    sk, _ = cipher.keygen(ctx, jax.random.PRNGKey(4))
+    vals = jnp.asarray(rng.randn(4, ctx.slots).astype(np.float32)) * 0.1
+    a_seed = 9000 + n_limbs
+    ct1 = cipher.encrypt_values_seeded(ctx, sk, vals, jax.random.PRNGKey(5),
+                                       a_seed)
+    ct2 = eng.encrypt_values_seeded(sk, vals, jax.random.PRNGKey(5), a_seed)
+    np.testing.assert_array_equal(np.asarray(ct1.data), np.asarray(ct2.data))
+    np.testing.assert_array_equal(
+        np.asarray(ct2.c1), np.asarray(cipher.expand_a(ctx, a_seed, 4)))
+    # seed_compress/expand round-trips the sharded ciphertext bit-exact
+    sct = wc.seed_compress(ct2, a_seed)
+    np.testing.assert_array_equal(np.asarray(sct.expand(ctx).data),
+                                  np.asarray(ct2.data))
+
+
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_sharded_encrypt_graph_has_no_collectives(n_dev):
+    """The acceptance contract: encrypt (pk and seeded) compiles to a
+    graph with NO cross-device communication — sampling, encode FFT, NTTs
+    and mul_adds are all chunk- and limb-local (DESIGN.md §9.1)."""
+    import re as _re
+
+    from repro.core.ckks import sharded as sh
+    from repro.kernels import ops
+
+    ctx = _ctx(2, n_poly=64)
+    eng = _engine(ctx, n_dev)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    vals = jnp.zeros((4, ctx.slots), jnp.float32)
+    key = jax.random.PRNGKey(1)
+    collective = _re.compile(
+        r"all-reduce|all-gather|all-to-all|collective-permute|"
+        r"reduce-scatter|collective-broadcast")
+    lowered = sh._encrypt_values_graph.lower(
+        eng, ops.backend_token(), pk["pk0_mont"], pk["pk1_mont"], vals, key)
+    assert not collective.search(lowered.compile().as_text())
+    lowered = sh._encrypt_seeded_values_graph.lower(
+        eng, ops.backend_token(), sk["s_mont"], vals, key,
+        jax.random.PRNGKey(7))
+    assert not collective.search(lowered.compile().as_text())
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_sharded_client_uplink_frames_byte_identical(n_dev):
+    """The whole uplink: a sharded client's packed wire frames are
+    byte-identical to a single-device client's, and the streamed aggregate
+    recovers FedAvg."""
+    from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
+    from repro.wire import compress as wc
+
+    ctx = _ctx(2, n_poly=128)
+    eng = _engine(ctx, n_dev)
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(8))
+    rng = np.random.RandomState(90)
+    model = {"w": jnp.asarray(rng.randn(6, ctx.slots), jnp.float32)}
+    n = 6 * ctx.slots
+    agg = SelectiveHEAggregator.build(
+        ctx, model, np.abs(rng.randn(n)), AggregatorConfig(p_ratio=0.5))
+    n_clients = 2
+    blobs, blobs_ref = [], []
+    clients = [jax.tree_util.tree_map(lambda x, i=i: x + 0.02 * i, model)
+               for i in range(n_clients)]
+    for i, m in enumerate(clients):
+        key = jax.random.PRNGKey(30 + i)
+        a_seed = 600 + i
+        upd = agg.client_protect_seeded(m, sk, key, a_seed, sharded=eng)
+        ref = agg.client_protect_seeded(m, sk, key, a_seed)
+        kw = dict(cid=i, n_samples=3, rnd=1)
+        blobs.append(ws.pack_update_frames(
+            upd, seeded=wc.seed_compress(upd.ct, a_seed), **kw))
+        blobs_ref.append(ws.pack_update_frames(
+            ref, seeded=wc.seed_compress(ref.ct, a_seed), **kw))
+    assert blobs == blobs_ref          # byte-identical uplink
+    ing = ws.StreamIngest(ctx, sharded=eng)
+    for b in blobs:
+        ing.ingest(b, 1.0 / n_clients)
+    rec = agg.client_recover_params(ing.finalize(), sk)
+    expect = jax.tree_util.tree_map(lambda *xs: sum(xs) / n_clients,
+                                    *clients)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree_util.tree_leaves(rec), jax.tree_util.tree_leaves(expect)))
+    assert err < 1e-2
+
+
 def test_sharded_rejects_indivisible_limbs():
     """A 3-limb context on a model-axis-2 mesh must fail loudly, pointing
     at make_he_mesh."""

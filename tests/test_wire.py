@@ -111,6 +111,92 @@ def test_frame_reader_incremental():
 
 
 # ---------------------------------------------------------------------------
+# versioning: v1 frames decode forever, unknown versions reject loudly
+# ---------------------------------------------------------------------------
+
+
+def _seeded_ct(b=2, seed=1, a_seed=77):
+    v = np.random.RandomState(seed).randn(b, CTX.slots).astype(np.float32)
+    coeffs = encoding.encode_jnp(jnp.asarray(v), CTX)
+    return cipher.encrypt_coeffs_seeded(CTX, SK, coeffs,
+                                        jax.random.PRNGKey(seed), a_seed)
+
+
+def test_v1_frames_roundtrip_through_v2_decoder_bitexact():
+    """Every artifact emitted in the legacy v1 layout decodes bit-exactly
+    on the current (v2-default) decoder."""
+    _, ct = fresh_ct()
+    out, _ = wf.deserialize(wf.serialize_ciphertext(ct, version=1))
+    np.testing.assert_array_equal(np.asarray(ct.data, np.uint32), out.data)
+    assert out.scale == ct.scale
+
+    sct = wc.seed_compress(_seeded_ct(), 77)
+    blob = wf.serialize_seeded_ciphertext(sct, version=1)
+    # v1 seeded payload really has NO derive byte: header + <dQI> + array
+    assert len(blob) + 1 == len(wf.serialize_seeded_ciphertext(sct))
+    out, _ = wf.deserialize(blob)
+    assert out.derive == wc.DERIVE_FOLD_CHUNK      # implied by v1
+    np.testing.assert_array_equal(np.asarray(sct.c0, np.uint32), out.c0)
+    np.testing.assert_array_equal(np.asarray(out.expand(CTX).data),
+                                  np.asarray(_seeded_ct().data))
+
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(5))
+    out, _ = wf.deserialize(wf.serialize_update(upd, version=1), CTX)
+    np.testing.assert_array_equal(np.asarray(upd.ct.data, np.uint32),
+                                  out.ct.data)
+
+
+def test_v1_update_stream_ingests_bit_identical_to_v2():
+    agg, m = make_agg()
+    upd = agg.client_protect_seeded(m, SK, jax.random.PRNGKey(6), a_seed=21)
+    sct = wc.seed_compress(upd.ct, 21)
+    blob_v1 = ws.pack_update_frames(upd, cid=0, n_samples=1, seeded=sct,
+                                    version=1)
+    blob_v2 = ws.pack_update_frames(upd, cid=0, n_samples=1, seeded=sct,
+                                    version=2)
+    assert blob_v1 != blob_v2          # layouts differ on the wire...
+    outs = []
+    for blob in (blob_v1, blob_v2):
+        ing = ws.StreamIngest(CTX)
+        ing.ingest(blob, 1.0)
+        outs.append(ing.finalize())
+    # ...but the decoded aggregate is bit-identical
+    np.testing.assert_array_equal(np.asarray(outs[0].ct.data),
+                                  np.asarray(outs[1].ct.data))
+
+
+def test_unknown_wire_version_rejected_actionably():
+    """A v3 frame must raise WireError, and the message must tell the
+    operator which knob to flip (README section / REPRO_WIRE_VERSION)."""
+    blob = bytearray(wf.serialize_ciphertext(fresh_ct()[1]))
+    blob[4] = 3                        # version byte in the envelope
+    with pytest.raises(wf.WireError, match="REPRO_WIRE_VERSION"):
+        wf.deserialize(bytes(blob))
+    with pytest.raises(wf.WireError, match="README"):
+        wf.parse_frame(bytes(blob), 0)
+    # emission is pinned to the supported set too
+    with pytest.raises(wf.WireError, match="cannot emit"):
+        wf.frame(wf.T_UPDATE_END, b"", version=3)
+
+
+def test_v2_seeded_frame_carries_and_validates_derive():
+    import dataclasses
+
+    sct = wc.seed_compress(_seeded_ct(), 77)
+    out, _ = wf.deserialize(wf.serialize_seeded_ciphertext(sct, version=2))
+    assert out.derive == wc.DERIVE_FOLD_CHUNK
+    # an unknown derive id on the wire is rejected at parse time
+    bad = dataclasses.replace(sct, derive=9)
+    blob = wf.serialize_seeded_ciphertext(bad, version=2)
+    with pytest.raises(wf.WireError, match="derivation"):
+        wf.deserialize(blob)
+    # ...and cannot be down-serialized to v1 (which cannot express it)
+    with pytest.raises(wf.WireError, match="not expressible"):
+        wf.serialize_seeded_ciphertext(bad, version=1)
+
+
+# ---------------------------------------------------------------------------
 # compress: seeded uplink, limb drop, plain quantization
 # ---------------------------------------------------------------------------
 

@@ -5,17 +5,20 @@ Checks (default mode — exit nonzero on any failure):
   1. every intra-repo markdown link in README.md / DESIGN.md / ROADMAP.md
      resolves to an existing file or directory;
   2. the benchmark tables in README.md match what the checked-in
-     BENCH_he.json / BENCH_agg_sharded.json render to;
-  3. the README quickstart snippet (first ```bash block after the
-     "quickstart" heading) executes successfully (skipped with
-     --no-exec for fast local runs).
+     BENCH_he.json / BENCH_agg_sharded.json / BENCH_uplink_sharded.json
+     render to;
+  3. the DESIGN.md §9.2 wire-spec appendix matches wire/format.py's
+     version and derivation constants (the WIRE_SPEC marker);
+  4. the README quickstart snippets (first ```bash block after the
+     "quickstart" heading AND after the "sharded uplink" heading) execute
+     successfully (skipped with --no-exec for fast local runs).
 
 `--write` regenerates the README tables in place between the
 BENCH_TABLES_START/END markers instead of failing on drift.
 
 Usage:
     python tools/check_docs.py            # full check (CI docs job)
-    python tools/check_docs.py --no-exec  # links + tables only
+    python tools/check_docs.py --no-exec  # links + tables + spec only
     python tools/check_docs.py --write    # refresh README bench tables
 """
 from __future__ import annotations
@@ -29,6 +32,7 @@ import sys
 import tempfile
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))   # for the wire-spec check
 DOC_FILES = ("README.md", "DESIGN.md", "ROADMAP.md")
 MARK_START = "<!-- BENCH_TABLES_START -->"
 MARK_END = "<!-- BENCH_TABLES_END -->"
@@ -102,7 +106,81 @@ def render_bench_tables() -> str:
             f"{r['stream_ingest_sharded_ms']:.0f} | "
             f"{r['launches_per_update']:.0f} | "
             f"{'yes' if r['sharded_parity'] else 'NO'} |")
+    out.append("")
+
+    up_path = os.path.join(ROOT, "BENCH_uplink_sharded.json")
+    up = json.load(open(up_path))
+    rows = [up["per_devices"][k] for k in sorted(up["per_devices"],
+                                                 key=lambda s: int(s))]
+    r0 = rows[0]
+    out.append(
+        f"**Sharded client uplink (seeded encrypt)** "
+        f"(`benchmarks/run.py uplink-sharded`; N={r0['n_poly']}, "
+        f"L={r0['n_limbs']}, {r0['n_chunks']} chunks, simulated host "
+        "devices):\n")
+    out.append("| devices | mesh (data x model) | seeded single ms | "
+               "seeded sharded ms | pk single ms | pk sharded ms | "
+               "seeded/full bytes | bit-parity |")
+    out.append("|--------:|---------------------|-----------------:|"
+               "------------------:|-------------:|--------------:|"
+               "------------------:|:----------:|")
+    for r in rows:
+        mesh = f"{r['mesh']['data']} x {r['mesh']['model']}"
+        out.append(
+            f"| {r['devices']} | {mesh} | "
+            f"{r['encrypt_seeded_single_ms']:.2f} | "
+            f"{r['encrypt_seeded_sharded_ms']:.2f} | "
+            f"{r['encrypt_pk_single_ms']:.2f} | "
+            f"{r['encrypt_pk_sharded_ms']:.2f} | "
+            f"{r['uplink_ratio']:.2f}x | "
+            f"{'yes' if r['sharded_parity'] else 'NO'} |")
     return "\n".join(out) + "\n"
+
+
+_WIRE_SPEC = re.compile(
+    r"<!--\s*WIRE_SPEC\s+version=(\d+)\s+supported=([\d,]+)\s+"
+    r"derives=([\d,]+)\s*-->")
+
+
+def check_wire_spec() -> list[str]:
+    """DESIGN.md §9.2 must agree with wire/format.py's constants.
+
+    The appendix carries a machine-readable WIRE_SPEC marker; a version or
+    derivation-id bump in code without the matching normative-spec edit
+    fails the docs job (and vice versa)."""
+    try:
+        from repro.wire import format as wf
+    except Exception as e:          # pragma: no cover - import environment
+        return [f"DESIGN.md: cannot import repro.wire.format to verify "
+                f"the wire spec: {e}"]
+    full = open(os.path.join(ROOT, "DESIGN.md")).read()
+    # scope every check to the §9.2 appendix itself, so gutting the
+    # normative text cannot pass on phrases that also appear elsewhere
+    sec = re.search(r"### §9\.2 .*?(?=\n## |\Z)", full, re.DOTALL)
+    if not sec:
+        return ["DESIGN.md: missing '### §9.2' wire-spec appendix section"]
+    text = sec.group(0)
+    m = _WIRE_SPEC.search(text)
+    if not m:
+        return ["DESIGN.md: missing WIRE_SPEC marker in the §9.2 appendix "
+                "(<!-- WIRE_SPEC version=.. supported=.. derives=.. -->)"]
+    errors = []
+    if int(m.group(1)) != wf.VERSION:
+        errors.append(f"DESIGN.md §9.2: spec version {m.group(1)} != "
+                      f"wire/format.py VERSION {wf.VERSION}")
+    spec_supported = tuple(int(x) for x in m.group(2).split(","))
+    if spec_supported != tuple(wf.SUPPORTED_VERSIONS):
+        errors.append(f"DESIGN.md §9.2: supported versions {spec_supported} "
+                      f"!= wire/format.py {tuple(wf.SUPPORTED_VERSIONS)}")
+    spec_derives = tuple(int(x) for x in m.group(3).split(","))
+    if spec_derives != tuple(wf.DERIVES):
+        errors.append(f"DESIGN.md §9.2: derive ids {spec_derives} != "
+                      f"wire/format.py {tuple(wf.DERIVES)}")
+    for needed in ("u8 derive", "fold_in", "chunk_offset + b"):
+        if needed not in text:
+            errors.append(f"DESIGN.md §9.2: normative appendix no longer "
+                          f"spells out '{needed}'")
+    return errors
 
 
 def check_or_write_tables(write: bool) -> list[str]:
@@ -124,13 +202,13 @@ def check_or_write_tables(write: bool) -> list[str]:
             "(run `python tools/check_docs.py --write`)"]
 
 
-def run_quickstart() -> list[str]:
-    """Extract and execute the first ```bash block after 'quickstart'."""
+def _run_snippet(heading: str) -> list[str]:
+    """Extract and execute the first ```bash block after `heading`."""
     text = open(os.path.join(ROOT, "README.md")).read()
-    m = re.search(r"quickstart.*?```bash\n(.*?)```", text,
+    m = re.search(heading + r".*?```bash\n(.*?)```", text,
                   re.IGNORECASE | re.DOTALL)
     if not m:
-        return ["README.md: no ```bash quickstart block found"]
+        return [f"README.md: no ```bash block found after '{heading}'"]
     script = m.group(1)
     with tempfile.NamedTemporaryFile("w", suffix=".sh", delete=False) as f:
         f.write("set -euo pipefail\n" + script)
@@ -141,10 +219,18 @@ def run_quickstart() -> list[str]:
     finally:
         os.unlink(name)
     if proc.returncode != 0:
-        return [f"README quickstart failed (exit {proc.returncode}):\n"
-                f"{proc.stdout}\n{proc.stderr}"]
-    print(f"README quickstart OK: {proc.stdout.strip().splitlines()[-1]}")
+        return [f"README '{heading}' snippet failed "
+                f"(exit {proc.returncode}):\n{proc.stdout}\n{proc.stderr}"]
+    print(f"README '{heading}' snippet OK: "
+          f"{proc.stdout.strip().splitlines()[-1]}")
     return []
+
+
+def run_quickstart() -> list[str]:
+    """Execute both README snippets: the encrypted-averaging quickstart and
+    the sharded-uplink quickstart (each is the first ```bash block after
+    its heading)."""
+    return _run_snippet(r"quickstart") + _run_snippet(r"sharded uplink")
 
 
 def main() -> int:
@@ -157,6 +243,7 @@ def main() -> int:
 
     errors = check_links()
     errors += check_or_write_tables(write=args.write)
+    errors += check_wire_spec()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
     for e in errors:
