@@ -6,7 +6,8 @@ microbenchmarks + the roofline summary table from dry-run artifacts.
   PYTHONPATH=src python -m benchmarks.run --help        # modes + env vars
 
 Environment (full list in README.md "Environment variables & flags"):
-  REPRO_HE_BACKEND=ref|pallas   backend for every HE op (default ref)
+  REPRO_HE_BACKEND=ref|pallas|pallas4   backend for every HE op (default
+      ref; pallas4 = 4-step transpose NTT kernels)
   XLA_FLAGS=--xla_force_host_platform_device_count=<n>
       simulate <n> devices on one host; must be set before the first jax
       import.  `agg-sharded` and `uplink-sharded` spawn their own
@@ -37,6 +38,24 @@ def _fmt(v):
     if isinstance(v, float):
         return f"{v:.6g}"
     return str(v)
+
+
+def _timeit(fn, *args, reps: int = 5):
+    """Mean wall time of fn(*args) after one warmup call; blocks on every
+    output leaf so async dispatch cannot fake speedups."""
+    import jax
+
+    def _block(x):
+        return x.block_until_ready() if hasattr(x, "block_until_ready") \
+            else x
+
+    out = fn(*args)
+    jax.tree_util.tree_map(_block, out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_map(_block, out)
+    return (time.time() - t0) / reps
 
 
 def bench_table4():
@@ -140,18 +159,7 @@ def bench_he():
     def rand_limbed(shape):
         return jnp.asarray(ref.rand_limbed_np(rng, ctx, shape))
 
-    def timeit(fn, *args, reps=5):
-        out = fn(*args)
-        jax.tree_util.tree_map(
-            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
-            else x, out)
-        t0 = time.time()
-        for _ in range(reps):
-            out = fn(*args)
-        jax.tree_util.tree_map(
-            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
-            else x, out)
-        return (time.time() - t0) / reps
+    timeit = _timeit
 
     # -- per-limb baselines: eager loop, one single-limb ref op per limb ----
     def per_limb_ntt_fwd(x):
@@ -219,12 +227,88 @@ def bench_he():
                      "fused_ms": s * 1e3, "speedup": float("nan")})
         results["ops"][name] = {"fused_ms": s * 1e3}
 
-    out_path = os.path.join(os.path.dirname(__file__), "..", "BENCH_he.json")
-    with open(os.path.abspath(out_path), "w") as f:
-        json.dump(results, f, indent=2)
+    _merge_bench_he(results)
     _rows(f"HE engine: per-limb baseline vs limb-fused "
           f"(N={n_poly}, L={n_limbs}, C={n_clients}, backend="
           f"{ops.get_backend()}; BENCH_he.json written)", rows)
+
+
+def _merge_bench_he(update: dict) -> None:
+    """Merge keys into BENCH_he.json so `he` and `ntt` can each refresh
+    their own section without clobbering the other's rows."""
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "BENCH_he.json"))
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {}
+    doc.update(update)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+
+
+def bench_ntt():
+    """Flat limb-grid NTT kernel vs the 4-step transpose NTT ("pallas4")
+    at N in {4096, 8192, 16384} x L in {1, 2, 3}, both directions.
+
+    Both kernels run through their Pallas path (interpret mode on CPU, so
+    the numbers track kernel structure/dispatch, not real TPU lane
+    behaviour — DESIGN.md §10 explains where the 4-step layout wins on
+    hardware).  Appends an "ntt4" section to BENCH_he.json.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.ckks import params as ckks_params
+    from repro.kernels import ntt, ref
+
+    batch, reps = 4, 3
+
+    def timeit(fn, *args):
+        return _timeit(fn, *args, reps=reps)
+
+    interpret = jax.default_backend() == "cpu"
+    rows = []
+    for n_poly in (4096, 8192, 16384):
+        for n_limbs in (1, 2, 3):
+            ctx = ckks_params.make_context(
+                n_poly=n_poly, n_limbs=n_limbs,
+                delta_bits=12 if n_limbs == 1 else 26)
+            t = ctx.tables
+            rng = np.random.RandomState(0)
+            x = jnp.asarray(ref.rand_limbed_np(rng, ctx, (batch,)))
+            flat_fwd = jax.jit(lambda x, t=t: ntt.ntt_fwd_fused(
+                x, t.psi_rev_mont, t.qs, t.qinv_negs, interpret=interpret))
+            four_fwd = jax.jit(lambda x, t=t: ntt.ntt4_fwd_fused(
+                x, t.ntt4_psi1_mont, t.ntt4_psi2_mont, t.ntt4_corr_mont,
+                t.qs, t.qinv_negs, interpret=interpret))
+            flat_inv = jax.jit(lambda x, t=t: ntt.ntt_inv_fused(
+                x, t.psi_inv_rev_mont, t.n_inv_monts, t.qs, t.qinv_negs,
+                interpret=interpret))
+            four_inv = jax.jit(lambda x, t=t: ntt.ntt4_inv_fused(
+                x, t.ntt4_psi1_inv_mont, t.ntt4_psi2_inv_mont,
+                t.ntt4_corr_inv_mont, t.n_inv_monts, t.qs, t.qinv_negs,
+                interpret=interpret))
+            y = flat_fwd(x)
+            parity = bool(
+                np.array_equal(np.asarray(y), np.asarray(four_fwd(x)))
+                and np.array_equal(np.asarray(flat_inv(y)),
+                                   np.asarray(four_inv(y))))
+            n1, n2 = ckks_params.ntt4_split(n_poly)
+            rows.append({
+                "n_poly": n_poly, "n_limbs": n_limbs, "split": f"{n1}x{n2}",
+                "fwd_fused_ms": timeit(flat_fwd, x) * 1e3,
+                "fwd_4step_ms": timeit(four_fwd, x) * 1e3,
+                "inv_fused_ms": timeit(flat_inv, y) * 1e3,
+                "inv_4step_ms": timeit(four_inv, y) * 1e3,
+                "bit_parity": parity,
+            })
+    _merge_bench_he({"ntt4": {"batch": batch, "interpret": interpret,
+                              "rows": rows}})
+    _rows("NTT: flat limb-grid kernel vs 4-step transpose kernel "
+          f"(batch={batch}, interpret={interpret}; BENCH_he.json "
+          "'ntt4' section written)", rows)
 
 
 def bench_wire():
@@ -413,6 +497,7 @@ ALL = {
     "dp": bench_dp,
     "kernels": bench_kernels,
     "he": bench_he,
+    "ntt": bench_ntt,
     "wire": bench_wire,
     "agg-sharded": bench_agg_sharded,
     "uplink-sharded": bench_uplink_sharded,
@@ -431,9 +516,10 @@ def main() -> None:
             for name, fn in ALL.items())
         + "\n\nenvironment (canonical list: README.md 'Environment "
           "variables & flags'):\n"
-          "  REPRO_HE_BACKEND=ref|pallas\n"
+          "  REPRO_HE_BACKEND=ref|pallas|pallas4\n"
           "      backend for every HE op (default ref; pallas runs the\n"
-          "      kernels in interpret mode on CPU)\n"
+          "      kernels in interpret mode on CPU; pallas4 swaps the NTT\n"
+          "      family for the 4-step transpose kernels, DESIGN.md §10)\n"
           "  XLA_FLAGS=--xla_force_host_platform_device_count=<n>\n"
           "      simulate <n> host devices; must be set before the first\n"
           "      jax import ('agg-sharded' / 'uplink-sharded' manage this\n"

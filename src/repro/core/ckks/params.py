@@ -96,6 +96,18 @@ def bit_reverse(x: int, bits: int) -> int:
     return out
 
 
+def ntt4_split(n_poly: int) -> tuple[int, int]:
+    """Factor N = n1 * n2 for the 4-step transpose NTT (DESIGN.md §10).
+
+    n1 <= n2, both powers of two, as close to sqrt(N) as possible — for
+    N=8192 this is 64 x 128, so the second sub-transform's vectorized
+    spectator axis spans a full 128-lane TPU register.
+    """
+    logn = n_poly.bit_length() - 1
+    k = logn // 2
+    return 1 << k, n_poly >> k
+
+
 # ---------------------------------------------------------------------------
 # per-prime (limb) Montgomery + NTT tables
 # ---------------------------------------------------------------------------
@@ -114,6 +126,16 @@ class LimbContext:
     psi_rev_mont: np.ndarray      # [N] u32, psi^bitrev(i) * R mod q
     psi_inv_rev_mont: np.ndarray  # [N] u32
     n_inv_mont: np.ndarray        # scalar u32 array, N^{-1} * R mod q
+    # 4-step transpose NTT tables (DESIGN.md §10), N = n1 * n2
+    # sub-transform 1: LN table of mu = psi^n2 (a primitive 2*n1-th root)
+    ntt4_psi1_mont: np.ndarray      # [n1] u32
+    ntt4_psi1_inv_mont: np.ndarray  # [n1] u32
+    # sub-transform 2: LN table of chi = psi^n1 (a primitive 2*n2-th root)
+    ntt4_psi2_mont: np.ndarray      # [n2] u32
+    ntt4_psi2_inv_mont: np.ndarray  # [n2] u32
+    # inter-step correction, [bitrev(k1)][j2] = psi^(j2*(2*k1+1-n1)), flat [N]
+    ntt4_corr_mont: np.ndarray      # [N] u32
+    ntt4_corr_inv_mont: np.ndarray  # [N] u32
 
     def to_mont_scalar(self, x: int) -> int:
         """x -> x*R mod q (host-side)."""
@@ -142,6 +164,44 @@ def make_limb_context(q: int, n_poly: int) -> LimbContext:
         psi_rev[i] = mont(pow(psi, j, q))
         psi_inv_rev[i] = mont(pow(psi_inv, j, q))
     n_inv = pow(n_poly, -1, q)
+
+    # 4-step transpose NTT tables (DESIGN.md §10).  With N = n1*n2 and
+    # x[j] = x[j2 + n2*j1], the full negacyclic NTT factors into a length-n1
+    # negacyclic LN NTT over j1 with mu = psi^n2 (mu^2 = omega^n2, pre-twist
+    # mu^j1 folded in), an elementwise correction psi^(j2*(2*k1+1-n1))
+    # (which folds the psi^j2 pre-twist, the omega^(j2*k1) cross twiddle,
+    # and the chi^(-j2) un-twist of sub-transform 2), a transpose, and a
+    # length-n2 negacyclic LN NTT over j2 with chi = psi^n1.  All sub-tables
+    # are LN bit-reversed Montgomery, like psi_rev above.
+    n1, n2 = ntt4_split(n_poly)
+    k_bits, r_bits = n1.bit_length() - 1, n2.bit_length() - 1
+    mu, chi = pow(psi, n2, q), pow(psi, n1, q)
+    mu_inv, chi_inv = pow(mu, -1, q), pow(chi, -1, q)
+    psi1 = np.zeros(n1, dtype=np.uint32)
+    psi1_inv = np.zeros(n1, dtype=np.uint32)
+    for i in range(n1):
+        j = bit_reverse(i, k_bits)
+        psi1[i] = mont(pow(mu, j, q))
+        psi1_inv[i] = mont(pow(mu_inv, j, q))
+    psi2 = np.zeros(n2, dtype=np.uint32)
+    psi2_inv = np.zeros(n2, dtype=np.uint32)
+    for i in range(n2):
+        j = bit_reverse(i, r_bits)
+        psi2[i] = mont(pow(chi, j, q))
+        psi2_inv[i] = mont(pow(chi_inv, j, q))
+    corr = np.zeros((n1, n2), dtype=np.uint32)
+    corr_inv = np.zeros((n1, n2), dtype=np.uint32)
+    for k1 in range(n1):
+        w = pow(psi, (2 * k1 + 1 - n1) % (2 * n_poly), q)
+        w_inv = pow(w, -1, q)
+        row = bit_reverse(k1, k_bits)
+        c = ci = 1
+        for j2 in range(n2):
+            corr[row, j2] = mont(c)
+            corr_inv[row, j2] = mont(ci)
+            c = c * w % q
+            ci = ci * w_inv % q
+
     return LimbContext(
         q=q,
         qinv_neg=qinv_neg,
@@ -150,6 +210,12 @@ def make_limb_context(q: int, n_poly: int) -> LimbContext:
         psi_rev_mont=psi_rev,
         psi_inv_rev_mont=psi_inv_rev,
         n_inv_mont=np.asarray(mont(n_inv), dtype=np.uint32),
+        ntt4_psi1_mont=psi1,
+        ntt4_psi1_inv_mont=psi1_inv,
+        ntt4_psi2_mont=psi2,
+        ntt4_psi2_inv_mont=psi2_inv,
+        ntt4_corr_mont=corr.reshape(-1),
+        ntt4_corr_inv_mont=corr_inv.reshape(-1),
     )
 
 
@@ -176,6 +242,15 @@ class LimbTables:
     n_inv_monts: np.ndarray       # u32[L] N^{-1} * R mod q
     psi_rev_mont: np.ndarray      # u32[L, N] forward twiddles (Montgomery)
     psi_inv_rev_mont: np.ndarray  # u32[L, N] inverse twiddles (Montgomery)
+    # 4-step transpose NTT tables (DESIGN.md §10), N = n1 * n2: still
+    # stacked u32[L, .] with the limb axis leading, so the sharded engine's
+    # limb-axis table sharding covers them with no new plumbing.
+    ntt4_psi1_mont: np.ndarray      # u32[L, n1] sub-NTT-1 fwd twiddles
+    ntt4_psi1_inv_mont: np.ndarray  # u32[L, n1]
+    ntt4_psi2_mont: np.ndarray      # u32[L, n2] sub-NTT-2 fwd twiddles
+    ntt4_psi2_inv_mont: np.ndarray  # u32[L, n2]
+    ntt4_corr_mont: np.ndarray      # u32[L, N] inter-step correction
+    ntt4_corr_inv_mont: np.ndarray  # u32[L, N]
 
     @property
     def n_limbs(self) -> int:
@@ -191,6 +266,12 @@ class LimbTables:
             one_monts=self.one_monts[:l], n_inv_monts=self.n_inv_monts[:l],
             psi_rev_mont=self.psi_rev_mont[:l],
             psi_inv_rev_mont=self.psi_inv_rev_mont[:l],
+            ntt4_psi1_mont=self.ntt4_psi1_mont[:l],
+            ntt4_psi1_inv_mont=self.ntt4_psi1_inv_mont[:l],
+            ntt4_psi2_mont=self.ntt4_psi2_mont[:l],
+            ntt4_psi2_inv_mont=self.ntt4_psi2_inv_mont[:l],
+            ntt4_corr_mont=self.ntt4_corr_mont[:l],
+            ntt4_corr_inv_mont=self.ntt4_corr_inv_mont[:l],
         )
 
 
@@ -205,6 +286,15 @@ def _stack_limb_tables(limbs: "tuple[LimbContext, ...]") -> LimbTables:
         psi_rev_mont=np.stack([lc.psi_rev_mont for lc in limbs], axis=0),
         psi_inv_rev_mont=np.stack([lc.psi_inv_rev_mont for lc in limbs],
                                   axis=0),
+        ntt4_psi1_mont=np.stack([lc.ntt4_psi1_mont for lc in limbs], axis=0),
+        ntt4_psi1_inv_mont=np.stack([lc.ntt4_psi1_inv_mont for lc in limbs],
+                                    axis=0),
+        ntt4_psi2_mont=np.stack([lc.ntt4_psi2_mont for lc in limbs], axis=0),
+        ntt4_psi2_inv_mont=np.stack([lc.ntt4_psi2_inv_mont for lc in limbs],
+                                    axis=0),
+        ntt4_corr_mont=np.stack([lc.ntt4_corr_mont for lc in limbs], axis=0),
+        ntt4_corr_inv_mont=np.stack([lc.ntt4_corr_inv_mont for lc in limbs],
+                                    axis=0),
     )
 
 

@@ -55,7 +55,10 @@ from repro.core.ckks.params import CkksContext, LimbTables
 from repro.kernels import ops, ref as _ref
 
 _TABLE_FIELDS = ("qs", "qinv_negs", "r2s", "one_monts", "n_inv_monts",
-                 "psi_rev_mont", "psi_inv_rev_mont")
+                 "psi_rev_mont", "psi_inv_rev_mont",
+                 "ntt4_psi1_mont", "ntt4_psi1_inv_mont",
+                 "ntt4_psi2_mont", "ntt4_psi2_inv_mont",
+                 "ntt4_corr_mont", "ntt4_corr_inv_mont")
 
 
 def table_arrays(t: LimbTables) -> tuple:
@@ -67,9 +70,11 @@ def table_arrays(t: LimbTables) -> tuple:
 
 def table_specs(model: str) -> tuple:
     """PartitionSpecs matching table_arrays: u32[L] fields shard along
-    `model`, u32[L, N] twiddle tables shard the limb row axis."""
+    `model`, u32[L, .] twiddle/correction tables shard the limb row axis
+    (the six ntt4_* 4-step tables included — limb-sharding covers the
+    4-step NTT backend with zero new collectives)."""
     v, m = P(model), P(model, None)
-    return (v, v, v, v, v, m, m)
+    return (v, v, v, v, v, m, m, m, m, m, m, m, m)
 
 
 def local_tables(tabs) -> LimbTables:

@@ -18,11 +18,18 @@ slice and launches this same kernel over its local limbs — the NTT runs
 within one limb's N coefficients, so limb sharding needs no collectives.
 
 Stages are unrolled in Python: every reshape has a static shape. On real TPU
-the final stages (t < 128 lanes) relayout across sublanes; a 4-step
-transpose-based NTT is the known fix and is listed in EXPERIMENTS.md §Perf.
+the flat kernel's final stages (t < 128 lanes) relayout across sublanes; the
+4-step transpose NTT below (`ntt4_fwd_fused` / `ntt4_inv_fused`, backend
+name "pallas4") is the fix: it decomposes the length-N transform into
+n1 x n2 sub-NTTs (64 x 128 for N=8192) so every butterfly stage pairs
+whole lane-contiguous rows, with one transpose between the two sub-NTT
+phases instead of log2(N) sublane shuffles.  DESIGN.md §10 documents the
+decomposition, the table layout (params.ntt4_* on LimbTables), and when
+each NTT implementation wins.
 
 Validated in interpret mode against repro/kernels/ref.py with exact integer
-equality (tests/test_kernels.py, tests/test_fused_engine.py).
+equality (tests/test_kernels.py, tests/test_fused_engine.py,
+tests/test_ntt4.py, tests/test_gold.py).
 """
 from __future__ import annotations
 
@@ -78,6 +85,105 @@ def _ntt_inv_body(x_ref, psi_inv_ref, q_ref, qinv_ref, ninv_ref, o_ref, *,
     o_ref[:, 0, :] = x
 
 
+# ---------------------------------------------------------------------------
+# 4-step transpose NTT (backend "pallas4", DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# N = n1 * n2 (params.ntt4_split).  Writing j = j2 + n2*j1 and
+# k = k1 + n1*k2, the negacyclic NTT X[k] = sum_j x[j] psi^(j*(2k+1))
+# factors into
+#
+#   1. length-n1 negacyclic LN NTT over j1, root mu = psi^n2 — butterflies
+#      pair whole rows of the [n1, n2] matrix, the n2 columns ride along as
+#      the vectorized lane axis;
+#   2. elementwise correction by psi^(j2*(2*k1+1-n1)) (the pre-twist, the
+#      omega^(j2*k1) cross term, and the chi^(-j2) un-twist of step 4,
+#      folded into ONE precomputed Montgomery table);
+#   3. transpose [n1, n2] -> [n2, n1] — the single data relayout that
+#      replaces the flat kernel's per-stage sublane shuffles;
+#   4. length-n2 negacyclic LN NTT over j2, root chi = psi^n1.
+#
+# Both sub-NTTs keep the LN bit-reversed convention, and
+# bitrev(k1 + n1*k2, logN) = bitrev(k1)*n2 + bitrev(k2), so transposing the
+# [bitrev(k2)][bitrev(k1)] result back and flattening lands every output in
+# exactly the flat kernel's bit-reversed slot: all three backends are
+# bit-identical (tests/test_ntt4.py, tests/test_gold.py).
+
+
+def _ln_fwd_axis1(x, psi, q, qinv_neg):
+    """LN forward butterflies along axis 1 of x[b, len, spec]; psi: [len].
+
+    Identical recurrence to _ntt_fwd_body, but the transform axis is a
+    middle axis: the trailing spectator axis stays lane-contiguous through
+    every stage."""
+    b, ln, spec = x.shape
+    m, t = 1, ln
+    while m < ln:
+        t //= 2
+        xs = x.reshape((b, m, 2, t, spec))
+        u = xs[:, :, 0]
+        s = psi[m:2 * m][None, :, None, None]
+        v = _ref.mont_mul(xs[:, :, 1], jnp.broadcast_to(s, u.shape), q,
+                          qinv_neg)
+        x = jnp.stack([_ref.mod_add(u, v, q), _ref.mod_sub(u, v, q)],
+                      axis=2).reshape((b, ln, spec))
+        m *= 2
+    return x
+
+
+def _ln_inv_axis1(x, psi_inv, q, qinv_neg):
+    """GS inverse butterflies along axis 1 (no final 1/len scaling — the
+    caller applies one combined N^{-1} multiply after both phases)."""
+    b, ln, spec = x.shape
+    t, m = 1, ln
+    while m > 1:
+        h = m // 2
+        xs = x.reshape((b, h, 2, t, spec))
+        u = xs[:, :, 0]
+        v = xs[:, :, 1]
+        s = psi_inv[h:2 * h][None, :, None, None]
+        lo = _ref.mod_add(u, v, q)
+        hi = _ref.mont_mul(_ref.mod_sub(u, v, q),
+                           jnp.broadcast_to(s, u.shape), q, qinv_neg)
+        x = jnp.stack([lo, hi], axis=2).reshape((b, ln, spec))
+        t *= 2
+        m = h
+    return x
+
+
+def _ntt4_fwd_body(x_ref, psi1_ref, psi2_ref, corr_ref, q_ref, qinv_ref,
+                   o_ref, *, n: int, n1: int, n2: int):
+    x = x_ref[:, 0, :]
+    b = x.shape[0]
+    q = q_ref[0]
+    qi = qinv_ref[0]
+    x = x.reshape((b, n1, n2))                       # [j1][j2]
+    x = _ln_fwd_axis1(x, psi1_ref[0], q, qi)         # [br k1][j2]
+    corr = corr_ref[0].reshape((n1, n2))
+    x = _ref.mont_mul(x, jnp.broadcast_to(corr[None], x.shape), q, qi)
+    x = jnp.swapaxes(x, 1, 2)                        # [j2][br k1]
+    x = _ln_fwd_axis1(x, psi2_ref[0], q, qi)         # [br k2][br k1]
+    o_ref[:, 0, :] = jnp.swapaxes(x, 1, 2).reshape((b, n))
+
+
+def _ntt4_inv_body(x_ref, psi1_inv_ref, psi2_inv_ref, corr_inv_ref, q_ref,
+                   qinv_ref, ninv_ref, o_ref, *, n: int, n1: int, n2: int):
+    x = x_ref[:, 0, :]
+    b = x.shape[0]
+    q = q_ref[0]
+    qi = qinv_ref[0]
+    x = x.reshape((b, n1, n2))                       # [br k1][br k2]
+    x = jnp.swapaxes(x, 1, 2)                        # [br k2][br k1]
+    x = _ln_inv_axis1(x, psi2_inv_ref[0], q, qi)     # [j2][br k1]
+    x = jnp.swapaxes(x, 1, 2)                        # [br k1][j2]
+    corr_inv = corr_inv_ref[0].reshape((n1, n2))
+    x = _ref.mont_mul(x, jnp.broadcast_to(corr_inv[None], x.shape), q, qi)
+    x = _ln_inv_axis1(x, psi1_inv_ref[0], q, qi)     # [j1][j2]
+    x = x.reshape((b, n))
+    x = _ref.mont_mul(x, jnp.broadcast_to(ninv_ref[0], x.shape), q, qi)
+    o_ref[:, 0, :] = x
+
+
 @functools.lru_cache(maxsize=128)
 def _build(direction: str, l: int, n: int, block_b: int, interpret: bool):
     tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
@@ -127,3 +233,63 @@ def ntt_inv_fused(x, psi_inv_rev_mont, n_inv_monts, qs, qinv_negs, *,
     call = _build("inv", l, n, min(block_b, b), interpret)
     return call(x2, psi_inv_rev_mont, qs, qinv_negs,
                 n_inv_monts).reshape(batch + (l, n))
+
+
+@functools.lru_cache(maxsize=128)
+def _build4(direction: str, l: int, n: int, n1: int, n2: int, block_b: int,
+            interpret: bool):
+    tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
+    row1 = pl.BlockSpec((1, n1), lambda li, bi: (li, 0))
+    row2 = pl.BlockSpec((1, n2), lambda li, bi: (li, 0))
+    rown = pl.BlockSpec((1, n), lambda li, bi: (li, 0))
+    scalar = pl.BlockSpec((1,), lambda li, bi: (li,))
+    if direction == "fwd":
+        body = functools.partial(_ntt4_fwd_body, n=n, n1=n1, n2=n2)
+        in_specs = [tile, row1, row2, rown, scalar, scalar]
+    else:
+        body = functools.partial(_ntt4_inv_body, n=n, n1=n1, n2=n2)
+        in_specs = [tile, row1, row2, rown, scalar, scalar, scalar]
+
+    def call(x, *tables):
+        b = x.shape[0]
+        return pl.pallas_call(
+            body,
+            grid=(l, pl.cdiv(b, block_b)),
+            in_specs=in_specs,
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct((b, l, n), jnp.uint32),
+            interpret=interpret,
+        )(x, *tables)
+
+    return call
+
+
+def ntt4_fwd_fused(x, psi1_mont, psi2_mont, corr_mont, qs, qinv_negs, *,
+                   block_b: int = 8, interpret: bool = True):
+    """4-step forward negacyclic NTT, bit-identical to ntt_fwd_fused.
+
+    x: u32[..., L, N] natural -> bit-reversed NTT domain.  Tables come from
+    params.LimbTables: psi1_mont u32[L, n1], psi2_mont u32[L, n2],
+    corr_mont u32[L, N] (N = n1*n2, params.ntt4_split)."""
+    x2, batch = _flatten(x)
+    b, l, n = x2.shape
+    n1, n2 = psi1_mont.shape[-1], psi2_mont.shape[-1]
+    assert n1 * n2 == n, (n1, n2, n)
+    call = _build4("fwd", l, n, n1, n2, min(block_b, b), interpret)
+    return call(x2, psi1_mont, psi2_mont, corr_mont, qs,
+                qinv_negs).reshape(batch + (l, n))
+
+
+def ntt4_inv_fused(x, psi1_inv_mont, psi2_inv_mont, corr_inv_mont,
+                   n_inv_monts, qs, qinv_negs, *, block_b: int = 8,
+                   interpret: bool = True):
+    """4-step inverse negacyclic NTT, bit-identical to ntt_inv_fused.
+
+    x: u32[..., L, N] bit-reversed NTT domain -> natural order."""
+    x2, batch = _flatten(x)
+    b, l, n = x2.shape
+    n1, n2 = psi1_inv_mont.shape[-1], psi2_inv_mont.shape[-1]
+    assert n1 * n2 == n, (n1, n2, n)
+    call = _build4("inv", l, n, n1, n2, min(block_b, b), interpret)
+    return call(x2, psi1_inv_mont, psi2_inv_mont, corr_inv_mont, qs,
+                qinv_negs, n_inv_monts).reshape(batch + (l, n))

@@ -19,6 +19,11 @@ Each op is an entry in an op-table mapping backend name -> implementation:
   * "pallas" — pl.pallas_call kernels. On CPU they run in interpret mode
                (kernel body executed in Python) for validation; on TPU they
                compile natively.
+  * "pallas4" — like "pallas", but ntt_fwd/ntt_inv dispatch to the 4-step
+               transpose NTT kernels (kernels/ntt.py, DESIGN.md §10): the
+               lane-efficient layout for real-TPU butterflies below 128
+               lanes.  Every non-NTT op shares the "pallas" kernels.  All
+               three backends are bit-identical (tests/test_gold.py).
 
 Selection is per-op: `set_backend("pallas")` flips every op,
 `set_backend("pallas", op="weighted_sum")` flips one.  The interpret/compile
@@ -42,7 +47,7 @@ from repro.kernels import ref as _ref
 
 OPS = ("ntt_fwd", "ntt_inv", "mul_add", "weighted_sum", "weighted_accum",
        "weighted_accum_chunks")
-BACKENDS = ("ref", "pallas")
+BACKENDS = ("ref", "pallas", "pallas4")
 
 _ASSIGN: dict[str, str] = {
     op: os.environ.get("REPRO_HE_BACKEND", "ref") for op in OPS
@@ -118,6 +123,19 @@ def _ntt_inv_pallas(t, x):
                               t.qinv_negs, interpret=_interpret())
 
 
+def _ntt_fwd_pallas4(t, x):
+    return _ntt.ntt4_fwd_fused(x, t.ntt4_psi1_mont, t.ntt4_psi2_mont,
+                               t.ntt4_corr_mont, t.qs, t.qinv_negs,
+                               interpret=_interpret())
+
+
+def _ntt_inv_pallas4(t, x):
+    return _ntt.ntt4_inv_fused(x, t.ntt4_psi1_inv_mont,
+                               t.ntt4_psi2_inv_mont, t.ntt4_corr_inv_mont,
+                               t.n_inv_monts, t.qs, t.qinv_negs,
+                               interpret=_interpret())
+
+
 def _mul_add_ref(t, x, y_mont, z):
     return _ref.mul_add_fused(x, jnp.broadcast_to(y_mont, x.shape),
                               jnp.broadcast_to(z, x.shape), t.qs, t.qinv_negs)
@@ -159,15 +177,24 @@ def _weighted_accum_chunks_pallas(t, acc, cts, w_mont):
 
 
 _IMPL = {
-    "ntt_fwd": {"ref": _ntt_fwd_ref, "pallas": _ntt_fwd_pallas},
-    "ntt_inv": {"ref": _ntt_inv_ref, "pallas": _ntt_inv_pallas},
-    "mul_add": {"ref": _mul_add_ref, "pallas": _mul_add_pallas},
+    "ntt_fwd": {"ref": _ntt_fwd_ref, "pallas": _ntt_fwd_pallas,
+                "pallas4": _ntt_fwd_pallas4},
+    "ntt_inv": {"ref": _ntt_inv_ref, "pallas": _ntt_inv_pallas,
+                "pallas4": _ntt_inv_pallas4},
+    # pallas4 differs only in the NTT family; every other op shares the
+    # limb-grid pallas kernel so REPRO_HE_BACKEND=pallas4 stays a full
+    # backend assignment (same env canon as ref/pallas).
+    "mul_add": {"ref": _mul_add_ref, "pallas": _mul_add_pallas,
+                "pallas4": _mul_add_pallas},
     "weighted_sum": {"ref": _weighted_sum_ref,
-                     "pallas": _weighted_sum_pallas},
+                     "pallas": _weighted_sum_pallas,
+                     "pallas4": _weighted_sum_pallas},
     "weighted_accum": {"ref": _weighted_accum_ref,
-                       "pallas": _weighted_accum_pallas},
+                       "pallas": _weighted_accum_pallas,
+                       "pallas4": _weighted_accum_pallas},
     "weighted_accum_chunks": {"ref": _weighted_accum_chunks_ref,
-                              "pallas": _weighted_accum_chunks_pallas},
+                              "pallas": _weighted_accum_chunks_pallas,
+                              "pallas4": _weighted_accum_chunks_pallas},
 }
 
 

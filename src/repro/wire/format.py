@@ -226,8 +226,17 @@ def unpack_array(payload, off: int = 0) -> tuple[np.ndarray, int]:
     dtype = _CODE_DTYPES.get(code)
     if dtype is None:
         raise WireError(f"unknown dtype code {code}")
-    count = int(np.prod(shape)) if shape else 1
+    # python-int size math (u32 dims from a corrupt frame can overflow
+    # fixed-width accumulators), bounds-checked BEFORE touching the buffer:
+    # the decoder must never over-read, however the dims were mutated.
+    count = 1
+    for d in shape:
+        count *= int(d)
     nbytes = count * dtype.itemsize
+    if nbytes > len(view) - off:
+        raise WireError(
+            f"array of {count} x {dtype} ({nbytes} B) exceeds the "
+            f"{len(view) - off} payload bytes remaining")
     arr = np.frombuffer(view, dtype=dtype, count=count, offset=off)
     return arr.reshape(shape).copy(), off + nbytes
 
@@ -369,6 +378,12 @@ def serialize_keyset(keys: dict) -> bytes:
 
 def _parse_keyset(payload) -> dict:
     (n,) = struct.unpack_from("<I", payload, 0)
+    if n > (len(payload) - 4) // 4:
+        # every entry needs >= 4 bytes (name length + array head): a bound
+        # that keeps a corrupt count from driving a multi-billion-iteration
+        # parse loop
+        raise WireError(f"keyset declares {n} entries but only "
+                        f"{len(payload) - 4} payload bytes follow")
     off = 4
     out = {}
     for _ in range(n):
@@ -418,9 +433,22 @@ def deserialize(buf, ctx=None, off: int = 0):
     Version handling is per frame (header byte): v1 and v2 frames decode
     transparently — the only layout difference is the seeded-ciphertext
     derive field (DESIGN.md §9.2) — and unsupported versions raise
-    WireError before any payload is touched."""
+    WireError before any payload is touched.
+
+    Robustness contract (fuzzed in tests/test_wire.py): ANY mutated or
+    truncated input raises WireError (NeedMoreData for a short buffer) —
+    the decoder never surfaces a raw struct/numpy error, never loops on a
+    corrupt count, and never reads past the frame payload."""
     ftype, _, version, payload, end = parse_frame_v(buf, off)
     parser = _PARSERS.get(ftype)
     if parser is None:
         raise WireError(f"no parser for frame type {ftype:#x}")
-    return parser(payload, ctx, version), end
+    try:
+        return parser(payload, ctx, version), end
+    except WireError:
+        raise
+    except Exception as e:
+        # struct.error / KeyError / reshape ValueError etc. from a payload
+        # whose bytes were mutated after the envelope survived
+        raise WireError(
+            f"malformed frame type {ftype:#x} payload: {e!r}") from e

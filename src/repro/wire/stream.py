@@ -124,7 +124,10 @@ def peek_update_meta(blob: bytes) -> UpdateMeta:
     ftype, _, payload, _ = wf.parse_frame(blob, 0)
     if ftype != wf.T_UPDATE_BEGIN:
         raise wf.WireError(f"expected UPDATE_BEGIN, got {ftype:#x}")
-    cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(payload, 0)
+    try:
+        cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(payload, 0)
+    except struct.error as e:
+        raise wf.WireError(f"short UPDATE_BEGIN payload: {e}") from e
     return UpdateMeta(cid=cid, n_samples=n_samples, round=rnd,
                       n_chunks=n_chunks, seeded=kind == CT_SEEDED)
 
@@ -202,14 +205,24 @@ class StreamIngest:
     def _buffer_chunk(self, chunk_idx: int, data, scale: float,
                       w_mont) -> None:
         """Queue one decoded chunk (data u32[1, L, 2, N]) for the next
-        flush; validates the scale against the running aggregation."""
+        flush; validates the scale, dtype, and shape against the running
+        aggregation — a wire-mutated chunk must fail HERE, inside ingest's
+        rollback scope, not later in a flush the rollback cannot reach."""
         if self._in_scale is None:
             self._in_scale = float(scale)
         elif abs(self._in_scale - scale) > 1e-6 * self._in_scale:
             raise wf.WireError("mixed ciphertext scales in one aggregation")
+        data = np.asarray(data)
+        if data.dtype != np.uint32:
+            raise wf.WireError(
+                f"ciphertext chunk dtype {data.dtype} is not uint32")
         if self._acc_ct is None:
             self._n_limbs, self._n = data.shape[-3], data.shape[-1]
             self._acc_ct = {}
+        if tuple(data.shape) != (1, self._n_limbs, 2, self._n):
+            raise wf.WireError(
+                f"ciphertext chunk shape {tuple(data.shape)} does not match "
+                f"this aggregation's (1, {self._n_limbs}, 2, {self._n})")
         self._note_decoded(+1)
         # limbs to axis -2 (ops layout): [1, L, 2, N] -> [2, L, N]
         x = jnp.moveaxis(jnp.asarray(data), -3, -2)[0]
@@ -243,12 +256,19 @@ class StreamIngest:
                 self._acc_ct[i] = out[j]
             self._note_decoded(-len(batch))
 
-    def _fold_plain(self, arr, codec: str, qscale: float,
-                    weight: float) -> None:
-        plain = _c.dequantize_plain(arr, codec, qscale)
+    def _fold_plain_decoded(self, plain: np.ndarray, weight: float) -> None:
         if self._acc_plain is None:
             self._acc_plain = np.zeros(plain.shape, dtype=np.float32)
+        elif plain.shape != self._acc_plain.shape:
+            raise wf.WireError(
+                f"plain segment shape {plain.shape} does not match this "
+                f"aggregation's {self._acc_plain.shape}")
         self._acc_plain += np.float32(weight) * plain
+
+    def _fold_plain(self, arr, codec: str, qscale: float,
+                    weight: float) -> None:
+        self._fold_plain_decoded(_c.dequantize_plain(arr, codec, qscale),
+                                 weight)
 
     # -- public API ---------------------------------------------------------
 
@@ -301,7 +321,21 @@ class StreamIngest:
                                        w_mont)
                     n_buffered += 1
                 elif ftype == wf.T_PLAIN_SEGMENT:
-                    plain_segments.append(wf._parse_plain_segment(payload))
+                    # decode AND shape-validate inside the rollback scope —
+                    # a wire-mutated dim must reject the whole update here;
+                    # the fold after validation then cannot fail, so the
+                    # success path needs no accumulator snapshot
+                    plain = _c.dequantize_plain(
+                        *wf._parse_plain_segment(payload))
+                    ref_shape = (self._acc_plain.shape
+                                 if self._acc_plain is not None
+                                 else plain_segments[0].shape
+                                 if plain_segments else None)
+                    if ref_shape is not None and plain.shape != ref_shape:
+                        raise wf.WireError(
+                            f"plain segment shape {plain.shape} does not "
+                            f"match this aggregation's {ref_shape}")
+                    plain_segments.append(plain)
                 elif ftype == wf.T_UPDATE_END:
                     saw_end = True
                 else:
@@ -313,7 +347,7 @@ class StreamIngest:
                 raise wf.WireError(
                     f"update declared {meta.n_chunks} chunks, "
                     f"received {len(chunks_seen)}")
-        except Exception:
+        except Exception as e:
             # rejected update: NOTHING of it may reach the accumulator —
             # drop its queued chunks and roll back any state its chunks
             # initialized (struct.error etc. count as rejections too)
@@ -324,9 +358,16 @@ class StreamIngest:
             if acc_was_uninit:
                 # the rejected chunks must not pin the limb/poly dims either
                 self._acc_ct = None
-            raise
-        for arr, codec, qscale in plain_segments:
-            self._fold_plain(arr, codec, qscale, weight)
+            if isinstance(e, wf.WireError):
+                raise
+            # uniform rejection contract (fuzzed in tests/test_wire.py):
+            # corrupt payloads that slip past the frame envelope surface as
+            # WireError here, never as a raw struct/numpy error
+            raise wf.WireError(f"malformed update stream: {e!r}") from e
+        # validated above: these folds cannot fail, so no rollback is needed
+        # past this point (and no per-ingest accumulator snapshot either)
+        for plain in plain_segments:
+            self._fold_plain_decoded(plain, weight)
         self.flush()
         self.clients_ingested += 1
         self.bytes_ingested += len(blob)

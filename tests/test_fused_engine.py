@@ -55,7 +55,7 @@ def _per_limb_weighted_sum(cts, w, ctx):
          for i, lc in enumerate(ctx.limbs)], axis=-2)
 
 
-@pytest.fixture(params=["ref", "pallas"])
+@pytest.fixture(params=["ref", "pallas", "pallas4"])
 def backend(request):
     old = {op: ops.get_backend(op) for op in ops.OPS}
     ops.set_backend(request.param)
@@ -159,7 +159,7 @@ def test_seeded_encrypt_64bit_seed():
 
 
 def test_backend_parity_end_to_end():
-    """Same keys/inputs produce bit-identical ciphertexts on both backends
+    """Same keys/inputs produce bit-identical ciphertexts on every backend
     (the PRNG streams and modular math are backend-independent)."""
     ctx = _ctx(2, n_poly=128)
     vals = jnp.asarray(np.linspace(-0.5, 0.5, ctx.slots,
@@ -167,7 +167,7 @@ def test_backend_parity_end_to_end():
     datas = {}
     old = ops.get_backend()
     try:
-        for b in ("ref", "pallas"):
+        for b in ops.BACKENDS:
             ops.set_backend(b)
             sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(3))
             ct = cipher.encrypt_values(ctx, pk, vals, jax.random.PRNGKey(4))
@@ -175,8 +175,9 @@ def test_backend_parity_end_to_end():
                         np.asarray(cipher.decrypt_to_coeffs(ctx, sk, ct)))
     finally:
         ops.set_backend(old)
-    np.testing.assert_array_equal(datas["ref"][0], datas["pallas"][0])
-    np.testing.assert_array_equal(datas["ref"][1], datas["pallas"][1])
+    for b in ops.BACKENDS[1:]:
+        np.testing.assert_array_equal(datas["ref"][0], datas[b][0])
+        np.testing.assert_array_equal(datas["ref"][1], datas[b][1])
 
 
 def test_per_op_backend_selection():

@@ -1,0 +1,62 @@
+"""Gold known-answer tests: the checked-in vectors in
+tests/golden/ckks_kats.json must be reproduced BIT-EXACTLY by every
+backend in the registry ("ref", "pallas", "pallas4").
+
+This is the cross-version / cross-backend drift tripwire: a jax PRNG
+change, a twiddle-table regression, or a new backend that is "only
+approximately" compatible all fail here with the first differing vector
+named.  Regeneration (after an intentional stream change) is
+`python tools/gen_gold.py`; the CI docs job runs `tools/gen_gold.py
+--check` so the file cannot silently drift from the code either.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+import gold
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return gold.load_kats()
+
+
+def test_golden_file_covers_every_case(golden):
+    ops_per_ctx = {"ntt_fwd", "ntt_inv", "keygen_sk", "encrypt_seeded",
+                   "encrypt_pk", "weighted_sum"}
+    want = {f"{c}/{op}" for c in gold.KAT_CONTEXTS for op in ops_per_ctx}
+    assert set(golden) == want
+
+
+@pytest.mark.parametrize("backend", ops.BACKENDS)
+def test_backend_reproduces_golden_kats(backend, golden):
+    old = {op: ops.get_backend(op) for op in ops.OPS}
+    try:
+        ops.set_backend(backend)
+        got = gold.compute_kats()
+    finally:
+        for op, name in old.items():
+            ops.set_backend(name, op=op)
+    assert set(got) == set(golden)
+    for name in sorted(golden):
+        np.testing.assert_array_equal(
+            got[name], golden[name],
+            err_msg=f"backend {backend!r} drifted from golden KAT {name!r}"
+                    " (tests/golden/ckks_kats.json; see tools/gen_gold.py)")
+
+
+def test_corrupt_golden_file_detected(tmp_path):
+    """load_kats verifies the recorded sha256 — a hand-edited or truncated
+    golden file is rejected, not silently trusted."""
+    import json
+
+    with open(gold.KAT_PATH) as f:
+        doc = json.load(f)
+    name = sorted(doc["kats"])[0]
+    doc["kats"][name]["data_b64"] = doc["kats"][name]["data_b64"][:-8] \
+        + "AAAAAAA="
+    bad = tmp_path / "kats.json"
+    bad.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="corrupt"):
+        gold.load_kats(str(bad))

@@ -1,10 +1,19 @@
 """repro.wire: serialization round-trips, seed-expanded uplink compression,
 quantized plain partition, streaming O(1) server ingest, bandwidth ledger,
-and SelectiveHEAggregator.overhead_report coverage."""
+SelectiveHEAggregator.overhead_report coverage, and decoder fuzzing (every
+mutated/truncated input raises WireError — deterministic sweeps always run;
+hypothesis widens the search when installed)."""
+import functools
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # property tests skip cleanly
+    from _hyp import given, settings, st
 
 from repro.core import packing
 from repro.core.ckks import cipher, encoding
@@ -371,8 +380,9 @@ def test_stream_rejected_update_contributes_nothing():
 
 
 def test_stream_corrupt_chunk_payload_drops_buffered_chunks():
-    """Non-WireError parse failures (e.g. struct.error on a short payload)
-    must also roll the rejected update's buffered chunks back."""
+    """Parse failures below the frame envelope (e.g. a short chunk payload)
+    must roll the rejected update's buffered chunks back AND surface as
+    WireError — never a raw struct/numpy error."""
     agg, m = make_agg()
     upd = agg.client_protect(m, PK, jax.random.PRNGKey(1))
     blob = ws.pack_update_frames(upd, cid=0, n_samples=1)
@@ -387,10 +397,232 @@ def test_stream_corrupt_chunk_payload_drops_buffered_chunks():
     corrupt = wf.frame(wf.T_CT_CHUNK, b"\x01")
     mangled = b"".join(frames[:2] + [corrupt] + frames[3:])
     ing = ws.StreamIngest(CTX)
-    with pytest.raises(Exception):
+    with pytest.raises(wf.WireError):
         ing.ingest(mangled, 1.0)
     assert not ing._pending          # first chunk was rolled back
     assert ing.peak_chunk_buffers <= agg.part.n_chunks
+
+
+# ---------------------------------------------------------------------------
+# decoder fuzzing: any mutation/truncation -> WireError, never a crash,
+# hang, or over-read.  The deterministic sweeps below run in every
+# environment; the @given variants widen the same properties with
+# hypothesis when it is installed (tests/_hyp.py guard otherwise).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _fuzz_corpus() -> tuple:
+    """Valid frames of every type, covering BOTH wire versions and BOTH
+    seed-derivation paths (v1's implicit derive byte and v2's explicit
+    one)."""
+    blobs = []
+    _, ct = fresh_ct(b=1, seed=3)
+    for v in (1, 2):
+        blobs.append(wf.serialize_ciphertext(ct, version=v))
+    sct = wc.seed_compress(_seeded_ct(b=1, seed=2, a_seed=5), 5)
+    for v in (1, 2):
+        blobs.append(wf.serialize_seeded_ciphertext(sct, version=v))
+    blobs.append(wf.serialize_keyset(PK))
+    agg, m = make_agg()
+    blobs.append(wf.serialize_partition(agg.part))
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(5))
+    for v in (1, 2):
+        blobs.append(wf.serialize_update(upd, version=v))
+    upd_s = agg.client_protect_seeded(m, SK, jax.random.PRNGKey(6), a_seed=9)
+    for v in (1, 2):
+        blobs.append(wf.serialize_update(
+            upd_s, seeded=wc.seed_compress(upd_s.ct, 9), version=v))
+    return tuple(bytes(b) for b in blobs)
+
+
+def _decode_ok_or_wire_error(blob: bytes) -> None:
+    """The fuzz property: decode either succeeds or raises WireError."""
+    try:
+        wf.deserialize(blob, CTX)
+    except wf.WireError:
+        pass           # includes NeedMoreData for truncations
+
+
+def test_fuzz_corpus_is_valid():
+    for blob in _fuzz_corpus():
+        out, end = wf.deserialize(blob, CTX)
+        assert end == len(blob) and out is not None
+
+
+def test_fuzz_truncation_always_wire_error():
+    """EVERY proper prefix of every valid frame must be rejected with
+    WireError (NeedMoreData for envelope-level cuts)."""
+    for blob in _fuzz_corpus():
+        cuts = set(range(0, min(len(blob), 64))) | {
+            len(blob) * k // 23 for k in range(23)} | {len(blob) - 1}
+        for cut in sorted(cuts):
+            if cut >= len(blob):
+                continue
+            with pytest.raises(wf.WireError):
+                wf.deserialize(blob[:cut], CTX)
+
+
+def test_fuzz_mutation_never_crashes():
+    """Single-byte mutations anywhere in any frame: decode either succeeds
+    (a data byte changed) or raises WireError — no other exception type,
+    no hang, no over-read."""
+    rng = np.random.RandomState(0)
+    for blob in _fuzz_corpus():
+        positions = np.concatenate([
+            np.arange(min(len(blob), 48)),           # every header byte
+            rng.randint(0, len(blob), size=64)])     # random payload bytes
+        for pos in positions:
+            b = bytearray(blob)
+            b[pos] ^= 1 + rng.randint(0, 255)
+            _decode_ok_or_wire_error(bytes(b))
+
+
+def test_fuzz_garbage_and_resized_buffers():
+    rng = np.random.RandomState(1)
+    for n in (0, 1, wf.HEADER_BYTES - 1, wf.HEADER_BYTES, 64, 4096):
+        _decode_ok_or_wire_error(rng.bytes(n))
+    # valid header, absurd declared length
+    for blob in _fuzz_corpus()[:2]:
+        _decode_ok_or_wire_error(blob + rng.bytes(17))    # trailing junk
+        grown = bytearray(blob)
+        grown[8:16] = (2 ** 62).to_bytes(8, "little")     # payload_len
+        _decode_ok_or_wire_error(bytes(grown))
+
+
+def test_fuzz_stream_ingest_never_crashes():
+    """The streaming server path under the same property: a mutated or
+    truncated update blob raises WireError and leaves the ingest clean for
+    the next client."""
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    blob = ws.pack_update_frames(upd, cid=0, n_samples=1)
+    rng = np.random.RandomState(2)
+    ing = ws.StreamIngest(CTX)
+    rejected = 0
+    for _ in range(60):
+        b = bytearray(blob)
+        if rng.rand() < 0.5:
+            b = b[:rng.randint(0, len(blob))]
+        else:
+            b[rng.randint(0, len(b))] ^= 1 + rng.randint(0, 255)
+        try:
+            ing.ingest(bytes(b), 0.5)
+        except wf.WireError:
+            rejected += 1
+    assert rejected > 0
+    # after arbitrary rejections the ingest still accepts a clean update
+    ing.ingest(blob, 1.0)
+    assert ing.finalize() is not None
+
+
+@given(st.data())
+@settings(max_examples=80, deadline=None)
+def test_hyp_mutation_rejected_or_decoded(data):
+    blobs = _fuzz_corpus()
+    blob = data.draw(st.sampled_from(blobs))
+    pos = data.draw(st.integers(0, len(blob) - 1))
+    val = data.draw(st.integers(0, 255))
+    b = bytearray(blob)
+    b[pos] = val
+    _decode_ok_or_wire_error(bytes(b))
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_hyp_truncation_rejected(data):
+    blobs = _fuzz_corpus()
+    blob = data.draw(st.sampled_from(blobs))
+    cut = data.draw(st.integers(0, len(blob) - 1))
+    with pytest.raises(wf.WireError):
+        wf.deserialize(blob[:cut], CTX)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_hyp_valid_frames_roundtrip(data):
+    """Arbitrary valid ciphertext/seeded frames round-trip bit-exactly on
+    both wire versions and both derive paths."""
+    b = data.draw(st.integers(1, 3))
+    seed = data.draw(st.integers(0, 2 ** 16))
+    version = data.draw(st.sampled_from([1, 2]))
+    seeded = data.draw(st.booleans())
+    if seeded:
+        a_seed = data.draw(st.integers(0, 2 ** 31))
+        sct = wc.seed_compress(_seeded_ct(b=b, seed=seed, a_seed=a_seed),
+                               a_seed)
+        out, end = wf.deserialize(
+            wf.serialize_seeded_ciphertext(sct, version=version))
+        np.testing.assert_array_equal(np.asarray(sct.c0, np.uint32), out.c0)
+        assert out.seed == sct.seed and out.derive == wc.DERIVE_FOLD_CHUNK
+    else:
+        _, ct = fresh_ct(b=b, seed=seed)
+        blob = wf.serialize_ciphertext(ct, version=version)
+        out, end = wf.deserialize(blob)
+        assert end == len(blob)
+        np.testing.assert_array_equal(np.asarray(ct.data, np.uint32),
+                                      out.data)
+        assert out.scale == ct.scale
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_hyp_stream_ingest_mutation(data):
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    blob = ws.pack_update_frames(upd, cid=0, n_samples=1)
+    pos = data.draw(st.integers(0, len(blob) - 1))
+    val = data.draw(st.integers(0, 255))
+    b = bytearray(blob)
+    b[pos] = val
+    ing = ws.StreamIngest(CTX)
+    try:
+        ing.ingest(bytes(b), 1.0)
+    except wf.WireError:
+        assert not ing._pending          # rejected updates leave no trace
+
+
+def test_stream_mismatched_plain_segment_rejected_atomically():
+    """A well-framed update whose plain segment length disagrees with the
+    running aggregation must be rejected as WireError INSIDE the rollback
+    scope: its buffered ciphertext chunks are dropped and the plain
+    accumulator keeps its exact pre-ingest values."""
+    agg, m = make_agg()
+    good = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    ing = ws.StreamIngest(CTX)
+    ing.ingest(ws.pack_update_frames(good, cid=0, n_samples=1), 0.5)
+    snap_plain = np.array(ing._acc_plain)
+    snap_acc = {i: np.asarray(v) for i, v in ing._acc_ct.items()}
+    bad = ProtectedUpdate(ct=good.ct, plain=good.plain[:-5])
+    with pytest.raises(wf.WireError, match="plain segment"):
+        ing.ingest(ws.pack_update_frames(bad, cid=1, n_samples=1), 0.5)
+    assert not ing._pending              # rejected chunks dropped
+    np.testing.assert_array_equal(np.asarray(ing._acc_plain), snap_plain)
+    # a clean third client still folds, unaffected by the rejection
+    ing.ingest(ws.pack_update_frames(good, cid=2, n_samples=1), 0.5)
+    for i, v in snap_acc.items():
+        assert not np.array_equal(np.asarray(ing._acc_ct[i]), v)
+
+
+def test_stream_mismatched_chunk_shape_rejected_atomically():
+    """Same contract for the ciphertext side: a chunk whose (L, N) dims
+    disagree with the pinned aggregation dims raises WireError and leaves
+    no queued chunks behind."""
+    agg, m = make_agg()
+    good = agg.client_protect(m, PK, jax.random.PRNGKey(1))
+    ing = ws.StreamIngest(CTX)
+    ing.ingest(ws.pack_update_frames(good, cid=0, n_samples=1), 0.5)
+    n_chunks = good.ct.data.shape[0]
+    bad_ct = cipher.Ciphertext(
+        data=jnp.zeros((n_chunks, CTX.n_limbs, 2, CTX.n_poly // 2),
+                       jnp.uint32),
+        scale=good.ct.scale)
+    bad = ProtectedUpdate(ct=bad_ct, plain=good.plain)
+    with pytest.raises(wf.WireError, match="chunk shape"):
+        ing.ingest(ws.pack_update_frames(bad, cid=1, n_samples=1), 0.5)
+    assert not ing._pending
+    ing.ingest(ws.pack_update_frames(good, cid=2, n_samples=1), 0.5)
+    assert ing.finalize() is not None
 
 
 def test_stream_rejects_missing_or_duplicate_chunk():

@@ -9,9 +9,14 @@ Checks (default mode — exit nonzero on any failure):
      render to;
   3. the DESIGN.md §9.2 wire-spec appendix matches wire/format.py's
      version and derivation constants (the WIRE_SPEC marker);
-  4. the README quickstart snippets (first ```bash block after the
+  4. the README "Environment variables & flags" table's REPRO_HE_BACKEND
+     row names every backend in kernels/ops.py BACKENDS (ref, pallas,
+     pallas4, ...);
+  5. the README quickstart snippets (first ```bash block after the
      "quickstart" heading AND after the "sharded uplink" heading) execute
-     successfully (skipped with --no-exec for fast local runs).
+     successfully, and the checked-in gold KATs match a fresh recompute
+     (tools/gen_gold.py --check) — both skipped with --no-exec for fast
+     local runs.
 
 `--write` regenerates the README tables in place between the
 BENCH_TABLES_START/END markers instead of failing on drift.
@@ -79,6 +84,24 @@ def render_bench_tables() -> str:
         spd = r.get("speedup")
         spd_s = f"{spd:.0f}x" if spd is not None else "—"
         out.append(f"| {op} | {per_s} | {r['fused_ms']:.2f} | {spd_s} |")
+    out.append("")
+
+    n4 = he["ntt4"]
+    out.append(
+        f"**Flat limb-grid NTT vs 4-step transpose NTT** "
+        f"(`benchmarks/run.py ntt`; batch={n4['batch']}, "
+        f"interpret={'yes' if n4['interpret'] else 'no'} — structure/"
+        "dispatch tracking, not TPU lane behaviour; DESIGN.md §10):\n")
+    out.append("| N | L | split n1 x n2 | fwd fused ms | fwd 4-step ms | "
+               "inv fused ms | inv 4-step ms | bit-parity |")
+    out.append("|---:|--:|---------------|-------------:|--------------:|"
+               "-------------:|--------------:|:----------:|")
+    for r in n4["rows"]:
+        out.append(
+            f"| {r['n_poly']} | {r['n_limbs']} | {r['split']} | "
+            f"{r['fwd_fused_ms']:.2f} | {r['fwd_4step_ms']:.2f} | "
+            f"{r['inv_fused_ms']:.2f} | {r['inv_4step_ms']:.2f} | "
+            f"{'yes' if r['bit_parity'] else 'NO'} |")
     out.append("")
 
     ag_path = os.path.join(ROOT, "BENCH_agg_sharded.json")
@@ -183,6 +206,32 @@ def check_wire_spec() -> list[str]:
     return errors
 
 
+def check_env_table() -> list[str]:
+    """The README env-var table must keep pace with the backend registry:
+    every name in kernels.ops.BACKENDS has to appear in the
+    REPRO_HE_BACKEND row, so a new backend (e.g. pallas4) cannot land
+    without its knob being documented."""
+    try:
+        from repro.kernels import ops
+    except Exception as e:          # pragma: no cover - import environment
+        return [f"README.md: cannot import repro.kernels.ops to verify the "
+                f"REPRO_HE_BACKEND row: {e}"]
+    text = open(os.path.join(ROOT, "README.md")).read()
+    row = next((ln for ln in text.splitlines()
+                if ln.startswith("| `REPRO_HE_BACKEND")), None)
+    if row is None:
+        return ["README.md: missing the `REPRO_HE_BACKEND` row in the "
+                "'Environment variables & flags' table"]
+    # whole-word match: "pallas4" in the row must not satisfy "pallas"
+    words = set(re.findall(r"\w+", row))
+    missing = [b for b in ops.BACKENDS if b not in words]
+    if missing:
+        return [f"README.md: REPRO_HE_BACKEND row does not mention "
+                f"backend(s) {missing} (kernels/ops.py BACKENDS = "
+                f"{list(ops.BACKENDS)})"]
+    return []
+
+
 def check_or_write_tables(write: bool) -> list[str]:
     path = os.path.join(ROOT, "README.md")
     text = open(path).read()
@@ -190,7 +239,14 @@ def check_or_write_tables(write: bool) -> list[str]:
         return [f"README.md: missing {MARK_START}/{MARK_END} markers"]
     head, rest = text.split(MARK_START, 1)
     _, tail = rest.split(MARK_END, 1)
-    rendered = MARK_START + "\n" + render_bench_tables() + MARK_END
+    try:
+        rendered = MARK_START + "\n" + render_bench_tables() + MARK_END
+    except (OSError, KeyError, ValueError) as e:
+        # a missing BENCH json / section is a docs error, not a traceback
+        # (e.g. BENCH_he.json regenerated by `run he` alone lacks 'ntt4' —
+        # run `python -m benchmarks.run ntt` too)
+        return [f"README.md: cannot render bench tables from the checked-in "
+                f"BENCH json artifacts: {e!r}"]
     new = head + rendered + tail
     if new == text:
         return []
@@ -233,6 +289,20 @@ def run_quickstart() -> list[str]:
     return _run_snippet(r"quickstart") + _run_snippet(r"sharded uplink")
 
 
+def check_gold_kats() -> list[str]:
+    """The checked-in gold KATs (tests/golden/ckks_kats.json) must match a
+    fresh recompute — a code change that silently moves the known answers
+    fails the docs job, not just the test suite."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "gen_gold.py"),
+         "--check"], cwd=ROOT, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        return [f"gold KATs drifted (tools/gen_gold.py --check):\n"
+                f"{proc.stdout}\n{proc.stderr}"]
+    print(proc.stdout.strip().splitlines()[-1])
+    return []
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--write", action="store_true",
@@ -244,8 +314,10 @@ def main() -> int:
     errors = check_links()
     errors += check_or_write_tables(write=args.write)
     errors += check_wire_spec()
+    errors += check_env_table()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
+        errors += check_gold_kats()
     for e in errors:
         print(f"DOCS ERROR: {e}", file=sys.stderr)
     if not errors:

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Regenerate the checked-in gold known-answer vectors.
+
+    PYTHONPATH=src python tools/gen_gold.py            # write + verify
+    PYTHONPATH=src python tools/gen_gold.py --check    # verify only (CI)
+
+The vectors (tests/golden/ckks_kats.json) pin NTT fwd/inv, pk + seeded
+encrypt, keygen, and weighted_sum outputs for fixed keys/params on the
+`ref` backend; tests/test_gold.py asserts every backend ("ref", "pallas",
+"pallas4") reproduces them bit-exactly.  Only regenerate after an
+INTENTIONAL stream/format change (e.g. a new sampling order) — the whole
+point of the file is that accidental drift fails CI.
+
+--check recomputes on the current environment and diffs against the
+checked-in file without writing, so the docs job catches a code change
+that silently moved the answers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.join(ROOT, "tests"))
+
+import gold  # noqa: E402  (tests/gold.py — the shared KAT layer)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="verify the checked-in file instead of writing")
+    args = ap.parse_args()
+
+    from repro.kernels import ops
+    ops.set_backend("ref")          # golden answers are defined by the oracle
+    doc = gold.encode_kats(gold.compute_kats())
+
+    if args.check:
+        try:
+            with open(gold.KAT_PATH) as f:
+                have = json.load(f)
+        except FileNotFoundError:
+            print(f"GOLD ERROR: {gold.KAT_PATH} missing "
+                  "(run tools/gen_gold.py)", file=sys.stderr)
+            return 1
+        errors = []
+        for name, e in doc["kats"].items():
+            got = have.get("kats", {}).get(name)
+            if got is None:
+                errors.append(f"missing KAT {name!r}")
+            elif got["sha256"] != e["sha256"]:
+                errors.append(f"KAT {name!r} drifted: checked-in sha256 "
+                              f"{got['sha256'][:12]}.. != recomputed "
+                              f"{e['sha256'][:12]}..")
+        for extra in set(have.get("kats", {})) - set(doc["kats"]):
+            errors.append(f"stale KAT {extra!r} in golden file")
+        for err in errors:
+            print(f"GOLD ERROR: {err}", file=sys.stderr)
+        if errors:
+            print("golden KATs drifted — if the change is intentional, "
+                  "regenerate with `python tools/gen_gold.py`",
+                  file=sys.stderr)
+            return 1
+        print(f"golden KATs verified ({len(doc['kats'])} vectors)")
+        return 0
+
+    os.makedirs(os.path.dirname(gold.KAT_PATH), exist_ok=True)
+    with open(gold.KAT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {gold.KAT_PATH} ({len(doc['kats'])} vectors)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
