@@ -193,10 +193,11 @@ def bench_he():
     w_mont = jnp.asarray(encoding.encode_weights_mont(
         [1.0 / n_clients] * n_clients, ctx))
 
+    from repro import obs
     rows, results = [], {"n_poly": n_poly, "n_limbs": n_limbs,
                          "n_clients": n_clients, "batch": batch,
                          "backend": ops.get_backend(), "token": str(token),
-                         "ops": {}}
+                         "provenance": obs.provenance(), "ops": {}}
     cases = [
         ("ntt_fwd", lambda: timeit(per_limb_ntt_fwd, x),
          lambda: timeit(fused_ntt_fwd, x)),
@@ -304,7 +305,9 @@ def bench_ntt():
                 "inv_4step_ms": timeit(four_inv, y) * 1e3,
                 "bit_parity": parity,
             })
+    from repro import obs
     _merge_bench_he({"ntt4": {"batch": batch, "interpret": interpret,
+                              "provenance": obs.provenance(),
                               "rows": rows}})
     _rows("NTT: flat limb-grid kernel vs 4-step transpose kernel "
           f"(batch={batch}, interpret={interpret}; BENCH_he.json "
@@ -405,8 +408,10 @@ def _run_sharded_workers(module: str, bench: str, artifact: str,
                 f"{bench} worker ndev={ndev} failed "
                 f"({artifact} left untouched):\n{proc.stdout}\n{proc.stderr}")
         per_dev[str(ndev)] = json.loads(out_lines[-1])
+    from repro import obs
     with open(os.path.join(root, artifact), "w") as f:
-        json.dump({"bench": bench, "per_devices": per_dev}, f, indent=2)
+        json.dump({"bench": bench, "provenance": obs.provenance(),
+                   "per_devices": per_dev}, f, indent=2)
     return per_dev
 
 

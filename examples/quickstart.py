@@ -8,6 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import packing, selection
 from repro.core.ckks import cipher, params as ckks_params
 from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
@@ -56,25 +57,38 @@ def main():
     assert err < 1e-2
 
     # 5. same round over the wire: seed-expanded uplink ciphertexts, fp16
-    #    plaintext partition, streaming server ingest, measured bytes
+    #    plaintext partition, streaming server ingest, measured bytes —
+    #    traced as one "round" span tree when REPRO_OBS=1
     ledger = wb.BandwidthLedger()
-    blobs = []
-    for i, m in enumerate(clients):
-        upd = agg.client_protect_seeded(m, sk, jax.random.PRNGKey(20 + i),
-                                        a_seed=100 + i)
-        sct = wire.seed_compress(upd.ct, 100 + i)
-        blob = ws.pack_update_frames(upd, cid=i, n_samples=4, rnd=0,
-                                     seeded=sct, plain_codec="f16")
-        ledger.record_blob(blob, rnd=0, cid=i, direction=wb.UPLINK)
-        blobs.append(blob)
-    ingest = ws.StreamIngest(ctx)
-    for blob in blobs:
-        ingest.ingest(blob, 1 / 3)
-    glob_wire = ingest.finalize()
-    blob_down = wire.serialize_update(glob_wire)
-    for i in range(len(clients)):
-        ledger.record_blob(blob_down, rnd=0, cid=i, direction=wb.DOWNLINK)
-    rec_wire = agg.client_recover_params(glob_wire, sk)
+    with obs.span("round", round=0) as rsp:
+        blobs = []
+        for i, m in enumerate(clients):
+            with obs.span("encrypt", cid=i) as esp:
+                upd = agg.client_protect_seeded(
+                    m, sk, jax.random.PRNGKey(20 + i), a_seed=100 + i)
+                sct = wire.seed_compress(upd.ct, 100 + i)
+                blob = ws.pack_update_frames(upd, cid=i, n_samples=4,
+                                             rnd=0, seeded=sct,
+                                             plain_codec="f16")
+                esp.set(nbytes=len(blob))
+            ledger.record_blob(blob, rnd=0, cid=i, direction=wb.UPLINK)
+            blobs.append(blob)
+        with obs.span("aggregate", n_updates=len(blobs)):
+            ingest = ws.StreamIngest(ctx)
+            for blob in blobs:
+                ingest.ingest(blob, 1 / 3)
+            glob_wire = ingest.finalize()
+        with obs.span("broadcast", n_clients=len(clients)):
+            blob_down = wire.serialize_update(glob_wire)
+            for i in range(len(clients)):
+                ledger.record_blob(blob_down, rnd=0, cid=i,
+                                   direction=wb.DOWNLINK)
+        with obs.span("recover"):
+            rec_wire = obs.maybe_block(
+                agg.client_recover_params(glob_wire, sk))
+        rsp.set(bytes_up=ledger.total(wb.UPLINK, 0),
+                bytes_down=ledger.total(wb.DOWNLINK, 0),
+                launches=ingest.accum_launches)
     err_w = max(float(jnp.abs(a - b).max()) for a, b in zip(
         jax.tree_util.tree_leaves(rec_wire),
         jax.tree_util.tree_leaves(expect)))
@@ -96,6 +110,11 @@ def main():
           f"{comp['compression_ratio']:.1f}x "
           f"({comp['naive_all_encrypted_bytes']:,} B -> "
           f"{comp['measured_uplink_bytes']:,} B)")
+    if obs.enabled():
+        obs.flush()
+        print(f"\ntrace written to {obs.trace_path()} "
+              f"(open in Perfetto, or: "
+              f"python tools/round_report.py {obs.trace_path()})")
     print("OK")
 
 

@@ -48,6 +48,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.ckks import encoding
 from repro.core.ckks.cipher import (Ciphertext, _gaussian_residues,
                                     _ternary_residues, _uniform_residues)
@@ -154,8 +155,10 @@ class ShardedHe:
         sliced to local limbs.
         """
         self._check_limbs(self.ctx.n_limbs)
-        s_mont, pk0_mont, pk1_mont = _keygen_graph(
-            self, ops.backend_token(), key)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.keygen", token) as kl:
+            s_mont, pk0_mont, pk1_mont = kl.done(
+                _keygen_graph(self, token, key))
         return ({"s_mont": s_mont},
                 {"pk0_mont": pk0_mont, "pk1_mont": pk1_mont})
 
@@ -172,9 +175,13 @@ class ShardedHe:
         tests/test_sharded.py).  Batches that do not divide the data axis
         are zero-padded in-graph and sliced back."""
         self._check_limbs(self.ctx.n_limbs)
-        data = _encrypt_values_graph(self, ops.backend_token(),
-                                     pk["pk0_mont"], pk["pk1_mont"],
-                                     values, key)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.encrypt_values", token,
+                               rows=int(values.shape[0])) as kl:
+            data = kl.done(_encrypt_values_graph(self, token,
+                                                 pk["pk0_mont"],
+                                                 pk["pk1_mont"], values,
+                                                 key))
         return Ciphertext(data=data, scale=float(self.ctx.delta))
 
     def encrypt_coeffs(self, pk: dict, m_coeff, key,
@@ -184,9 +191,13 @@ class ShardedHe:
         limbs -> `model_axis`, per-chunk key derivation)."""
         self._check_limbs(m_coeff.shape[-2])
         scale = float(scale if scale is not None else self.ctx.delta)
-        data = _encrypt_coeffs_graph(self, ops.backend_token(),
-                                     pk["pk0_mont"], pk["pk1_mont"],
-                                     m_coeff, key)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.encrypt_coeffs", token,
+                               rows=int(m_coeff.shape[0])) as kl:
+            data = kl.done(_encrypt_coeffs_graph(self, token,
+                                                 pk["pk0_mont"],
+                                                 pk["pk1_mont"], m_coeff,
+                                                 key))
         return Ciphertext(data=data, scale=scale)
 
     def encrypt_values_seeded(self, sk: dict, values, key,
@@ -207,9 +218,13 @@ class ShardedHe:
         """
         self._check_limbs(self.ctx.n_limbs)
         a_base = jax.random.PRNGKey(int(a_seed))
-        data = _encrypt_seeded_values_graph(self, ops.backend_token(),
-                                            sk["s_mont"], values, key,
-                                            a_base)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.encrypt_values_seeded", token,
+                               rows=int(values.shape[0])) as kl:
+            data = kl.done(_encrypt_seeded_values_graph(self, token,
+                                                        sk["s_mont"],
+                                                        values, key,
+                                                        a_base))
         return Ciphertext(data=data, scale=float(self.ctx.delta))
 
     def encrypt_coeffs_seeded(self, sk: dict, m_coeff, key, a_seed: int,
@@ -219,9 +234,13 @@ class ShardedHe:
         self._check_limbs(m_coeff.shape[-2])
         scale = float(scale if scale is not None else self.ctx.delta)
         a_base = jax.random.PRNGKey(int(a_seed))
-        data = _encrypt_seeded_coeffs_graph(self, ops.backend_token(),
-                                            sk["s_mont"], m_coeff, key,
-                                            a_base)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.encrypt_coeffs_seeded", token,
+                               rows=int(m_coeff.shape[0])) as kl:
+            data = kl.done(_encrypt_seeded_coeffs_graph(self, token,
+                                                        sk["s_mont"],
+                                                        m_coeff, key,
+                                                        a_base))
         return Ciphertext(data=data, scale=scale)
 
     def decrypt_to_coeffs(self, sk: dict, ct: Ciphertext):
@@ -233,7 +252,9 @@ class ShardedHe:
         """
         self._check_limbs(ct.n_limbs)
         s = sk["s_mont"][: ct.n_limbs]
-        return _decrypt_graph(self, ops.backend_token(), s, ct.data)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.decrypt", token) as kl:
+            return kl.done(_decrypt_graph(self, token, s, ct.data))
 
     def decrypt_values(self, sk: dict, ct: Ciphertext):
         """-> f32[B, slots] via the jnp decode path (2-limb)."""
@@ -254,8 +275,11 @@ class ShardedHe:
         """
         self._check_limbs(cts.data.shape[-3])
         w_mont = jnp.asarray(encoding.encode_weights_mont(weights, self.ctx))
-        data = _weighted_sum_graph(self, ops.backend_token(), cts.data,
-                                   w_mont)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.weighted_sum", token,
+                               n_clients=int(cts.data.shape[0])) as kl:
+            data = kl.done(_weighted_sum_graph(self, token, cts.data,
+                                               w_mont))
         return Ciphertext(data=data, scale=cts.scale * self.ctx.delta)
 
     def weighted_accum(self, acc: Ciphertext, ct: Ciphertext,
@@ -264,8 +288,10 @@ class ShardedHe:
         self._check_limbs(ct.n_limbs)
         w_mont = jnp.asarray(
             encoding.encode_scalar_residues(float(weight), self.ctx))
-        data = _weighted_accum_graph(self, ops.backend_token(), acc.data,
-                                     ct.data, w_mont)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.weighted_accum", token) as kl:
+            data = kl.done(_weighted_accum_graph(self, token, acc.data,
+                                                 ct.data, w_mont))
         return Ciphertext(data=data, scale=acc.scale)
 
     def weighted_accum_chunks(self, accs, cts, w_mont):
@@ -274,8 +300,11 @@ class ShardedHe:
         `data_axis`, limbs over `model_axis`; used by wire.stream when a
         ShardedHe is attached."""
         self._check_limbs(cts.shape[-2])
-        return _weighted_accum_chunks_graph(self, ops.backend_token(),
-                                            accs, cts, w_mont)
+        token = ops.backend_token()
+        with obs.kernel_launch("sharded.weighted_accum_chunks", token,
+                               rows=int(cts.shape[0])) as kl:
+            return kl.done(_weighted_accum_chunks_graph(self, token, accs,
+                                                        cts, w_mont))
 
 
 # ---------------------------------------------------------------------------

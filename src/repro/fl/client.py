@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import packing, sensitivity
 from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -81,17 +82,22 @@ class FLClient:
     def local_train(self, global_params) -> tuple[dict, float]:
         """E local steps from the incoming global model. Returns
         (local params, mean loss)."""
-        params = global_params
-        opt_state = adamw_init(params)
-        losses = []
-        for _ in range(self.cfg.local_steps):
-            batch = {k: jnp.asarray(v) for k, v in
-                     self.stream.next_batch().items()}
-            params, opt_state, loss = self._step(params, opt_state, batch,
-                                                 global_params)
-            losses.append(float(loss))
-            self.n_samples += int(batch["tokens"].shape[0]) \
-                if "tokens" in batch else int(next(iter(batch.values())).shape[0])
+        with obs.span("local_train", cid=self.cid,
+                      steps=self.cfg.local_steps) as sp:
+            params = global_params
+            opt_state = adamw_init(params)
+            losses = []
+            for _ in range(self.cfg.local_steps):
+                batch = {k: jnp.asarray(v) for k, v in
+                         self.stream.next_batch().items()}
+                params, opt_state, loss = self._step(params, opt_state, batch,
+                                                     global_params)
+                losses.append(float(loss))
+                self.n_samples += int(batch["tokens"].shape[0]) \
+                    if "tokens" in batch \
+                    else int(next(iter(batch.values())).shape[0])
+            params = obs.maybe_block(params)
+            sp.set(loss=float(np.mean(losses)))
         return params, float(np.mean(losses))
 
     # -- wire: serialized uplink/downlink (repro.wire) -------------------------
@@ -115,26 +121,34 @@ class FLClient:
         """
         key = key if key is not None else jax.random.PRNGKey(
             rnd * 100_003 + self.cid)
-        seeded = None
-        if policy.seed_ciphertexts and sk is not None:
-            a_seed = rnd * 1_000_003 + self.cid   # unique per (client, round)
-            upd = aggregator.client_protect_seeded(local_params, sk, key,
-                                                   a_seed, sharded=sharded)
-            seeded = wire_compress.seed_compress(upd.ct, a_seed)
-        else:
-            upd = aggregator.client_protect(local_params, pk, key,
-                                            sharded=sharded)
-        return wire_stream.pack_update_frames(
-            upd, cid=self.cid, n_samples=max(1, self.n_samples), rnd=rnd,
-            seeded=seeded, plain_codec=policy.plain_codec)
+        with obs.span("encrypt", cid=self.cid, round=rnd,
+                      seeded=bool(policy.seed_ciphertexts
+                                  and sk is not None)) as sp:
+            seeded = None
+            if policy.seed_ciphertexts and sk is not None:
+                a_seed = rnd * 1_000_003 + self.cid  # unique per (cid, round)
+                upd = aggregator.client_protect_seeded(local_params, sk, key,
+                                                       a_seed,
+                                                       sharded=sharded)
+                seeded = wire_compress.seed_compress(upd.ct, a_seed)
+            else:
+                upd = aggregator.client_protect(local_params, pk, key,
+                                                sharded=sharded)
+            blob = wire_stream.pack_update_frames(
+                upd, cid=self.cid, n_samples=max(1, self.n_samples), rnd=rnd,
+                seeded=seeded, plain_codec=policy.plain_codec)
+            sp.set(nbytes=len(blob))
+        return blob
 
     def receive_global(self, blob: bytes, ctx, *, rnd: int):
         """Deserialize the broadcast global update, recording downlink
         bytes against this client."""
-        if self.ledger is not None:
-            self.ledger.record_blob(blob, rnd=rnd, cid=self.cid,
-                                    direction=wire_budget.DOWNLINK)
-        upd, _ = wire_format.deserialize(blob, ctx)
+        with obs.span("recv_global", cid=self.cid, round=rnd,
+                      nbytes=len(blob)):
+            if self.ledger is not None:
+                self.ledger.record_blob(blob, rnd=rnd, cid=self.cid,
+                                        direction=wire_budget.DOWNLINK)
+            upd, _ = wire_format.deserialize(blob, ctx)
         return upd
 
     # -- privacy sensitivity (paper §2.4 Step 1) ------------------------------

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.ckpt import CheckpointManager
 from repro.core import packing, secure_agg
 from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
@@ -151,7 +152,17 @@ class FLTask:
     # -- stage 3: encrypted federated rounds ------------------------------------
 
     def run_round(self, rnd: int) -> RoundLog:
-        t0 = time.time()
+        with obs.span("round", round=rnd) as sp:
+            log = self._run_round(rnd, sp)
+            sp.set(loss=log.loss, n_participating=log.n_participating,
+                   n_dropped=log.n_dropped, bytes_up=log.comm_up_bytes,
+                   bytes_down=log.comm_down_bytes, wall_s=log.wall_s)
+        return log
+
+    def _run_round(self, rnd: int, sp) -> RoundLog:
+        # perf_counter: monotonic, immune to wall-clock steps; RoundLog
+        # wall_s is a duration, not a timestamp
+        t0 = time.perf_counter()
         cfg = self.run_cfg
         n = len(self.clients)
         k = cfg.clients_per_round or n
@@ -166,71 +177,81 @@ class FLTask:
             if self.rng.rand() < cfg.dropout_prob:
                 dropped += 1
                 continue                      # client crashed mid-round
-            local_params, loss = client.local_train(self.global_params)
-            simulated_s = self.rng.exponential(1.0)
-            if self.rng.rand() < cfg.straggler_prob:
-                simulated_s += cfg.deadline_s   # guaranteed late
-            if simulated_s > cfg.deadline_s:
-                dropped += 1
-                continue                      # straggler cut at the deadline
-            losses.append(loss)
-            # collision-free per-(round, client) stream: fold_in is injective
-            # per step, unlike the old PRNGKey(rnd * 1000 + ci) arithmetic
-            # which collides once client indices reach the round stride
-            key = jax.random.fold_in(
-                jax.random.fold_in(self._round_key_base, rnd), int(ci))
-            if use_wire:
-                blob = client.protect_and_pack(
-                    self.aggregator, local_params, rnd=rnd,
-                    policy=cfg.wire_policy, pk=self.pk,
-                    sk=None if cfg.threshold_mode else self.sk, key=key)
-                wire_blobs.append(blob)
-                wire_clients.append(client)
-            else:
-                upd = self.aggregator.client_protect(local_params, self.pk,
-                                                     key)
-                received.append(ReceivedUpdate(
-                    cid=int(ci), update=upd,
-                    n_samples=max(1, client.n_samples), round_sent=rnd))
+            with obs.span("client", cid=int(ci)):
+                local_params, loss = client.local_train(self.global_params)
+                simulated_s = self.rng.exponential(1.0)
+                if self.rng.rand() < cfg.straggler_prob:
+                    simulated_s += cfg.deadline_s   # guaranteed late
+                if simulated_s > cfg.deadline_s:
+                    dropped += 1
+                    continue                  # straggler cut at the deadline
+                losses.append(loss)
+                # collision-free per-(round, client) stream: fold_in is
+                # injective per step, unlike the old PRNGKey(rnd * 1000 + ci)
+                # arithmetic which collides once client indices reach the
+                # round stride
+                key = jax.random.fold_in(
+                    jax.random.fold_in(self._round_key_base, rnd), int(ci))
+                if use_wire:
+                    blob = client.protect_and_pack(
+                        self.aggregator, local_params, rnd=rnd,
+                        policy=cfg.wire_policy, pk=self.pk,
+                        sk=None if cfg.threshold_mode else self.sk, key=key)
+                    wire_blobs.append(blob)
+                    wire_clients.append(client)
+                else:
+                    upd = self.aggregator.client_protect(local_params,
+                                                         self.pk, key)
+                    received.append(ReceivedUpdate(
+                        cid=int(ci), update=upd,
+                        n_samples=max(1, client.n_samples), round_sent=rnd))
         if not received and not wire_blobs:
             # total dropout: keep the old global model, log and move on
             return RoundLog(rnd, float("nan"), 0, dropped, 0,
-                            time.time() - t0)
+                            time.perf_counter() - t0)
         if use_wire:
             agg, n_recv = self._wire_round(rnd, wire_blobs, wire_clients)
-            self.global_params = self._recover(agg)
+            with obs.span("recover"):
+                self.global_params = obs.maybe_block(self._recover(agg))
             up = self.ledger.total(wire_budget.UPLINK, rnd)
             down = self.ledger.total(wire_budget.DOWNLINK, rnd)
             log = RoundLog(rnd, float(np.mean(losses)), n_recv, dropped,
-                           up + down, time.time() - t0, comm_up_bytes=up,
-                           comm_down_bytes=down, comm_measured=True)
+                           up + down, time.perf_counter() - t0,
+                           comm_up_bytes=up, comm_down_bytes=down,
+                           comm_measured=True)
         else:
-            agg = self.server.aggregate_sync(received)
-            self.global_params = self._recover(agg)
+            with obs.span("aggregate", n_updates=len(received)):
+                agg = self.server.aggregate_sync(received)
+            with obs.span("recover"):
+                self.global_params = obs.maybe_block(self._recover(agg))
             rep = self.aggregator.overhead_report()
             comm = (rep["bytes_total"]) * len(received)
             log = RoundLog(rnd, float(np.mean(losses)), len(received),
-                           dropped, comm, time.time() - t0)
+                           dropped, comm, time.perf_counter() - t0)
         self.logs.append(log)
         if self._ckpt is not None and (rnd + 1) % cfg.ckpt_every == 0:
-            self._ckpt.save(rnd, self.global_params,
-                            extra={"loss": log.loss})
+            with obs.span("checkpoint", round=rnd):
+                self._ckpt.save(rnd, self.global_params,
+                                extra={"loss": log.loss})
         return log
 
     def _wire_round(self, rnd, wire_blobs, wire_clients):
         """Serialized transport: stream blobs through the O(1) server
         ingest, apply the downlink policy, broadcast, deserialize."""
         policy = self.run_cfg.wire_policy
-        agg = self.server.aggregate_wire(wire_blobs)
-        keep = policy.downlink_keep_limbs
-        if keep and keep < agg.ct.n_limbs and not self.run_cfg.threshold_mode:
-            agg = secure_agg.ProtectedUpdate(
-                ct=wire_compress.limb_drop(self.ctx, agg.ct, keep),
-                plain=agg.plain)
-        blob_down = wire_format.serialize_update(agg)
-        out = None
-        for client in wire_clients:
-            out = client.receive_global(blob_down, self.ctx, rnd=rnd)
+        with obs.span("aggregate", n_updates=len(wire_blobs)):
+            agg = self.server.aggregate_wire(wire_blobs)
+        with obs.span("broadcast", n_clients=len(wire_clients)):
+            keep = policy.downlink_keep_limbs
+            if (keep and keep < agg.ct.n_limbs
+                    and not self.run_cfg.threshold_mode):
+                agg = secure_agg.ProtectedUpdate(
+                    ct=wire_compress.limb_drop(self.ctx, agg.ct, keep),
+                    plain=agg.plain)
+            blob_down = wire_format.serialize_update(agg)
+            out = None
+            for client in wire_clients:
+                out = client.receive_global(blob_down, self.ctx, rnd=rnd)
         return out, len(wire_clients)
 
     def _recover(self, agg):

@@ -40,6 +40,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.kernels import he_agg as _he_agg
 from repro.kernels import ntt as _ntt
 from repro.kernels import pointwise as _pointwise
@@ -198,8 +199,24 @@ _IMPL = {
 }
 
 
-def _impl(op):
-    return _IMPL[op][_ASSIGN[op]]
+def _dispatch(op, tables, *args):
+    """Registry dispatch point for every op invocation.
+
+    With REPRO_OBS unset this is exactly the raw implementation call —
+    same jitted graph keys, same dispatch count (tests/test_obs.py pins
+    it).  With REPRO_OBS=1 the call routes through obs.timed_kernel:
+    eager invocations get blocked per-op wall timing under a
+    jax.profiler.TraceAnnotation; invocations inside a jit/shard_map
+    trace get a jax.named_scope so device profiles carry op names, plus a
+    retrace counter — all recorded per backend so flat/pallas/pallas4
+    runs are distinguishable (DESIGN.md §11).
+    """
+    backend = _ASSIGN[op]
+    impl = _IMPL[op][backend]
+    if not _obs.kernel_hooks_enabled():
+        return impl(tables, *args)
+    return _obs.timed_kernel(op, backend, backend_token(), impl, tables,
+                             *args)
 
 
 def apply(op, tables, *args):
@@ -218,7 +235,7 @@ def apply(op, tables, *args):
     Returns:
         The op's result with the same layout as the public wrapper.
     """
-    return _IMPL[op][_ASSIGN[op]](tables, *args)
+    return _dispatch(op, tables, *args)
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +253,7 @@ def ntt_fwd(x, ctx):
     Returns:
         u32[..., L, N] in bit-reversed NTT domain.
     """
-    return _impl("ntt_fwd")(_tables(ctx, x.shape[-2]), x)
+    return _dispatch("ntt_fwd", _tables(ctx, x.shape[-2]), x)
 
 
 def ntt_inv(x, ctx):
@@ -249,7 +266,7 @@ def ntt_inv(x, ctx):
     Returns:
         u32[..., L, N] coefficient-domain residues, natural order.
     """
-    return _impl("ntt_inv")(_tables(ctx, x.shape[-2]), x)
+    return _dispatch("ntt_inv", _tables(ctx, x.shape[-2]), x)
 
 
 def mul_add(x, y_mont, z, ctx):
@@ -264,7 +281,7 @@ def mul_add(x, y_mont, z, ctx):
     Returns:
         u32[..., L, N] normal-form result, one fused call over all limbs.
     """
-    return _impl("mul_add")(_tables(ctx, x.shape[-2]), x, y_mont, z)
+    return _dispatch("mul_add", _tables(ctx, x.shape[-2]), x, y_mont, z)
 
 
 def weighted_sum(cts, w_mont, ctx):
@@ -280,7 +297,7 @@ def weighted_sum(cts, w_mont, ctx):
         VMEM on the pallas backend.
     """
     l = cts.shape[-2]
-    return _impl("weighted_sum")(_tables(ctx, l), cts, w_mont[:, :l])
+    return _dispatch("weighted_sum", _tables(ctx, l), cts, w_mont[:, :l])
 
 
 def weighted_accum(acc, ct, w_mont, ctx):
@@ -298,7 +315,7 @@ def weighted_accum(acc, ct, w_mont, ctx):
         bit-identical to weighted_sum applied in arrival order.
     """
     l = ct.shape[-2]
-    return _impl("weighted_accum")(_tables(ctx, l), acc, ct, w_mont[:l])
+    return _dispatch("weighted_accum", _tables(ctx, l), acc, ct, w_mont[:l])
 
 
 def weighted_accum_chunks(acc, cts, w_mont, ctx):
@@ -317,8 +334,8 @@ def weighted_accum_chunks(acc, cts, w_mont, ctx):
         weighted_accum row by row — the wire/stream flush invariant.
     """
     l = cts.shape[-2]
-    return _impl("weighted_accum_chunks")(_tables(ctx, l), acc, cts,
-                                          w_mont[:, :l])
+    return _dispatch("weighted_accum_chunks", _tables(ctx, l), acc, cts,
+                     w_mont[:, :l])
 
 
 # limb-wise helpers with no dedicated kernel (cheap, always ref) ------------

@@ -44,20 +44,22 @@ def main():
                                                      cache_len=cache_len))
         decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
-        t0 = time.time()
+        # perf_counter: these are durations; wall-clock would jump on
+        # clock steps
+        t0 = time.perf_counter()
         logits, cache = prefill(params, {"tokens": prompts})
         logits.block_until_ready()
-        t_prefill = time.time() - t0
+        t_prefill = time.perf_counter() - t0
 
         out_tokens = []
         tok = jnp.argmax(logits, axis=-1)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(args.gen):
             out_tokens.append(np.asarray(tok))
             logits, cache = decode(params, cache, {"tokens": tok})
             tok = jnp.argmax(logits, axis=-1)
         jax.block_until_ready(logits)
-        t_decode = time.time() - t0
+        t_decode = time.perf_counter() - t0
         gen = np.stack(out_tokens, axis=1)
         print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.3f}s; "
               f"decode {args.gen} steps in {t_decode:.3f}s "

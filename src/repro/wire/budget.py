@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 
+from repro import obs
+
 UPLINK = "up"
 DOWNLINK = "down"
 
@@ -59,6 +61,8 @@ class BandwidthLedger:
         """
         self.records.append(WireRecord(int(rnd), int(cid), direction, kind,
                                        int(nbytes)))
+        obs.counter("wire_bytes_total", direction=direction,
+                    kind=kind).inc(int(nbytes))
 
     # -- queries ------------------------------------------------------------
 

@@ -34,12 +34,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import struct
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.ckks import encoding
 from repro.core.ckks.cipher import Ciphertext
 from repro.core.ckks.params import CkksContext
@@ -165,7 +167,14 @@ class StreamIngest:
             had ready chunks; the one-launch-per-flush invariant).
         peak_chunk_buffers: max decoded-but-unfolded chunks ever resident.
         clients_ingested / bytes_ingested: ingest counters.
+
+    All four are views over `repro.obs` registry instruments labeled with
+    this instance's ingest id (``wire_ingest_*``), so process-wide
+    telemetry and the legacy per-instance attributes read the same value
+    by construction (tests/test_obs.py asserts bit-equality).
     """
+
+    _ids = itertools.count()
 
     def __init__(self, ctx: CkksContext, sharded=None):
         """Args:
@@ -180,16 +189,39 @@ class StreamIngest:
         self._acc_plain = None         # f32[n_plain]
         self._in_scale = None
         self._pending = []             # ready queue: (chunk_idx, data, w)
-        self.clients_ingested = 0
-        self.bytes_ingested = 0
-        self.accum_launches = 0
+        # registry-backed instrumentation, one label set per ingest
+        # instance (obs.REGISTRY.total("wire_ingest_...") aggregates
+        # across instances for process-level telemetry)
+        self.ingest_id = str(next(self._ids))
+        lab = {"ingest": self.ingest_id}
+        self._m_launches = obs.counter("wire_ingest_accum_launches", **lab)
+        self._m_clients = obs.counter("wire_ingest_clients", **lab)
+        self._m_bytes = obs.counter("wire_ingest_bytes", **lab)
         # O(1)-memory instrumentation: decoded ciphertext chunk buffers
         # resident beyond the accumulator.  Incremented where a chunk is
         # decoded, decremented once it has been folded — a regression that
         # buffers several updates before folding shows up as peak >
         # n_chunks of one update.
-        self._resident_chunks = 0
-        self.peak_chunk_buffers = 0
+        self._m_resident = obs.gauge("wire_ingest_resident_chunks", **lab)
+        self._m_peak = obs.gauge("wire_ingest_peak_chunk_buffers", **lab)
+
+    # -- legacy counter views (registry-backed) ------------------------------
+
+    @property
+    def accum_launches(self) -> int:
+        return int(self._m_launches.value)
+
+    @property
+    def clients_ingested(self) -> int:
+        return int(self._m_clients.value)
+
+    @property
+    def bytes_ingested(self) -> int:
+        return int(self._m_bytes.value)
+
+    @property
+    def peak_chunk_buffers(self) -> int:
+        return int(self._m_peak.value)
 
     # -- internals ----------------------------------------------------------
 
@@ -198,9 +230,8 @@ class StreamIngest:
                                                            self.ctx))
 
     def _note_decoded(self, n: int) -> None:
-        self._resident_chunks += n
-        self.peak_chunk_buffers = max(self.peak_chunk_buffers,
-                                      self._resident_chunks)
+        self._m_resident.add(n)
+        self._m_peak.set_max(self._m_resident.value)
 
     def _buffer_chunk(self, chunk_idx: int, data, scale: float,
                       w_mont) -> None:
@@ -246,12 +277,17 @@ class StreamIngest:
             ws = jnp.stack([w for _, _, w in batch])           # [K, L]
             zero = jnp.zeros((2, self._n_limbs, self._n), dtype=jnp.uint32)
             accs = jnp.stack([self._acc_ct.get(i, zero) for i in idxs])
-            if self.sharded is not None:
-                out = self.sharded.weighted_accum_chunks(accs, cts, ws)
-            else:
-                out = _accum_chunks_graph(self.ctx, ops.backend_token(),
-                                          accs, cts, ws)
-            self.accum_launches += 1
+            token = ops.backend_token()
+            with obs.kernel_launch("weighted_accum_chunks", token,
+                                   rows=len(batch),
+                                   sharded=self.sharded is not None) as kl:
+                if self.sharded is not None:
+                    out = kl.done(
+                        self.sharded.weighted_accum_chunks(accs, cts, ws))
+                else:
+                    out = kl.done(_accum_chunks_graph(self.ctx, token,
+                                                      accs, cts, ws))
+            self._m_launches.inc()
             for j, i in enumerate(idxs):
                 self._acc_ct[i] = out[j]
             self._note_decoded(-len(batch))
@@ -288,6 +324,11 @@ class StreamIngest:
         Returns:
             The update's UpdateMeta header.
         """
+        with obs.span("wire.ingest", nbytes=len(blob)) as sp:
+            meta = self._ingest_spanned(blob, weight, sp)
+        return meta
+
+    def _ingest_spanned(self, blob: bytes, weight: float, sp) -> UpdateMeta:
         meta = None
         w_mont = self._w_mont(weight)
         saw_end = False
@@ -369,21 +410,23 @@ class StreamIngest:
         for plain in plain_segments:
             self._fold_plain_decoded(plain, weight)
         self.flush()
-        self.clients_ingested += 1
-        self.bytes_ingested += len(blob)
+        self._m_clients.inc()
+        self._m_bytes.inc(len(blob))
+        sp.set(cid=meta.cid, round=meta.round, n_chunks=meta.n_chunks)
         return meta
 
     def ingest_update(self, upd: ProtectedUpdate, weight: float) -> None:
         """In-memory streaming (no serialization): the caller already holds
         the whole decoded update; its chunks are buffered and folded in one
         flush — still O(1) in the client count."""
-        w_mont = self._w_mont(weight)
-        data = np.asarray(upd.ct.data)
-        for b in range(data.shape[0]):
-            self._buffer_chunk(b, data[b:b + 1], upd.ct.scale, w_mont)
-        self.flush()
-        self._fold_plain(np.asarray(upd.plain), "f32", 1.0, weight)
-        self.clients_ingested += 1
+        with obs.span("wire.ingest", in_memory=True):
+            w_mont = self._w_mont(weight)
+            data = np.asarray(upd.ct.data)
+            for b in range(data.shape[0]):
+                self._buffer_chunk(b, data[b:b + 1], upd.ct.scale, w_mont)
+            self.flush()
+            self._fold_plain(np.asarray(upd.plain), "f32", 1.0, weight)
+            self._m_clients.inc()
 
     def finalize(self) -> ProtectedUpdate:
         """-> aggregated ProtectedUpdate (ct scale = in_scale * delta).

@@ -16,7 +16,10 @@ Checks (default mode — exit nonzero on any failure):
      "quickstart" heading AND after the "sharded uplink" heading) execute
      successfully, and the checked-in gold KATs match a fresh recompute
      (tools/gen_gold.py --check) — both skipped with --no-exec for fast
-     local runs.
+     local runs;
+  6. the telemetry layer stays documented: README env-table rows for
+     REPRO_OBS / REPRO_OBS_TRACE plus a tools/round_report.py pointer,
+     and the DESIGN.md §11 obs section.
 
 `--write` regenerates the README tables in place between the
 BENCH_TABLES_START/END markers instead of failing on drift.
@@ -232,6 +235,28 @@ def check_env_table() -> list[str]:
     return []
 
 
+def check_obs_docs() -> list[str]:
+    """The telemetry layer must stay documented: README needs env-table
+    rows for REPRO_OBS / REPRO_OBS_TRACE and a pointer at
+    tools/round_report.py; DESIGN.md needs the §11 obs section."""
+    errors = []
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    for knob in ("REPRO_OBS", "REPRO_OBS_TRACE"):
+        if not any(ln.startswith(f"| `{knob}") for ln in
+                   readme.splitlines()):
+            errors.append(f"README.md: missing the `{knob}` row in the "
+                          "'Environment variables & flags' table")
+    if "tools/round_report.py" not in readme:
+        errors.append("README.md: telemetry docs no longer point at "
+                      "tools/round_report.py")
+    design = open(os.path.join(ROOT, "DESIGN.md")).read()
+    if not re.search(r"^## §11 ", design, re.MULTILINE):
+        errors.append("DESIGN.md: missing the '## §11' telemetry section "
+                      "(repro/obs architecture + span taxonomy + overhead "
+                      "policy)")
+    return errors
+
+
 def check_or_write_tables(write: bool) -> list[str]:
     path = os.path.join(ROOT, "README.md")
     text = open(path).read()
@@ -315,6 +340,7 @@ def main() -> int:
     errors += check_or_write_tables(write=args.write)
     errors += check_wire_spec()
     errors += check_env_table()
+    errors += check_obs_docs()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
         errors += check_gold_kats()

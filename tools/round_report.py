@@ -1,0 +1,230 @@
+"""Render a per-round phase/bytes/launches table from an obs trace file.
+
+    PYTHONPATH=src python tools/round_report.py obs_trace.jsonl
+    PYTHONPATH=src python tools/round_report.py trace.jsonl --json
+    PYTHONPATH=src python tools/round_report.py trace.jsonl --min-coverage 0.9
+
+Input is the Chrome-trace-event JSONL written by repro.obs (REPRO_OBS=1):
+a leading "[" line plus one JSON event per line with a trailing comma —
+the same file Perfetto loads.  The report reconstructs the span tree by
+wall-time containment per (pid, tid) — the model the trace format itself
+uses — then prints:
+
+  * one row per "round" span: wall ms, per-phase breakdown
+    (client / aggregate / broadcast / recover / checkpoint / other),
+    measured bytes up/down, accumulate launches, and COVERAGE — the
+    fraction of round wall time inside the round's direct child spans.
+    `--min-coverage X` exits 1 if any round falls below X (CI uses 0.9:
+    the tree must explain >=90% of where round time went).
+  * one row per (op, backend token) over cat="kernel" events: launch
+    count, total/mean ms.  Only TOP-LEVEL kernel events count — a
+    kernel_launch wrapping a sharded dispatch that itself records a
+    launch span would otherwise be double-counted.
+
+Exit status: 0 on success, 1 on unparseable/empty trace or a coverage
+violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+#: round phases reported as dedicated columns, in display order ("client"
+#: wraps train+encrypt in the orchestrator; quickstart parents "encrypt"
+#: directly under the round)
+PHASES = ("client", "encrypt", "aggregate", "broadcast", "recover",
+          "checkpoint")
+
+
+def parse_trace(path: str) -> list[dict]:
+    """Trace file -> list of event dicts (tolerates the Chrome-array
+    framing: leading '[', trailing commas, optional closing ']')."""
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip().rstrip(",")
+            if line in ("", "[", "]"):
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                continue        # torn tail line from a crashed run
+            if isinstance(ev, dict):
+                events.append(ev)
+    return events
+
+
+def build_tree(events: list[dict]) -> list[dict]:
+    """Complete ('X') events -> forest by wall-time containment per
+    (pid, tid).  Each node gains 'children' and 'parent' keys; returns
+    the roots in start order."""
+    roots = []
+    by_track = defaultdict(list)
+    for ev in events:
+        if ev.get("ph") == "X":
+            by_track[(ev.get("pid"), ev.get("tid"))].append(ev)
+    for track in by_track.values():
+        # sort by start, longest first on ties so parents precede children
+        track.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []
+        for ev in track:
+            ev["children"] = []
+            ev["parent"] = None
+            end = ev["ts"] + ev["dur"]
+            while stack and ev["ts"] + 1e-9 >= stack[-1]["_end"]:
+                stack.pop()
+            if stack and end <= stack[-1]["_end"] + 1e-3:
+                ev["parent"] = stack[-1]
+                stack[-1]["children"].append(ev)
+            else:
+                roots.append(ev)
+            ev["_end"] = end
+            stack.append(ev)
+    roots.sort(key=lambda e: e["ts"])
+    return roots
+
+
+def _walk(node: dict):
+    yield node
+    for c in node["children"]:
+        yield from _walk(c)
+
+
+def round_rows(roots: list[dict]) -> list[dict]:
+    """One report row per 'round' span found anywhere in the forest."""
+    rows = []
+    for root in roots:
+        for node in _walk(root):
+            if node.get("name") != "round":
+                continue
+            args = node.get("args", {})
+            dur_ms = node["dur"] / 1e3
+            phase_ms = defaultdict(float)
+            child_ms = 0.0
+            for c in node["children"]:
+                child_ms += c["dur"]
+                key = c["name"] if c["name"] in PHASES else "other"
+                phase_ms[key] += c["dur"] / 1e3
+            launches = args.get("launches")
+            if launches is None:
+                launches = sum(1 for n in _walk(node)
+                               if n.get("cat") == "kernel"
+                               and "accum" in n.get("name", ""))
+            rows.append({
+                "round": args.get("round", -1),
+                "wall_ms": dur_ms,
+                **{p: phase_ms.get(p, 0.0) for p in PHASES},
+                "other_ms": phase_ms.get("other", 0.0),
+                "bytes_up": args.get("bytes_up", 0),
+                "bytes_down": args.get("bytes_down", 0),
+                "launches": launches,
+                "coverage": min(1.0, child_ms / node["dur"])
+                if node["dur"] > 0 else 0.0,
+            })
+    return rows
+
+
+def kernel_rows(roots: list[dict]) -> list[dict]:
+    """Per-(op, token) launch stats over TOP-LEVEL kernel events (a
+    kernel event nested inside another kernel event is the same launch
+    measured twice — e.g. the stream flush wrapping a sharded dispatch)."""
+    acc = defaultdict(lambda: {"count": 0, "total_ms": 0.0})
+    for root in roots:
+        for node in _walk(root):
+            if node.get("cat") != "kernel":
+                continue
+            p = node["parent"]
+            nested = False
+            while p is not None:
+                if p.get("cat") == "kernel":
+                    nested = True
+                    break
+                p = p["parent"]
+            if nested:
+                continue
+            args = node.get("args", {})
+            key = (args.get("op", node["name"]), args.get("token", "?"))
+            acc[key]["count"] += 1
+            acc[key]["total_ms"] += node["dur"] / 1e3
+    rows = []
+    for (op, token), a in sorted(acc.items()):
+        rows.append({"op": op, "token": token, "count": a["count"],
+                     "total_ms": a["total_ms"],
+                     "mean_ms": a["total_ms"] / max(1, a["count"])})
+    return rows
+
+
+def render(rounds: list[dict], kernels: list[dict]) -> str:
+    out = []
+    out.append("per-round phases (ms):")
+    hdr = (f"{'round':>5} {'wall':>9} "
+           + " ".join(f"{p[:9]:>9}" for p in PHASES)
+           + f" {'other':>9} {'up_B':>10} {'down_B':>10} "
+             f"{'launch':>6} {'cover':>6}")
+    out.append(hdr)
+    for r in rounds:
+        out.append(
+            f"{r['round']:>5} {r['wall_ms']:>9.2f} "
+            + " ".join(f"{r[p]:>9.2f}" for p in PHASES)
+            + f" {r['other_ms']:>9.2f} {r['bytes_up']:>10,} "
+              f"{r['bytes_down']:>10,} {r['launches']:>6} "
+              f"{r['coverage']:>6.1%}")
+    out.append("")
+    out.append("kernel launches by (op, backend token):")
+    out.append(f"{'op':<34} {'count':>6} {'total_ms':>9} {'mean_ms':>8} "
+               f"token")
+    for k in kernels:
+        out.append(f"{k['op']:<34} {k['count']:>6} {k['total_ms']:>9.2f} "
+                   f"{k['mean_ms']:>8.3f} {k['token']}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="per-round phase/bytes/launches report from an obs "
+                    "trace (see repro/obs)")
+    ap.add_argument("trace", help="Chrome-trace-event JSONL from REPRO_OBS=1")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of a table")
+    ap.add_argument("--min-coverage", type=float, default=None,
+                    help="exit 1 if any round's child-span coverage is "
+                         "below this fraction")
+    args = ap.parse_args(argv)
+
+    try:
+        events = parse_trace(args.trace)
+    except OSError as e:
+        print(f"round_report: cannot read {args.trace}: {e}",
+              file=sys.stderr)
+        return 1
+    if not events:
+        print(f"round_report: no events in {args.trace}", file=sys.stderr)
+        return 1
+    roots = build_tree(events)
+    rounds = round_rows(roots)
+    kernels = kernel_rows(roots)
+
+    if args.json:
+        print(json.dumps({"rounds": rounds, "kernels": kernels}, indent=2))
+    else:
+        print(render(rounds, kernels))
+
+    if args.min_coverage is not None:
+        if not rounds:
+            print("round_report: --min-coverage given but no 'round' "
+                  "spans in trace", file=sys.stderr)
+            return 1
+        bad = [r for r in rounds if r["coverage"] < args.min_coverage]
+        if bad:
+            print(f"round_report: {len(bad)} round(s) below coverage "
+                  f"{args.min_coverage:.0%}: "
+                  + ", ".join(f"round {r['round']}={r['coverage']:.1%}"
+                              for r in bad), file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
