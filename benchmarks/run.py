@@ -469,6 +469,70 @@ def bench_uplink_sharded():
           "single-device (BENCH_uplink_sharded.json written)", rows)
 
 
+def bench_tune(smoke: bool = False):
+    """Autotuner sweep (kernels/tune.py): measure every launch-config
+    candidate per (op, N, L, B) point, record the winners.
+
+    Full mode writes BENCH_tune.json (repo root) — the default-vs-tuned
+    table the README renders — and saves the tuning cache to
+    REPRO_HE_TUNE_CACHE (falling back to tuning/<platform>.json) for
+    `REPRO_HE_BACKEND=auto` runs.  `--smoke` sweeps one tiny point per op
+    with reps=1 and touches no repo artifacts (the cache still goes to
+    REPRO_HE_TUNE_CACHE if set) — the CI docs job uses it to exercise the
+    sweep -> save -> load path end to end.
+    """
+    import jax
+    from repro import obs
+    from repro.core.ckks import params as ckks_params
+    from repro.kernels import ops, tune
+
+    if smoke:
+        points = [(64, 2, 4)]
+        op_names = ("ntt_fwd", "mul_add")
+        reps = 1
+    else:
+        points = [(2048, 2, 8), (8192, 2, 8)]
+        op_names = ops.OPS
+        reps = 2
+
+    tune.clear_cache()
+    rows = []
+    for n_poly, n_limbs, b in points:
+        ctx = ckks_params.make_context(
+            n_poly=n_poly, n_limbs=n_limbs,
+            delta_bits=20 if n_poly <= 256 else 26)
+        for op in op_names:
+            res = tune.sweep_op(op, ctx, b=b, reps=reps)
+            rows.append(res.to_row())
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    cache_out = tune.cache_path()
+    if cache_out is None and not smoke:
+        cache_out = os.path.join(root, "tuning",
+                                 f"{jax.default_backend()}.json")
+        os.makedirs(os.path.dirname(cache_out), exist_ok=True)
+    if cache_out:
+        tune.save_cache(cache_out)
+        # prove the round trip: what we just wrote must resolve identically
+        n_loaded = tune.load_cache(cache_out)
+        assert n_loaded == len(rows), (n_loaded, len(rows))
+
+    if not smoke:
+        with open(os.path.join(root, "BENCH_tune.json"), "w") as f:
+            json.dump({"provenance": obs.provenance(),
+                       "interpret": jax.default_backend() == "cpu",
+                       "cache": cache_out, "rows": rows}, f, indent=2)
+            f.write("\n")
+
+    regressions = [r for r in rows if r["tuned_ms"] > r["default_ms"]]
+    assert not regressions, regressions  # winner includes the default
+    _rows("Autotuner sweep: default vs tuned per (op, N, L, B) "
+          + ("[smoke — no artifacts]" if smoke
+             else "(BENCH_tune.json + tuning cache written)"),
+          rows, keys=["op", "n", "l", "b", "backend", "default_ms",
+                      "tuned_ms", "speedup", "candidates", "pruned"])
+
+
 def bench_roofline():
     """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
     art_dir = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -506,6 +570,7 @@ ALL = {
     "wire": bench_wire,
     "agg-sharded": bench_agg_sharded,
     "uplink-sharded": bench_uplink_sharded,
+    "tune": bench_tune,
     "roofline": bench_roofline,
 }
 
@@ -521,10 +586,14 @@ def main() -> None:
             for name, fn in ALL.items())
         + "\n\nenvironment (canonical list: README.md 'Environment "
           "variables & flags'):\n"
-          "  REPRO_HE_BACKEND=ref|pallas|pallas4\n"
+          "  REPRO_HE_BACKEND=ref|pallas|pallas4|auto\n"
           "      backend for every HE op (default ref; pallas runs the\n"
           "      kernels in interpret mode on CPU; pallas4 swaps the NTT\n"
-          "      family for the 4-step transpose kernels, DESIGN.md §10)\n"
+          "      family for the 4-step transpose kernels, DESIGN.md §10;\n"
+          "      auto resolves per op/shape from the tuning cache,\n"
+          "      DESIGN.md §12)\n"
+          "  REPRO_HE_TUNE_CACHE=path\n"
+          "      JSON tuning cache for the 'tune' mode and auto backend\n"
           "  XLA_FLAGS=--xla_force_host_platform_device_count=<n>\n"
           "      simulate <n> host devices; must be set before the first\n"
           "      jax import ('agg-sharded' / 'uplink-sharded' manage this\n"
@@ -534,6 +603,9 @@ def main() -> None:
           "      for staged rollouts)")
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help="benchmark modes to run (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tune mode only: one tiny sweep point, reps=1, no "
+                         "repo artifacts (CI exercises the sweep path)")
     args = ap.parse_args()
     names = args.modes or list(ALL)
     unknown = [n for n in names if n not in ALL]
@@ -541,7 +613,10 @@ def main() -> None:
         ap.error(f"unknown mode(s) {unknown}; choose from {list(ALL)}")
     for n in names:
         t0 = time.time()
-        ALL[n]()
+        if n == "tune":
+            bench_tune(smoke=args.smoke)
+        else:
+            ALL[n]()
         print(f"[{n} done in {time.time()-t0:.1f}s]")
 
 

@@ -97,15 +97,34 @@ def bit_reverse(x: int, bits: int) -> int:
 
 
 def ntt4_split(n_poly: int) -> tuple[int, int]:
-    """Factor N = n1 * n2 for the 4-step transpose NTT (DESIGN.md §10).
+    """Default factorization N = n1 * n2 for the 4-step transpose NTT
+    (DESIGN.md §10).
 
     n1 <= n2, both powers of two, as close to sqrt(N) as possible — for
     N=8192 this is 64 x 128, so the second sub-transform's vectorized
-    spectator axis spans a full 128-lane TPU register.
+    spectator axis spans a full 128-lane TPU register.  This is the
+    heuristic the autotuner (kernels/tune.py, DESIGN.md §12) falls back to;
+    `ntt4_split_candidates` enumerates the splits it sweeps instead.
     """
     logn = n_poly.bit_length() - 1
     k = logn // 2
     return 1 << k, n_poly >> k
+
+
+def ntt4_split_candidates(n_poly: int) -> tuple[tuple[int, int], ...]:
+    """Power-of-two splits around sqrt(N) the autotuner sweeps — the sqrt
+    heuristic plus its two neighbours (32x256 / 64x128 / 128x64 at N=8192).
+    Every candidate keeps both sub-transform lengths >= 2 so the LN
+    butterfly recurrences stay non-degenerate."""
+    logn = n_poly.bit_length() - 1
+    mid = logn // 2
+    out = []
+    for k in (mid - 1, mid, mid + 1):
+        if 1 <= k <= logn - 1:
+            pair = (1 << k, n_poly >> k)
+            if pair not in out:
+                out.append(pair)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -165,16 +184,53 @@ def make_limb_context(q: int, n_poly: int) -> LimbContext:
         psi_inv_rev[i] = mont(pow(psi_inv, j, q))
     n_inv = pow(n_poly, -1, q)
 
-    # 4-step transpose NTT tables (DESIGN.md §10).  With N = n1*n2 and
-    # x[j] = x[j2 + n2*j1], the full negacyclic NTT factors into a length-n1
-    # negacyclic LN NTT over j1 with mu = psi^n2 (mu^2 = omega^n2, pre-twist
-    # mu^j1 folded in), an elementwise correction psi^(j2*(2*k1+1-n1))
-    # (which folds the psi^j2 pre-twist, the omega^(j2*k1) cross twiddle,
-    # and the chi^(-j2) un-twist of sub-transform 2), a transpose, and a
-    # length-n2 negacyclic LN NTT over j2 with chi = psi^n1.  All sub-tables
-    # are LN bit-reversed Montgomery, like psi_rev above.
+    # 4-step transpose NTT tables (DESIGN.md §10) at the default sqrt split;
+    # kernels/tune.py builds variant-split tables through ntt4_limb_tables.
     n1, n2 = ntt4_split(n_poly)
+    psi1, psi1_inv, psi2, psi2_inv, corr, corr_inv = \
+        _ntt4_limb_tables(q, n_poly, n1, n2)
+
+    return LimbContext(
+        q=q,
+        qinv_neg=qinv_neg,
+        r2=r2,
+        one_mont=r % q,
+        psi_rev_mont=psi_rev,
+        psi_inv_rev_mont=psi_inv_rev,
+        n_inv_mont=np.asarray(mont(n_inv), dtype=np.uint32),
+        ntt4_psi1_mont=psi1,
+        ntt4_psi1_inv_mont=psi1_inv,
+        ntt4_psi2_mont=psi2,
+        ntt4_psi2_inv_mont=psi2_inv,
+        ntt4_corr_mont=corr,
+        ntt4_corr_inv_mont=corr_inv,
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def _ntt4_limb_tables(q: int, n_poly: int, n1: int, n2: int) -> tuple:
+    """4-step NTT tables for one limb at an ARBITRARY split N = n1 * n2.
+
+    With x[j] = x[j2 + n2*j1], the full negacyclic NTT factors into a
+    length-n1 negacyclic LN NTT over j1 with mu = psi^n2 (mu^2 = omega^n2,
+    pre-twist mu^j1 folded in), an elementwise correction
+    psi^(j2*(2*k1+1-n1)) (which folds the psi^j2 pre-twist, the
+    omega^(j2*k1) cross twiddle, and the chi^(-j2) un-twist of
+    sub-transform 2), a transpose, and a length-n2 negacyclic LN NTT over
+    j2 with chi = psi^n1.  All sub-tables are LN bit-reversed Montgomery,
+    like psi_rev_mont.  The derivation never assumes n1 <= n2, so the
+    autotuner's "wide" splits (e.g. 128x64 at N=8192) reuse this verbatim.
+
+    Returns (psi1, psi1_inv, psi2, psi2_inv, corr_flat, corr_inv_flat).
+    """
+    assert n1 * n2 == n_poly and n1 >= 2 and n2 >= 2, (n1, n2, n_poly)
+    r = 1 << 32
+    psi = root_of_unity(q, 2 * n_poly)
     k_bits, r_bits = n1.bit_length() - 1, n2.bit_length() - 1
+
+    def mont(x: int) -> int:
+        return x * r % q
+
     mu, chi = pow(psi, n2, q), pow(psi, n1, q)
     mu_inv, chi_inv = pow(mu, -1, q), pow(chi, -1, q)
     psi1 = np.zeros(n1, dtype=np.uint32)
@@ -201,22 +257,8 @@ def make_limb_context(q: int, n_poly: int) -> LimbContext:
             corr_inv[row, j2] = mont(ci)
             c = c * w % q
             ci = ci * w_inv % q
-
-    return LimbContext(
-        q=q,
-        qinv_neg=qinv_neg,
-        r2=r2,
-        one_mont=r % q,
-        psi_rev_mont=psi_rev,
-        psi_inv_rev_mont=psi_inv_rev,
-        n_inv_mont=np.asarray(mont(n_inv), dtype=np.uint32),
-        ntt4_psi1_mont=psi1,
-        ntt4_psi1_inv_mont=psi1_inv,
-        ntt4_psi2_mont=psi2,
-        ntt4_psi2_inv_mont=psi2_inv,
-        ntt4_corr_mont=corr.reshape(-1),
-        ntt4_corr_inv_mont=corr_inv.reshape(-1),
-    )
+    return (psi1, psi1_inv, psi2, psi2_inv, corr.reshape(-1),
+            corr_inv.reshape(-1))
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +338,39 @@ def _stack_limb_tables(limbs: "tuple[LimbContext, ...]") -> LimbTables:
         ntt4_corr_inv_mont=np.stack([lc.ntt4_corr_inv_mont for lc in limbs],
                                     axis=0),
     )
+
+
+@functools.lru_cache(maxsize=64)
+def ntt4_variant_tables(primes: tuple, n_poly: int, n1: int,
+                        n2: int) -> dict:
+    """Stacked u32[L, .] 4-step tables for a NON-default split n1 x n2.
+
+    The autotuner's split sweep (kernels/tune.py) needs the six ntt4_*
+    tables at every candidate factorization; the per-limb math is shared
+    with `make_limb_context` via `_ntt4_limb_tables`.  Returns a dict of
+    LimbTables field name -> stacked array, ready for
+    `retable_ntt4` / dataclasses.replace.
+    """
+    per_limb = [_ntt4_limb_tables(int(q), n_poly, n1, n2) for q in primes]
+    names = ("ntt4_psi1_mont", "ntt4_psi1_inv_mont", "ntt4_psi2_mont",
+             "ntt4_psi2_inv_mont", "ntt4_corr_mont", "ntt4_corr_inv_mont")
+    return {name: np.stack([t[i] for t in per_limb], axis=0)
+            for i, name in enumerate(names)}
+
+
+def retable_ntt4(tables: LimbTables, n1: int, n2: int) -> LimbTables:
+    """`tables` with its six ntt4_* fields swapped for the n1 x n2 split.
+
+    Host-side only: the limb primes are read back off the numpy `qs` row
+    (exact — they are the primes themselves), so this cannot be used on
+    traced/sharded table slices; the registry falls back to the default
+    split there (kernels/ops.py)."""
+    n_poly = int(tables.psi_rev_mont.shape[-1])
+    if (n1, n2) == ntt4_split(n_poly):
+        return tables
+    primes = tuple(int(q) for q in np.asarray(tables.qs))
+    return dataclasses.replace(
+        tables, **ntt4_variant_tables(primes, n_poly, n1, n2))
 
 
 # ---------------------------------------------------------------------------

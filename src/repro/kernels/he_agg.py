@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
+from repro.kernels import tune as _tune
 
 
 def _agg_body(cts_ref, w_ref, q_ref, qinv_ref, o_ref, *, n_clients: int):
@@ -67,11 +68,16 @@ def _build(n_clients: int, l: int, n: int, block_b: int, interpret: bool):
     return call
 
 
-def he_weighted_sum_fused(cts, w_mont, qs, qinv_negs, *, block_b: int = 4,
-                          interpret: bool = True):
+def he_weighted_sum_fused(cts, w_mont, qs, qinv_negs, *,
+                          block_b: int | None = None, interpret: bool = True):
     """sum_i w_i (*) ct_i mod q_l, all limbs in one pallas_call.
 
-    cts: u32[C, ..., L, N]; w_mont: u32[C, L]; qs, qinv_negs: u32[L]."""
+    cts: u32[C, ..., L, N]; w_mont: u32[C, L]; qs, qinv_negs: u32[L].
+    block_b=None takes the shared default from tune.DEFAULT_BLOCK (4 here:
+    the unrolled client loop holds n_clients tiles in VMEM at once, so the
+    batch tile stays smaller than the single-input kernels')."""
+    if block_b is None:
+        block_b = _tune.default_block("weighted_sum")
     c = cts.shape[0]
     l, n = cts.shape[-2], cts.shape[-1]
     batch = cts.shape[1:-2]
@@ -123,10 +129,13 @@ def _build_accum(l: int, n: int, block_b: int, interpret: bool):
 
 
 def he_weighted_accum_fused(acc, ct, w_mont, qs, qinv_negs, *,
-                            block_b: int = 8, interpret: bool = True):
+                            block_b: int | None = None,
+                            interpret: bool = True):
     """acc + w (*) ct mod q_l, all limbs in one pallas_call.
 
     acc, ct: u32[..., L, N]; w_mont: u32[L] per-limb Montgomery weight."""
+    if block_b is None:
+        block_b = _tune.default_block("weighted_accum")
     l, n = ct.shape[-2], ct.shape[-1]
     batch = ct.shape[:-2]
     ct2 = ct.reshape((-1, l, n))
@@ -180,12 +189,15 @@ def _build_accum_chunks(l: int, m: int, block_k: int, interpret: bool):
 
 
 def he_weighted_accum_chunks_fused(acc, cts, w_mont, qs, qinv_negs, *,
-                                   block_k: int = 4, interpret: bool = True):
+                                   block_k: int | None = None,
+                                   interpret: bool = True):
     """acc[k] + w[k] (*) ct[k] mod q_l for every row k, one pallas_call.
 
     acc, cts: u32[K, ..., L, N]; w_mont: u32[K, L] per-row Montgomery
     weights broadcast over the middle (...) dims; qs, qinv_negs: u32[L].
     """
+    if block_k is None:
+        block_k = _tune.default_block("weighted_accum_chunks")
     k, l, n = cts.shape[0], cts.shape[-2], cts.shape[-1]
     mid = cts.shape[1:-2]
     # [K, ..., L, N] -> [K, L, ..., N] -> [K, L, M]: every row owns a

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
+from repro.kernels import tune as _tune
 
 
 def _ntt_fwd_body(x_ref, psi_ref, q_ref, qinv_ref, o_ref, *, n: int):
@@ -110,15 +111,47 @@ def _ntt_inv_body(x_ref, psi_inv_ref, q_ref, qinv_ref, ninv_ref, o_ref, *,
 # bit-identical (tests/test_ntt4.py, tests/test_gold.py).
 
 
-def _ln_fwd_axis1(x, psi, q, qinv_neg):
+def _ln_fwd_axis1(x, psi, q, qinv_neg, radix: int = 2):
     """LN forward butterflies along axis 1 of x[b, len, spec]; psi: [len].
 
     Identical recurrence to _ntt_fwd_body, but the transform axis is a
     middle axis: the trailing spectator axis stays lane-contiguous through
-    every stage."""
+    every stage.
+
+    radix=4 fuses each PAIR of consecutive radix-2 stages into one pass
+    (a trailing radix-2 stage remains when log2(len) is odd), halving the
+    reshape/stack round trips for the short sub-transforms.  The fused
+    pass performs the exact same modular multiplies/adds on the exact
+    same elements as the two stages it replaces, so the output is
+    bit-identical — radix is launch geometry, not arithmetic
+    (DESIGN.md §12)."""
     b, ln, spec = x.shape
     m, t = 1, ln
     while m < ln:
+        if radix == 4 and m * 4 <= ln:
+            t //= 4
+            xs = x.reshape((b, m, 2, 2, t, spec))
+            s1 = psi[m:2 * m][None, :, None, None, None]
+            u = xs[:, :, 0]                     # [b, m, 2(c), t, spec]
+            v = _ref.mont_mul(xs[:, :, 1], jnp.broadcast_to(s1, u.shape),
+                              q, qinv_neg)
+            y0 = _ref.mod_add(u, v, q)          # stage-1 outputs, p = 0/1
+            y1 = _ref.mod_sub(u, v, q)
+            s20 = psi[2 * m:4 * m:2][None, :, None, None]
+            s21 = psi[2 * m + 1:4 * m:2][None, :, None, None]
+            v0 = _ref.mont_mul(y0[:, :, 1],
+                               jnp.broadcast_to(s20, y0[:, :, 1].shape),
+                               q, qinv_neg)
+            v1 = _ref.mont_mul(y1[:, :, 1],
+                               jnp.broadcast_to(s21, y1[:, :, 1].shape),
+                               q, qinv_neg)
+            x = jnp.stack([_ref.mod_add(y0[:, :, 0], v0, q),
+                           _ref.mod_sub(y0[:, :, 0], v0, q),
+                           _ref.mod_add(y1[:, :, 0], v1, q),
+                           _ref.mod_sub(y1[:, :, 0], v1, q)],
+                          axis=2).reshape((b, ln, spec))
+            m *= 4
+            continue
         t //= 2
         xs = x.reshape((b, m, 2, t, spec))
         u = xs[:, :, 0]
@@ -131,12 +164,38 @@ def _ln_fwd_axis1(x, psi, q, qinv_neg):
     return x
 
 
-def _ln_inv_axis1(x, psi_inv, q, qinv_neg):
+def _ln_inv_axis1(x, psi_inv, q, qinv_neg, radix: int = 2):
     """GS inverse butterflies along axis 1 (no final 1/len scaling — the
-    caller applies one combined N^{-1} multiply after both phases)."""
+    caller applies one combined N^{-1} multiply after both phases).
+
+    radix=4 fuses stage pairs like _ln_fwd_axis1, same bit-identity
+    argument."""
     b, ln, spec = x.shape
     t, m = 1, ln
     while m > 1:
+        if radix == 4 and m % 4 == 0:
+            h2 = m // 4
+            xs = x.reshape((b, h2, 2, 2, t, spec))   # [g2, a, dA, i]
+            u = xs[:, :, :, 0]                       # [b, h2, 2(a), t, spec]
+            v = xs[:, :, :, 1]
+            s1 = psi_inv[m // 2:m].reshape((h2, 2))[None, :, :, None, None]
+            lo = _ref.mod_add(u, v, q)               # stage-A outputs
+            hi = _ref.mont_mul(_ref.mod_sub(u, v, q),
+                               jnp.broadcast_to(s1, u.shape), q, qinv_neg)
+            s2 = psi_inv[h2:2 * h2][None, :, None, None]
+            d1_lo = _ref.mod_sub(lo[:, :, 0], lo[:, :, 1], q)
+            d1_hi = _ref.mod_sub(hi[:, :, 0], hi[:, :, 1], q)
+            x = jnp.stack(
+                [_ref.mod_add(lo[:, :, 0], lo[:, :, 1], q),
+                 _ref.mod_add(hi[:, :, 0], hi[:, :, 1], q),
+                 _ref.mont_mul(d1_lo, jnp.broadcast_to(s2, d1_lo.shape),
+                               q, qinv_neg),
+                 _ref.mont_mul(d1_hi, jnp.broadcast_to(s2, d1_hi.shape),
+                               q, qinv_neg)],
+                axis=2).reshape((b, ln, spec))
+            t *= 4
+            m = h2
+            continue
         h = m // 2
         xs = x.reshape((b, h, 2, t, spec))
         u = xs[:, :, 0]
@@ -152,33 +211,34 @@ def _ln_inv_axis1(x, psi_inv, q, qinv_neg):
 
 
 def _ntt4_fwd_body(x_ref, psi1_ref, psi2_ref, corr_ref, q_ref, qinv_ref,
-                   o_ref, *, n: int, n1: int, n2: int):
+                   o_ref, *, n: int, n1: int, n2: int, radix: int = 2):
     x = x_ref[:, 0, :]
     b = x.shape[0]
     q = q_ref[0]
     qi = qinv_ref[0]
     x = x.reshape((b, n1, n2))                       # [j1][j2]
-    x = _ln_fwd_axis1(x, psi1_ref[0], q, qi)         # [br k1][j2]
+    x = _ln_fwd_axis1(x, psi1_ref[0], q, qi, radix)  # [br k1][j2]
     corr = corr_ref[0].reshape((n1, n2))
     x = _ref.mont_mul(x, jnp.broadcast_to(corr[None], x.shape), q, qi)
     x = jnp.swapaxes(x, 1, 2)                        # [j2][br k1]
-    x = _ln_fwd_axis1(x, psi2_ref[0], q, qi)         # [br k2][br k1]
+    x = _ln_fwd_axis1(x, psi2_ref[0], q, qi, radix)  # [br k2][br k1]
     o_ref[:, 0, :] = jnp.swapaxes(x, 1, 2).reshape((b, n))
 
 
 def _ntt4_inv_body(x_ref, psi1_inv_ref, psi2_inv_ref, corr_inv_ref, q_ref,
-                   qinv_ref, ninv_ref, o_ref, *, n: int, n1: int, n2: int):
+                   qinv_ref, ninv_ref, o_ref, *, n: int, n1: int, n2: int,
+                   radix: int = 2):
     x = x_ref[:, 0, :]
     b = x.shape[0]
     q = q_ref[0]
     qi = qinv_ref[0]
-    x = x.reshape((b, n1, n2))                       # [br k1][br k2]
-    x = jnp.swapaxes(x, 1, 2)                        # [br k2][br k1]
-    x = _ln_inv_axis1(x, psi2_inv_ref[0], q, qi)     # [j2][br k1]
-    x = jnp.swapaxes(x, 1, 2)                        # [br k1][j2]
+    x = x.reshape((b, n1, n2))                          # [br k1][br k2]
+    x = jnp.swapaxes(x, 1, 2)                           # [br k2][br k1]
+    x = _ln_inv_axis1(x, psi2_inv_ref[0], q, qi, radix)  # [j2][br k1]
+    x = jnp.swapaxes(x, 1, 2)                           # [br k1][j2]
     corr_inv = corr_inv_ref[0].reshape((n1, n2))
     x = _ref.mont_mul(x, jnp.broadcast_to(corr_inv[None], x.shape), q, qi)
-    x = _ln_inv_axis1(x, psi1_inv_ref[0], q, qi)     # [j1][j2]
+    x = _ln_inv_axis1(x, psi1_inv_ref[0], q, qi, radix)  # [j1][j2]
     x = x.reshape((b, n))
     x = _ref.mont_mul(x, jnp.broadcast_to(ninv_ref[0], x.shape), q, qi)
     o_ref[:, 0, :] = x
@@ -215,10 +275,15 @@ def _flatten(x):
     return x.reshape((-1, l, n)), x.shape[:-2]
 
 
-def ntt_fwd_fused(x, psi_rev_mont, qs, qinv_negs, *, block_b: int = 8,
+def ntt_fwd_fused(x, psi_rev_mont, qs, qinv_negs, *, block_b: int | None = None,
                   interpret: bool = True):
     """x: u32[..., L, N] natural -> bit-reversed NTT domain, all limbs in one
-    pallas_call.  psi_rev_mont: u32[L, N]; qs, qinv_negs: u32[L]."""
+    pallas_call.  psi_rev_mont: u32[L, N]; qs, qinv_negs: u32[L].
+
+    block_b=None takes the shared default from tune.DEFAULT_BLOCK — the
+    registry (kernels/ops.py) threads tuned values here instead."""
+    if block_b is None:
+        block_b = _tune.default_block("ntt_fwd")
     x2, batch = _flatten(x)
     b, l, n = x2.shape
     call = _build("fwd", l, n, min(block_b, b), interpret)
@@ -226,8 +291,10 @@ def ntt_fwd_fused(x, psi_rev_mont, qs, qinv_negs, *, block_b: int = 8,
 
 
 def ntt_inv_fused(x, psi_inv_rev_mont, n_inv_monts, qs, qinv_negs, *,
-                  block_b: int = 8, interpret: bool = True):
+                  block_b: int | None = None, interpret: bool = True):
     """x: u32[..., L, N] bit-reversed NTT domain -> natural order."""
+    if block_b is None:
+        block_b = _tune.default_block("ntt_inv")
     x2, batch = _flatten(x)
     b, l, n = x2.shape
     call = _build("inv", l, n, min(block_b, b), interpret)
@@ -237,17 +304,19 @@ def ntt_inv_fused(x, psi_inv_rev_mont, n_inv_monts, qs, qinv_negs, *,
 
 @functools.lru_cache(maxsize=128)
 def _build4(direction: str, l: int, n: int, n1: int, n2: int, block_b: int,
-            interpret: bool):
+            radix: int, interpret: bool):
     tile = pl.BlockSpec((block_b, 1, n), lambda li, bi: (bi, li, 0))
     row1 = pl.BlockSpec((1, n1), lambda li, bi: (li, 0))
     row2 = pl.BlockSpec((1, n2), lambda li, bi: (li, 0))
     rown = pl.BlockSpec((1, n), lambda li, bi: (li, 0))
     scalar = pl.BlockSpec((1,), lambda li, bi: (li,))
     if direction == "fwd":
-        body = functools.partial(_ntt4_fwd_body, n=n, n1=n1, n2=n2)
+        body = functools.partial(_ntt4_fwd_body, n=n, n1=n1, n2=n2,
+                                 radix=radix)
         in_specs = [tile, row1, row2, rown, scalar, scalar]
     else:
-        body = functools.partial(_ntt4_inv_body, n=n, n1=n1, n2=n2)
+        body = functools.partial(_ntt4_inv_body, n=n, n1=n1, n2=n2,
+                                 radix=radix)
         in_specs = [tile, row1, row2, rown, scalar, scalar, scalar]
 
     def call(x, *tables):
@@ -265,31 +334,39 @@ def _build4(direction: str, l: int, n: int, n1: int, n2: int, block_b: int,
 
 
 def ntt4_fwd_fused(x, psi1_mont, psi2_mont, corr_mont, qs, qinv_negs, *,
-                   block_b: int = 8, interpret: bool = True):
+                   block_b: int | None = None, radix: int = 2,
+                   interpret: bool = True):
     """4-step forward negacyclic NTT, bit-identical to ntt_fwd_fused.
 
     x: u32[..., L, N] natural -> bit-reversed NTT domain.  Tables come from
     params.LimbTables: psi1_mont u32[L, n1], psi2_mont u32[L, n2],
-    corr_mont u32[L, N] (N = n1*n2, params.ntt4_split)."""
+    corr_mont u32[L, N] (N = n1*n2; the split is read off the table shapes,
+    so retabled variants from params.retable_ntt4 change it here).  radix
+    picks the sub-NTT butterfly grouping (2 or 4) — launch geometry only,
+    never bits."""
+    if block_b is None:
+        block_b = _tune.default_block("ntt_fwd")
     x2, batch = _flatten(x)
     b, l, n = x2.shape
     n1, n2 = psi1_mont.shape[-1], psi2_mont.shape[-1]
     assert n1 * n2 == n, (n1, n2, n)
-    call = _build4("fwd", l, n, n1, n2, min(block_b, b), interpret)
+    call = _build4("fwd", l, n, n1, n2, min(block_b, b), radix, interpret)
     return call(x2, psi1_mont, psi2_mont, corr_mont, qs,
                 qinv_negs).reshape(batch + (l, n))
 
 
 def ntt4_inv_fused(x, psi1_inv_mont, psi2_inv_mont, corr_inv_mont,
-                   n_inv_monts, qs, qinv_negs, *, block_b: int = 8,
-                   interpret: bool = True):
+                   n_inv_monts, qs, qinv_negs, *, block_b: int | None = None,
+                   radix: int = 2, interpret: bool = True):
     """4-step inverse negacyclic NTT, bit-identical to ntt_inv_fused.
 
     x: u32[..., L, N] bit-reversed NTT domain -> natural order."""
+    if block_b is None:
+        block_b = _tune.default_block("ntt_inv")
     x2, batch = _flatten(x)
     b, l, n = x2.shape
     n1, n2 = psi1_inv_mont.shape[-1], psi2_inv_mont.shape[-1]
     assert n1 * n2 == n, (n1, n2, n)
-    call = _build4("inv", l, n, n1, n2, min(block_b, b), interpret)
+    call = _build4("inv", l, n, n1, n2, min(block_b, b), radix, interpret)
     return call(x2, psi1_inv_mont, psi2_inv_mont, corr_inv_mont, qs,
                 qinv_negs, n_inv_monts).reshape(batch + (l, n))

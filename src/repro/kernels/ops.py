@@ -23,7 +23,15 @@ Each op is an entry in an op-table mapping backend name -> implementation:
                transpose NTT kernels (kernels/ntt.py, DESIGN.md §10): the
                lane-efficient layout for real-TPU butterflies below 128
                lanes.  Every non-NTT op shares the "pallas" kernels.  All
-               three backends are bit-identical (tests/test_gold.py).
+               concrete backends are bit-identical (tests/test_gold.py).
+  * "auto"   — per-op, per-SHAPE resolution through the kernels/tune.py
+               tuning cache (DESIGN.md §12): a cache hit runs the measured
+               winner (concrete backend + launch config — block_b, ntt4
+               split, butterfly radix), a miss runs the platform fallback
+               with the shared defaults.  Resolution happens at trace
+               time (shapes are static under jit) and the tuner's cache
+               generation is folded into `backend_token()`, so cached
+               graphs retrace when the cache (re)loads.
 
 Selection is per-op: `set_backend("pallas")` flips every op,
 `set_backend("pallas", op="weighted_sum")` flips one.  The interpret/compile
@@ -35,24 +43,39 @@ retrace when the registry changes.
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs as _obs
 from repro.kernels import he_agg as _he_agg
 from repro.kernels import ntt as _ntt
 from repro.kernels import pointwise as _pointwise
 from repro.kernels import ref as _ref
+from repro.kernels import tune as _tune
 
 OPS = ("ntt_fwd", "ntt_inv", "mul_add", "weighted_sum", "weighted_accum",
        "weighted_accum_chunks")
-BACKENDS = ("ref", "pallas", "pallas4")
+BACKENDS = ("ref", "pallas", "pallas4", "auto")
 
-_ASSIGN: dict[str, str] = {
-    op: os.environ.get("REPRO_HE_BACKEND", "ref") for op in OPS
-}
+
+def _env_backend() -> str:
+    """Read + validate REPRO_HE_BACKEND at import time.  An unknown value
+    used to land in the assignment unchecked and surface much later as a
+    bare KeyError at first dispatch; fail at import with the fix instead."""
+    name = os.environ.get("REPRO_HE_BACKEND", "ref")
+    if name not in BACKENDS:
+        raise ValueError(
+            f"REPRO_HE_BACKEND={name!r} is not a known backend; expected one "
+            f"of {'/'.join(BACKENDS)} — see the 'Environment variables & "
+            "flags' table in README.md")
+    return name
+
+
+_ASSIGN: dict[str, str] = {op: _env_backend() for op in OPS}
 _INTERPRET: bool | None = None
 
 
@@ -86,8 +109,14 @@ def get_backend(op: str | None = None) -> str:
 
 def backend_token() -> tuple:
     """Hashable snapshot of (per-op assignment, interpret flag) — the static
-    jit key that makes cached graphs retrace on registry changes."""
-    return tuple(sorted(_ASSIGN.items())) + (("interpret", _interpret()),)
+    jit key that makes cached graphs retrace on registry changes.  With any
+    op on `auto` the tuner's cache generation is part of the token: a cache
+    (re)load may change what a dispatch resolves to, so graphs that embedded
+    the old resolution must retrace (tests/test_tune.py pins this)."""
+    tok = tuple(sorted(_ASSIGN.items())) + (("interpret", _interpret()),)
+    if "auto" in _ASSIGN.values():
+        tok += (("tune", _tune.generation()),)
+    return tok
 
 
 @functools.lru_cache(maxsize=256)
@@ -105,75 +134,94 @@ def _qcol(t):
 # ---------------------------------------------------------------------------
 
 
-def _ntt_fwd_ref(t, x):
+# Every implementation takes a trailing `cfg` kwarg (tune.KernelConfig or
+# None).  cfg=None means "kernel defaults" — byte-identical to the
+# pre-autotuner call, which is what explicit ref/pallas/pallas4 backend
+# selections always pass.  The ref oracle has no launch geometry, so it
+# ignores cfg entirely.
+
+
+def _blk(cfg):
+    return cfg.block_b if cfg is not None else None
+
+
+def _ntt_fwd_ref(t, x, cfg=None):
     return _ref.ntt_fwd_fused(x, t.psi_rev_mont, t.qs, t.qinv_negs)
 
 
-def _ntt_fwd_pallas(t, x):
+def _ntt_fwd_pallas(t, x, cfg=None):
     return _ntt.ntt_fwd_fused(x, t.psi_rev_mont, t.qs, t.qinv_negs,
-                              interpret=_interpret())
+                              block_b=_blk(cfg), interpret=_interpret())
 
 
-def _ntt_inv_ref(t, x):
+def _ntt_inv_ref(t, x, cfg=None):
     return _ref.ntt_inv_fused(x, t.psi_inv_rev_mont, t.n_inv_monts, t.qs,
                               t.qinv_negs)
 
 
-def _ntt_inv_pallas(t, x):
+def _ntt_inv_pallas(t, x, cfg=None):
     return _ntt.ntt_inv_fused(x, t.psi_inv_rev_mont, t.n_inv_monts, t.qs,
-                              t.qinv_negs, interpret=_interpret())
+                              t.qinv_negs, block_b=_blk(cfg),
+                              interpret=_interpret())
 
 
-def _ntt_fwd_pallas4(t, x):
+def _ntt_fwd_pallas4(t, x, cfg=None):
     return _ntt.ntt4_fwd_fused(x, t.ntt4_psi1_mont, t.ntt4_psi2_mont,
                                t.ntt4_corr_mont, t.qs, t.qinv_negs,
+                               block_b=_blk(cfg),
+                               radix=cfg.radix if cfg is not None else 2,
                                interpret=_interpret())
 
 
-def _ntt_inv_pallas4(t, x):
+def _ntt_inv_pallas4(t, x, cfg=None):
     return _ntt.ntt4_inv_fused(x, t.ntt4_psi1_inv_mont,
                                t.ntt4_psi2_inv_mont, t.ntt4_corr_inv_mont,
                                t.n_inv_monts, t.qs, t.qinv_negs,
+                               block_b=_blk(cfg),
+                               radix=cfg.radix if cfg is not None else 2,
                                interpret=_interpret())
 
 
-def _mul_add_ref(t, x, y_mont, z):
+def _mul_add_ref(t, x, y_mont, z, cfg=None):
     return _ref.mul_add_fused(x, jnp.broadcast_to(y_mont, x.shape),
                               jnp.broadcast_to(z, x.shape), t.qs, t.qinv_negs)
 
 
-def _mul_add_pallas(t, x, y_mont, z):
+def _mul_add_pallas(t, x, y_mont, z, cfg=None):
     return _pointwise.mul_add_fused(x, y_mont, z, t.qs, t.qinv_negs,
+                                    block_b=_blk(cfg),
                                     interpret=_interpret())
 
 
-def _weighted_sum_ref(t, cts, w_mont):
+def _weighted_sum_ref(t, cts, w_mont, cfg=None):
     return _ref.he_weighted_sum_fused(cts, w_mont, t.qs, t.qinv_negs)
 
 
-def _weighted_sum_pallas(t, cts, w_mont):
+def _weighted_sum_pallas(t, cts, w_mont, cfg=None):
     return _he_agg.he_weighted_sum_fused(cts, w_mont, t.qs, t.qinv_negs,
+                                         block_b=_blk(cfg),
                                          interpret=_interpret())
 
 
-def _weighted_accum_ref(t, acc, ct, w_mont):
+def _weighted_accum_ref(t, acc, ct, w_mont, cfg=None):
     return _ref.he_weighted_accum_fused(acc, ct, w_mont, t.qs, t.qinv_negs)
 
 
-def _weighted_accum_pallas(t, acc, ct, w_mont):
+def _weighted_accum_pallas(t, acc, ct, w_mont, cfg=None):
     return _he_agg.he_weighted_accum_fused(acc, ct, w_mont, t.qs,
-                                           t.qinv_negs,
+                                           t.qinv_negs, block_b=_blk(cfg),
                                            interpret=_interpret())
 
 
-def _weighted_accum_chunks_ref(t, acc, cts, w_mont):
+def _weighted_accum_chunks_ref(t, acc, cts, w_mont, cfg=None):
     return _ref.he_weighted_accum_chunks_fused(acc, cts, w_mont, t.qs,
                                                t.qinv_negs)
 
 
-def _weighted_accum_chunks_pallas(t, acc, cts, w_mont):
+def _weighted_accum_chunks_pallas(t, acc, cts, w_mont, cfg=None):
     return _he_agg.he_weighted_accum_chunks_fused(acc, cts, w_mont, t.qs,
                                                   t.qinv_negs,
+                                                  block_k=_blk(cfg),
                                                   interpret=_interpret())
 
 
@@ -199,6 +247,53 @@ _IMPL = {
 }
 
 
+# shape-key extraction: which positional arg carries the [..., L, N] tensor
+# whose batch size keys the tuning cache, and how its batch is counted.
+# Shapes are static under jit, so `auto` resolution is a trace-time
+# decision — the resolved (backend, config) is baked into the graph and
+# `backend_token()` carries the tuner generation to force retraces.
+_SHAPE_ARG = {"ntt_fwd": 0, "ntt_inv": 0, "mul_add": 0, "weighted_sum": 0,
+              "weighted_accum": 1, "weighted_accum_chunks": 1}
+
+
+def _shape_dims(op, args):
+    """(N, L, B) of one dispatch — B is the flattened batch the kernel
+    wrappers grid over (leading-axis rows for the chunk kernel)."""
+    x = args[_SHAPE_ARG[op]]
+    n, l = x.shape[-1], x.shape[-2]
+    if op == "weighted_sum":
+        b = math.prod(x.shape[1:-2])      # leading axis is the client count
+    elif op == "weighted_accum_chunks":
+        b = x.shape[0]                    # grid rows = chunk rows K
+    else:
+        b = math.prod(x.shape[:-2])
+    return n, l, int(b)
+
+
+def _variant_tables(tables, split):
+    """tables with the ntt4_* fields rebuilt for a non-default split.
+
+    Only the host-numpy constant-embedding path can be retabled; traced or
+    sharded tables (core/ckks/sharded.py passes per-shard slices inside
+    shard_map) keep their default split — the tuner's split choice simply
+    doesn't apply there."""
+    if not isinstance(tables.qs, np.ndarray):
+        return tables
+    from repro.core.ckks import params as _params
+
+    return _params.retable_ntt4(tables, split[0], split[1])
+
+
+def _resolve(op, args):
+    """(concrete backend, config|None) for one dispatch.  Explicit
+    assignments keep cfg=None — byte-identical to the pre-autotuner call."""
+    backend = _ASSIGN[op]
+    if backend != "auto":
+        return backend, None
+    n, l, b = _shape_dims(op, args)
+    return _tune.resolve(op, n, l, b, _interpret())
+
+
 def _dispatch(op, tables, *args):
     """Registry dispatch point for every op invocation.
 
@@ -209,14 +304,31 @@ def _dispatch(op, tables, *args):
     jax.profiler.TraceAnnotation; invocations inside a jit/shard_map
     trace get a jax.named_scope so device profiles carry op names, plus a
     retrace counter — all recorded per backend so flat/pallas/pallas4
-    runs are distinguishable (DESIGN.md §11).
+    runs are distinguishable (DESIGN.md §11).  `auto` resolves through
+    the tuning cache first and stamps the resolved config into the span.
     """
-    backend = _ASSIGN[op]
+    backend, cfg = _resolve(op, args)
+    if (cfg is not None and cfg.ntt4_split is not None
+            and backend == "pallas4" and op in _tune.NTT_OPS):
+        tables = _variant_tables(tables, cfg.ntt4_split)
     impl = _IMPL[op][backend]
     if not _obs.kernel_hooks_enabled():
-        return impl(tables, *args)
-    return _obs.timed_kernel(op, backend, backend_token(), impl, tables,
-                             *args)
+        return impl(tables, *args, cfg=cfg)
+    return _obs.timed_kernel(op, backend, backend_token(),
+                             functools.partial(impl, cfg=cfg), tables,
+                             *args, config=cfg)
+
+
+def run_config(op, backend, cfg, tables, *args):
+    """Run one op under an explicit (concrete backend, KernelConfig),
+    bypassing the registry assignment — the tuner's measurement entry
+    (tune._candidate_fn) and a debugging hook.  Applies the config's
+    ntt4_split variant tables exactly like `_dispatch`."""
+    assert backend in ("ref", "pallas", "pallas4"), backend
+    if (cfg is not None and cfg.ntt4_split is not None
+            and backend == "pallas4" and op in _tune.NTT_OPS):
+        tables = _variant_tables(tables, cfg.ntt4_split)
+    return _IMPL[op][backend](tables, *args, cfg=cfg)
 
 
 def apply(op, tables, *args):

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
+from repro.kernels import tune as _tune
 
 
 def _mul_add_body(x_ref, y_ref, z_ref, q_ref, qinv_ref, o_ref):
@@ -48,11 +49,14 @@ def _build(l: int, n: int, block_b: int, interpret: bool):
     return call
 
 
-def mul_add_fused(x, y_mont, z, qs, qinv_negs, *, block_b: int = 8,
+def mul_add_fused(x, y_mont, z, qs, qinv_negs, *, block_b: int | None = None,
                   interpret: bool = True):
     """out = x (*) y_mont + z mod q_l, all limbs in one pallas_call.
 
-    x, y_mont, z: u32[..., L, N]; qs, qinv_negs: u32[L]."""
+    x, y_mont, z: u32[..., L, N]; qs, qinv_negs: u32[L].  block_b=None
+    takes the shared default from tune.DEFAULT_BLOCK."""
+    if block_b is None:
+        block_b = _tune.default_block("mul_add")
     l, n = x.shape[-2], x.shape[-1]
     batch = x.shape[:-2]
     x2 = x.reshape((-1, l, n))

@@ -83,7 +83,7 @@ def provenance() -> dict:
     from repro.kernels import ops
 
     devs = jax.devices()
-    return {
+    out = {
         "obs_version": OBS_VERSION,
         "backend": ops.get_backend(),
         "backend_token": str(ops.backend_token()),
@@ -91,3 +91,8 @@ def provenance() -> dict:
         "device_kind": devs[0].device_kind if devs else "unknown",
         "device_count": len(devs),
     }
+    if "auto" in {ops.get_backend(op) for op in ops.OPS}:
+        from repro.kernels import tune
+
+        out["tune"] = tune.provenance()
+    return out

@@ -44,8 +44,12 @@ def _any_tracer(args) -> bool:
                for x in jax.tree_util.tree_leaves(args))
 
 
-def timed_kernel(op: str, backend: str, token, impl, *args):
-    """Dispatch one registry op with timing (see module docstring)."""
+def timed_kernel(op: str, backend: str, token, impl, *args, config=None):
+    """Dispatch one registry op with timing (see module docstring).
+
+    `config` is the resolved tune.KernelConfig of an `auto` dispatch (None
+    for explicit backends); it is stamped into the span args so a trace
+    shows the launch geometry that actually ran (DESIGN.md §12.5)."""
     import jax
 
     if _any_tracer(args):
@@ -63,9 +67,12 @@ def timed_kernel(op: str, backend: str, token, impl, *args):
                               backend=backend).inc()
     _metrics.REGISTRY.histogram("kernel_op_seconds", op=op,
                                 backend=backend).observe(dt)
+    span_args = {"op": op, "backend": backend, "token": str(token),
+                 "eager": True}
+    if config is not None:
+        span_args["config"] = config.to_json()
     tracer.emit_complete(f"he.{op}", ts0, dt * 1e6, cat="kernel",
-                         args={"op": op, "backend": backend,
-                               "token": str(token), "eager": True})
+                         args=span_args)
     return out
 
 

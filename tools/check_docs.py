@@ -5,8 +5,8 @@ Checks (default mode — exit nonzero on any failure):
   1. every intra-repo markdown link in README.md / DESIGN.md / ROADMAP.md
      resolves to an existing file or directory;
   2. the benchmark tables in README.md match what the checked-in
-     BENCH_he.json / BENCH_agg_sharded.json / BENCH_uplink_sharded.json
-     render to;
+     BENCH_he.json / BENCH_agg_sharded.json / BENCH_uplink_sharded.json /
+     BENCH_tune.json render to;
   3. the DESIGN.md §9.2 wire-spec appendix matches wire/format.py's
      version and derivation constants (the WIRE_SPEC marker);
   4. the README "Environment variables & flags" table's REPRO_HE_BACKEND
@@ -19,7 +19,9 @@ Checks (default mode — exit nonzero on any failure):
      local runs;
   6. the telemetry layer stays documented: README env-table rows for
      REPRO_OBS / REPRO_OBS_TRACE plus a tools/round_report.py pointer,
-     and the DESIGN.md §11 obs section.
+     and the DESIGN.md §11 obs section;
+  7. the autotuner stays documented: README `REPRO_HE_TUNE_CACHE` row +
+     `benchmarks.run tune` pointer, and the DESIGN.md §12 section.
 
 `--write` regenerates the README tables in place between the
 BENCH_TABLES_START/END markers instead of failing on drift.
@@ -160,6 +162,32 @@ def render_bench_tables() -> str:
             f"{r['encrypt_pk_sharded_ms']:.2f} | "
             f"{r['uplink_ratio']:.2f}x | "
             f"{'yes' if r['sharded_parity'] else 'NO'} |")
+    out.append("")
+
+    tn_path = os.path.join(ROOT, "BENCH_tune.json")
+    tn = json.load(open(tn_path))
+    plat = tn["provenance"]["platform"]
+    out.append(
+        f"**Autotuner: default vs swept launch configs** "
+        f"(`benchmarks/run.py tune`; platform `{plat}`, "
+        f"interpret={'yes' if tn['interpret'] else 'no'}; winners cached "
+        "for `REPRO_HE_BACKEND=auto`, DESIGN.md §12):\n")
+    out.append("| op | N | L | B | winner | config | default ms | "
+               "tuned ms | speedup | candidates (pruned) |")
+    out.append("|----|--:|--:|--:|--------|--------|-----------:|"
+               "---------:|--------:|--------------------:|")
+    for r in tn["rows"]:
+        cfg = r["config"]
+        bits = [f"block {cfg['block_b']}"]
+        if cfg.get("ntt4_split"):
+            bits.append(f"{cfg['ntt4_split'][0]}x{cfg['ntt4_split'][1]}")
+        if cfg.get("radix", 2) != 2:
+            bits.append(f"radix {cfg['radix']}")
+        out.append(
+            f"| {r['op']} | {r['n']} | {r['l']} | {r['b']} | "
+            f"{r['backend']} | {', '.join(bits)} | "
+            f"{r['default_ms']:.2f} | {r['tuned_ms']:.2f} | "
+            f"{r['speedup']:.2f}x | {r['candidates']} ({r['pruned']}) |")
     return "\n".join(out) + "\n"
 
 
@@ -257,6 +285,34 @@ def check_obs_docs() -> list[str]:
     return errors
 
 
+def check_tune_docs() -> list[str]:
+    """The autotuner must stay documented: README needs the
+    `REPRO_HE_TUNE_CACHE` env row and a `benchmarks.run tune` pointer;
+    DESIGN.md needs the §12 autotuner section (search space, cache key
+    schema, pruning rule, bit-exactness argument)."""
+    errors = []
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    if not any(ln.startswith("| `REPRO_HE_TUNE_CACHE")
+               for ln in readme.splitlines()):
+        errors.append("README.md: missing the `REPRO_HE_TUNE_CACHE` row in "
+                      "the 'Environment variables & flags' table")
+    if "benchmarks.run tune" not in readme:
+        errors.append("README.md: autotuner docs no longer point at "
+                      "`benchmarks.run tune`")
+    design = open(os.path.join(ROOT, "DESIGN.md")).read()
+    sec = re.search(r"^## §12 .*?(?=\n## |\Z)", design,
+                    re.MULTILINE | re.DOTALL)
+    if not sec:
+        errors.append("DESIGN.md: missing the '## §12' autotuner section")
+        return errors
+    for needed in ("block_b", "ntt4_split", "radix", "shape key",
+                   "PRUNE_RATIO", "launch geometry"):
+        if needed not in sec.group(0):
+            errors.append(f"DESIGN.md §12: autotuner section no longer "
+                          f"covers '{needed}'")
+    return errors
+
+
 def check_or_write_tables(write: bool) -> list[str]:
     path = os.path.join(ROOT, "README.md")
     text = open(path).read()
@@ -341,6 +397,7 @@ def main() -> int:
     errors += check_wire_spec()
     errors += check_env_table()
     errors += check_obs_docs()
+    errors += check_tune_docs()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
         errors += check_gold_kats()
