@@ -556,6 +556,16 @@ def bench_roofline():
     _rows("Roofline terms from dry-run artifacts", rows)
 
 
+def bench_selective(smoke: bool = False):
+    """Paper-scale selective encryption end to end (benchmarks/selective.py):
+    fine-tune -> sensitivity -> HE mask agreement -> partitioned seeded wire
+    -> sharded streaming aggregation -> recover, swept over p; full mode
+    writes BENCH_selective.json."""
+    from benchmarks.selective import run_selective
+
+    run_selective(smoke=smoke)
+
+
 ALL = {
     "table4": bench_table4,
     "table6": bench_table6,
@@ -572,6 +582,7 @@ ALL = {
     "uplink-sharded": bench_uplink_sharded,
     "tune": bench_tune,
     "roofline": bench_roofline,
+    "selective": bench_selective,
 }
 
 
@@ -604,8 +615,8 @@ def main() -> None:
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help="benchmark modes to run (default: all)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tune mode only: one tiny sweep point, reps=1, no "
-                         "repo artifacts (CI exercises the sweep path)")
+                    help="tune/selective modes: tiny sweep, no repo "
+                         "artifacts (CI exercises the full code path)")
     args = ap.parse_args()
     names = args.modes or list(ALL)
     unknown = [n for n in names if n not in ALL]
@@ -613,8 +624,8 @@ def main() -> None:
         ap.error(f"unknown mode(s) {unknown}; choose from {list(ALL)}")
     for n in names:
         t0 = time.time()
-        if n == "tune":
-            bench_tune(smoke=args.smoke)
+        if n in ("tune", "selective"):
+            ALL[n](smoke=args.smoke)
         else:
             ALL[n]()
         print(f"[{n} done in {time.time()-t0:.1f}s]")

@@ -1,39 +1,45 @@
 """Reproduce the paper's key trade-off curves on a real model:
 overhead vs selection ratio (Table 7 / Figure 7) and the privacy-budget
 advantage of sensitivity-ordered selection (Remarks 3.12-3.14), using an
-actual sensitivity map from a trained LM client.
+actual fine-tune + sensitivity map from trained LM clients.
+
+The heavy lifting lives in benchmarks/selective.py (the `benchmarks.run
+selective` mode): this example reuses its client half
+(`fine_tune_and_sense`) for the sensitivity map and adds the DP-advantage
+table on top.  For the full measured pipeline sweep (wire bytes, sharded
+aggregation wall time, BENCH_selective.json) run
+
+    PYTHONPATH=src python -m benchmarks.run selective [--smoke]
 
     PYTHONPATH=src python examples/selective_encryption_sweep.py
 """
-import dataclasses
+import os
+import sys
 
 import numpy as np
-import jax
 
-from repro import configs
-from repro.core import dp, packing, selection
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..")))   # repo root: benchmarks/
+
+from benchmarks.selective import fine_tune_and_sense, model_cfgs
+from repro.core import dp
 from repro.core.ckks import params as ckks_params
 from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
-from repro.data import make_client_streams
-from repro.fl import ClientConfig, FLClient
-from repro.models import build_model
 
 
 def main():
-    cfg = dataclasses.replace(configs.get_config("qwen1.5-0.5b", smoke=True),
-                              vocab=512)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    streams = make_client_streams(1, cfg.vocab, seq_len=32, batch_size=4)
-    client = FLClient(0, model, streams[0],
-                      ClientConfig(sensitivity_probes=4))
-    print("computing per-parameter sensitivity map "
-          f"({cfg.param_count()/1e3:.0f}k params)...")
-    sens = client.sensitivity_map(params)
-    print(f"sensitivity: min={sens.min():.2e} max={sens.max():.2e} "
+    (_, cfg), = model_cfgs(smoke=True)
+    print("fine-tuning 2 clients + computing per-parameter sensitivity "
+          f"maps ({cfg.param_count()/1e3:.0f}k params)...")
+    task = fine_tune_and_sense(cfg)
+    sens = np.average(np.stack(task["sens_maps"]), axis=0,
+                      weights=task["weights"])
+    print(f"mean local loss {task['loss']:.3f}; sensitivity: "
+          f"min={sens.min():.2e} max={sens.max():.2e} "
           f"p99/p50={np.percentile(sens,99)/max(np.percentile(sens,50),1e-12):.1f} "
           "(heavily imbalanced, Figure 5)")
 
+    params = task["global_params"]
     ctx = ckks_params.make_context(n_poly=2048, n_limbs=2, delta_bits=24)
     print(f"\n{'p':>5} {'cts':>6} {'comm_MB':>8} {'ratio':>6} "
           f"{'eps_sel/J':>10} {'eps_rnd/J':>10}")

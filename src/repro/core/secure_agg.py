@@ -66,23 +66,9 @@ class SelectiveHEAggregator:
     def build(ctx: CkksContext, params, sens_vec: np.ndarray,
               cfg: AggregatorConfig) -> "SelectiveHEAggregator":
         spec = packing.make_flat_spec(params)
-        n = spec.total
-        if cfg.strategy == "top_p":
-            mask = selection.top_p_mask(sens_vec, cfg.p_ratio)
-        elif cfg.strategy == "random":
-            mask = selection.random_mask(cfg.p_ratio, n, seed=cfg.seed)
-        elif cfg.strategy == "per_layer":
-            mask = selection.per_layer_top_p_mask(sens_vec, cfg.p_ratio,
-                                                  spec.offsets, spec.sizes)
-        elif cfg.strategy == "recipe":
-            mask = selection.recipe_mask(sens_vec, cfg.p_ratio,
-                                         spec.offsets, spec.sizes)
-        elif cfg.strategy == "all":
-            mask = np.ones(n, dtype=bool)
-        elif cfg.strategy == "none":
-            mask = np.zeros(n, dtype=bool)
-        else:
-            raise ValueError(cfg.strategy)
+        mask = selection.build_mask(sens_vec, cfg.strategy, cfg.p_ratio,
+                                    offsets=spec.offsets, sizes=spec.sizes,
+                                    seed=cfg.seed)
         part = packing.make_partition(mask, ctx.slots)
         return SelectiveHEAggregator(ctx, spec, part, cfg)
 
@@ -205,16 +191,15 @@ class SelectiveHEAggregator:
 # ---------------------------------------------------------------------------
 
 
-def agree_mask(ctx: CkksContext, pk: dict, sk: dict,
-               local_sens_vecs: Sequence[np.ndarray],
-               weights: Sequence[float], p: float, key) -> np.ndarray:
-    """Clients encrypt local sensitivity maps; server HE-aggregates them;
-    clients decrypt the aggregate and derive the top-p mask.
+def agree_sensitivity(ctx: CkksContext, pk: dict, sk: dict,
+                      local_sens_vecs: Sequence[np.ndarray],
+                      weights: Sequence[float], key) -> np.ndarray:
+    """HE-aggregate the clients' local sensitivity maps -> global map.
 
-    (Algorithm 1 writes Select() over the ciphertext; comparisons are not
-    CKKS-evaluable, so — as the paper's own implementation must — the
-    decrypted aggregate is thresholded client-side and M becomes public FL
-    configuration.  Documented in DESIGN.md §5.)
+    Each client encrypts its map under pk; the server weighted-sums the
+    ciphertexts (never seeing an individual map in the clear); the decrypted
+    aggregate is the shared global sensitivity every client thresholds into
+    the public mask (build_mask / agree_mask).
     """
     n = int(local_sens_vecs[0].size)
     slots = ctx.slots
@@ -230,5 +215,27 @@ def agree_mask(ctx: CkksContext, pk: dict, sk: dict,
     stacked = Ciphertext(data=jnp.stack([c.data for c in cts]),
                          scale=cts[0].scale)
     agg = cipher.weighted_sum(ctx, stacked, list(weights))
-    s_glob = cipher.decrypt_values_np(ctx, sk, agg).ravel()[:n]
-    return selection.top_p_mask(s_glob, p)
+    return cipher.decrypt_values_np(ctx, sk, agg).ravel()[:n]
+
+
+def agree_mask(ctx: CkksContext, pk: dict, sk: dict,
+               local_sens_vecs: Sequence[np.ndarray],
+               weights: Sequence[float], p: float, key, *,
+               strategy: str = "top_p", offsets=None, sizes=None,
+               seed: int = 0) -> np.ndarray:
+    """Clients encrypt local sensitivity maps; server HE-aggregates them;
+    clients decrypt the aggregate and derive the selection mask.
+
+    `strategy` picks the selector applied to the decrypted aggregate
+    (selection.build_mask): the global `top_p` default, `per_layer`, or
+    the paper's `recipe` (top-p UNION first/last leaves) — the layer-aware
+    strategies need `offsets`/`sizes` from the model's FlatSpec.
+
+    (Algorithm 1 writes Select() over the ciphertext; comparisons are not
+    CKKS-evaluable, so — as the paper's own implementation must — the
+    decrypted aggregate is thresholded client-side and M becomes public FL
+    configuration.  Documented in DESIGN.md §5 and §13.)
+    """
+    s_glob = agree_sensitivity(ctx, pk, sk, local_sens_vecs, weights, key)
+    return selection.build_mask(s_glob, strategy, p, offsets=offsets,
+                                sizes=sizes, seed=seed)

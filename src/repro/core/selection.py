@@ -65,6 +65,41 @@ def recipe_mask(sens_vec: np.ndarray, p: float, offsets, sizes,
     return mask
 
 
+STRATEGIES = ("top_p", "random", "per_layer", "recipe", "all", "none")
+
+
+def build_mask(sens_vec: np.ndarray, strategy: str, p: float, *,
+               offsets=None, sizes=None, seed: int = 0) -> np.ndarray:
+    """Single dispatch point from (strategy, p) to a boolean mask.
+
+    Used by both `SelectiveHEAggregator.build` and the HE mask-agreement
+    path (`secure_agg.agree_mask`), so every strategy — including the
+    paper's `recipe` — is reachable from an HE-aggregated sensitivity map.
+    `offsets`/`sizes` (the FlatSpec leaf layout) are required for the
+    layer-aware strategies (`per_layer`, `recipe`).
+    """
+    s = np.asarray(sens_vec).ravel()
+    n = s.size
+    if strategy == "top_p":
+        return top_p_mask(s, p)
+    if strategy == "random":
+        return random_mask(p, n, seed=seed)
+    if strategy in ("per_layer", "recipe"):
+        if offsets is None or sizes is None:
+            raise ValueError(
+                f"strategy {strategy!r} needs the leaf layout "
+                "(offsets/sizes from packing.FlatSpec)")
+        if strategy == "per_layer":
+            return per_layer_top_p_mask(s, p, offsets, sizes)
+        return recipe_mask(s, p, offsets, sizes)
+    if strategy == "all":
+        return np.ones(n, dtype=bool)
+    if strategy == "none":
+        return np.zeros(n, dtype=bool)
+    raise ValueError(f"unknown selection strategy {strategy!r}; "
+                     f"choose from {STRATEGIES}")
+
+
 def mask_stats(mask: np.ndarray) -> dict:
     mask = np.asarray(mask, dtype=bool)
     return {"n_total": int(mask.size), "n_enc": int(mask.sum()),

@@ -108,12 +108,16 @@ class FLTask:
     # -- stage 2: encryption-mask agreement -----------------------------------
 
     def agree_encryption_mask(self):
+        spec = packing.make_flat_spec(self.global_params)
         if self.agg_cfg.strategy in ("all", "none", "random"):
-            sens = np.zeros(
-                packing.make_flat_spec(self.global_params).total)
+            # sensitivity-free strategies: no map exchange needed
+            sens = np.zeros(spec.total)
             self.aggregator = SelectiveHEAggregator.build(
                 self.ctx, self.global_params, sens, self.agg_cfg)
         else:
+            # sensitivity-driven strategies (top_p / per_layer / recipe):
+            # HE-aggregate the clients' local maps, then apply the
+            # configured selector to the decrypted aggregate
             sens_maps = [c.sensitivity_map(self.global_params)
                          for c in self.clients]
             weights = [1.0 / len(sens_maps)] * len(sens_maps)
@@ -121,21 +125,21 @@ class FLTask:
                 # threshold path: aggregate in the clear between clients
                 # (maps are lower-sensitivity than weights; microbenchmarked
                 # HE path is exercised in single-key mode)
-                glob = sum(w * s for w, s in zip(weights, sens_maps))
                 from repro.core import selection
-                mask = selection.top_p_mask(glob, self.agg_cfg.p_ratio)
-                spec = packing.make_flat_spec(self.global_params)
-                part = packing.make_partition(mask, self.ctx.slots)
-                self.aggregator = SelectiveHEAggregator(
-                    self.ctx, spec, part, self.agg_cfg)
+                glob = sum(w * s for w, s in zip(weights, sens_maps))
+                mask = selection.build_mask(
+                    glob, self.agg_cfg.strategy, self.agg_cfg.p_ratio,
+                    offsets=spec.offsets, sizes=spec.sizes,
+                    seed=self.agg_cfg.seed)
             else:
                 mask = secure_agg.agree_mask(
                     self.ctx, self.pk, self.sk, sens_maps, weights,
-                    self.agg_cfg.p_ratio, jax.random.PRNGKey(7))
-                spec = packing.make_flat_spec(self.global_params)
-                part = packing.make_partition(mask, self.ctx.slots)
-                self.aggregator = SelectiveHEAggregator(
-                    self.ctx, spec, part, self.agg_cfg)
+                    self.agg_cfg.p_ratio, jax.random.PRNGKey(7),
+                    strategy=self.agg_cfg.strategy, offsets=spec.offsets,
+                    sizes=spec.sizes, seed=self.agg_cfg.seed)
+            part = packing.make_partition(mask, self.ctx.slots)
+            self.aggregator = SelectiveHEAggregator(
+                self.ctx, spec, part, self.agg_cfg)
         self.server = FLServer(self.aggregator, ledger=self.ledger)
         return self.aggregator
 

@@ -7,7 +7,9 @@ Two independent safety nets against silent drift:
      limb arithmetic in repro/kernels/ref.py against straightforward wide
      modular arithmetic;
   2. checked-in known-answer vectors (tests/golden/ckks_kats.json):
-     NTT fwd/inv, pk + seeded encrypt, and weighted_sum outputs for FIXED
+     NTT fwd/inv, pk + seeded encrypt, weighted_sum, and the selective
+     partitioned-update path (fixed-mask wire bytes, streamed aggregation,
+     merged recovery) for FIXED
      keys/params, which every backend ("ref", "pallas", "pallas4") must
      reproduce bit-exactly (tests/test_gold.py).  A jax PRNG change, a
      kernel regression, or a cross-version numeric drift all fail loudly
@@ -49,9 +51,13 @@ def compute_kats() -> dict:
     import jax
     import jax.numpy as jnp
 
+    from repro.core import packing, selection
     from repro.core.ckks import cipher
     from repro.core.ckks import params as ckks_params
+    from repro.core.secure_agg import ProtectedUpdate
     from repro.kernels import ops, ref
+    from repro.wire import compress as wire_compress
+    from repro.wire import stream as ws
 
     out = {}
     for name, spec in KAT_CONTEXTS.items():
@@ -73,6 +79,42 @@ def compute_kats() -> dict:
             scale=float(ctx.delta))
         out[f"{name}/weighted_sum"] = np.asarray(
             cipher.weighted_sum(ctx, both, [0.25, 0.75]).data)
+
+        # -- selective path: fixed-mask partitioned update on the wire ------
+        # pins the exact uplink bytes (seeded ct chunks + i8 plain segment,
+        # wire v2) and the streamed aggregation / merged recovery of a
+        # ragged selective partition
+        n_total = 5 * ctx.slots // 2
+        mask = selection.top_p_mask(rng.rand(n_total), 0.45)
+        part = packing.make_partition(mask, ctx.slots)
+        assert 0 < part.n_enc % ctx.slots          # ragged last chunk
+        blobs = []
+        for i in range(2):
+            vec = jnp.asarray(rng.randn(n_total).astype(np.float32))
+            enc_vals, plain = packing.split_by_mask(vec, part)
+            sct_full = cipher.encrypt_values_seeded(
+                ctx, sk, enc_vals, jax.random.PRNGKey(10 + i),
+                a_seed=1234 + i)
+            sct = wire_compress.seed_compress(sct_full, 1234 + i)
+            blobs.append(ws.pack_update_frames(
+                ProtectedUpdate(ct=sct_full, plain=plain), cid=i,
+                n_samples=i + 1, rnd=0, seeded=sct, plain_codec="i8",
+                version=2))
+        out[f"{name}/selective_wire"] = \
+            np.frombuffer(blobs[0], dtype=np.uint8).astype(np.uint32)
+        ing = ws.StreamIngest(ctx)
+        for blob, w in zip(blobs, [0.25, 0.75]):
+            ing.ingest(blob, w)
+        glob = ing.finalize()
+        out[f"{name}/selective_agg"] = np.asarray(glob.ct.data)
+        if ctx.n_limbs == 2:
+            enc = cipher.decrypt_values(ctx, sk, glob.ct)
+        else:
+            enc = jnp.asarray(cipher.decrypt_values_np(ctx, sk, glob.ct))
+        merged = np.asarray(packing.merge_by_mask(enc, glob.plain, part),
+                            dtype=np.float32)
+        # f32 bit pattern, not value conversion: encode_kats casts to u32
+        out[f"{name}/selective_merged"] = merged.view(np.uint32)
     return out
 
 

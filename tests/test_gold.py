@@ -24,7 +24,8 @@ def golden():
 
 def test_golden_file_covers_every_case(golden):
     ops_per_ctx = {"ntt_fwd", "ntt_inv", "keygen_sk", "encrypt_seeded",
-                   "encrypt_pk", "weighted_sum"}
+                   "encrypt_pk", "weighted_sum", "selective_wire",
+                   "selective_agg", "selective_merged"}
     want = {f"{c}/{op}" for c in gold.KAT_CONTEXTS for op in ops_per_ctx}
     assert set(golden) == want
 

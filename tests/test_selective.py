@@ -1,0 +1,205 @@
+"""Selective-aggregation conformance: the full selective pipeline (mask ->
+partition -> seeded wire frames -> streaming aggregation -> recover) is
+bit-identical between the single-device engine and 1/2/4-device ShardedHe
+meshes on every kernel backend, the plaintext partition rides the wire
+unencrypted-but-quantized exactly as specced, and HE mask agreement
+reproduces the clear-text mask for both `top_p` and the paper's `recipe`.
+
+tests/conftest.py forces 4 simulated host devices, so every mesh case runs
+under plain tier-1.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import packing, secure_agg, selection
+from repro.core.ckks import cipher
+from repro.core.ckks import params as ckks_params
+from repro.core.ckks.sharded import ShardedHe
+from repro.core.secure_agg import AggregatorConfig, SelectiveHEAggregator
+from repro.kernels import ops
+from repro.launch.mesh import make_he_mesh
+from repro.wire import compress as wire_compress
+from repro.wire import format as wf
+from repro.wire import stream as ws
+
+WEIGHTS = [0.25, 0.75]
+
+
+def _ctx():
+    return ckks_params.make_test_context(n_poly=64, n_limbs=2, delta_bits=20)
+
+
+def _params(rng):
+    """302 params over 4 leaves -> ragged chunking at slots=32."""
+    return {
+        "emb": rng.randn(12, 8).astype(np.float32),
+        "w1": rng.randn(9, 11).astype(np.float32),
+        "b1": rng.randn(37).astype(np.float32),
+        "head": rng.randn(10, 7).astype(np.float32),
+    }
+
+
+def _engine(ctx, n_dev):
+    if jax.device_count() < n_dev:
+        pytest.skip(f"needs {n_dev} host devices, have "
+                    f"{jax.device_count()} (set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+    return ShardedHe(ctx, make_he_mesh(ctx.n_limbs, n_dev))
+
+
+@pytest.fixture(params=["ref", "pallas", "pallas4"])
+def backend(request):
+    old = {op: ops.get_backend(op) for op in ops.OPS}
+    ops.set_backend(request.param)
+    yield request.param
+    for op, name in old.items():
+        ops.set_backend(name, op=op)
+
+
+def _setup(ctx, p=0.3, strategy="top_p"):
+    rng = np.random.RandomState(7)
+    g0 = _params(rng)
+    spec = packing.make_flat_spec(g0)
+    sens = rng.rand(spec.total)
+    mask = selection.build_mask(sens, strategy, p, offsets=spec.offsets,
+                                sizes=spec.sizes)
+    part = packing.make_partition(mask, ctx.slots)
+    agg = SelectiveHEAggregator(ctx, spec, part,
+                                AggregatorConfig(p_ratio=p, strategy=strategy))
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    vecs = [rng.randn(spec.total).astype(np.float32) for _ in range(2)]
+    return spec, part, agg, sk, pk, vecs
+
+
+def _blobs(ctx, agg, sk, vecs, sharded=None, plain_codec="i8"):
+    """Selective round, client half: seeded protect -> wire frames."""
+    out = []
+    for i, v in enumerate(vecs):
+        a_seed = 7_000 + i
+        tree = packing.unflatten_params(jnp.asarray(v), agg.spec)
+        upd = agg.client_protect_seeded(
+            tree, sk, jax.random.fold_in(jax.random.PRNGKey(3), i), a_seed,
+            sharded=sharded)
+        sct = wire_compress.seed_compress(upd.ct, a_seed)
+        out.append(ws.pack_update_frames(upd, cid=i, n_samples=i + 1, rnd=0,
+                                         seeded=sct, plain_codec=plain_codec))
+    return out
+
+
+def _aggregate_recover(ctx, agg, sk, blobs, sharded=None):
+    ing = ws.StreamIngest(ctx, sharded=sharded)
+    for b, w in zip(blobs, WEIGHTS):
+        ing.ingest(b, w)
+    glob = ing.finalize()
+    return np.asarray(agg.client_recover(glob, sk))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end bit parity: single-device vs sharded meshes, all backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_selective_round_bitexact_across_meshes(n_dev, backend):
+    ctx = _ctx()
+    _, part, agg, sk, _, vecs = _setup(ctx)
+    assert 1 < part.n_enc < part.n_total          # genuinely selective
+    assert part.n_enc % ctx.slots != 0            # ragged last chunk
+
+    blobs_ref = _blobs(ctx, agg, sk, vecs, sharded=None)
+    rec_ref = _aggregate_recover(ctx, agg, sk, blobs_ref, sharded=None)
+
+    eng = _engine(ctx, n_dev)
+    blobs_sh = _blobs(ctx, agg, sk, vecs, sharded=eng)
+    # the sharded encrypt path emits byte-identical wire frames ...
+    assert blobs_sh == blobs_ref
+    # ... and the sharded streaming aggregation recovers the bit-identical
+    # merged model vector
+    rec_sh = _aggregate_recover(ctx, agg, sk, blobs_sh, sharded=eng)
+    np.testing.assert_array_equal(rec_sh, rec_ref)
+
+
+def test_selective_round_recovers_weighted_average(backend):
+    ctx = _ctx()
+    _, _, agg, sk, _, vecs = _setup(ctx)
+    rec = _aggregate_recover(ctx, agg, sk, _blobs(ctx, agg, sk, vecs))
+    expect = sum(w * v for w, v in zip(WEIGHTS, vecs))
+    # exact to CKKS noise on the encrypted partition, to the i8 step on the
+    # plain one
+    tol = 0.02 * float(np.max(np.abs(expect))) + 1e-3
+    assert float(np.max(np.abs(rec - expect))) < tol
+
+
+# ---------------------------------------------------------------------------
+# plain partition on the wire: unencrypted but quantized as specced
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec,dtype", [("i8", np.int8), ("f16", np.float16),
+                                         ("f32", np.float32)])
+def test_plain_partition_bytes_quantized_not_encrypted(codec, dtype):
+    ctx = _ctx()
+    _, part, agg, sk, _, vecs = _setup(ctx)
+    blob = _blobs(ctx, agg, sk, vecs, plain_codec=codec)[0]
+
+    segs = [payload for ftype, _, payload in wf.iter_frames(blob)
+            if ftype == wf.T_PLAIN_SEGMENT]
+    assert len(segs) == 1
+    arr, got_codec, qscale = wf._parse_plain_segment(segs[0])
+    assert got_codec == codec and arr.dtype == dtype
+
+    # the segment is exactly quantize_plain of the plain partition — no key
+    # material involved; anyone on the wire reads it back
+    plain_expect = np.asarray(vecs[0])[part.plain_idx]
+    q_expect, s_expect = wire_compress.quantize_plain(plain_expect, codec)
+    assert qscale == s_expect
+    np.testing.assert_array_equal(np.asarray(arr), q_expect)
+    deq = wire_compress.dequantize_plain(arr, codec, qscale)
+    step = (np.max(np.abs(plain_expect)) / 127.0) if codec == "i8" else 1e-2
+    np.testing.assert_allclose(deq, plain_expect, atol=step + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# HE mask agreement reproduces the clear mask (top_p AND recipe)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["top_p", "recipe", "per_layer"])
+def test_agree_mask_matches_clear_selection(strategy):
+    ctx = _ctx()
+    rng = np.random.RandomState(11)
+    spec = packing.make_flat_spec(_params(rng))
+    sk, pk = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    # well-separated sensitivities (integer gaps >> CKKS noise) so the HE
+    # aggregate cannot flip the selection order
+    base = rng.permutation(spec.total).astype(np.float64)
+    sens = [base + 0.125, base - 0.125]            # clients agree on average
+    m_he = secure_agg.agree_mask(
+        ctx, pk, sk, sens, [0.5, 0.5], 0.3, jax.random.PRNGKey(5),
+        strategy=strategy, offsets=spec.offsets, sizes=spec.sizes)
+    m_clear = selection.build_mask(base, strategy, 0.3, offsets=spec.offsets,
+                                   sizes=spec.sizes)
+    np.testing.assert_array_equal(m_he, m_clear)
+    if strategy == "recipe":
+        # paper's recipe: first and last leaves always fully covered
+        assert m_he[spec.offsets[0]: spec.offsets[0] + spec.sizes[0]].all()
+        assert m_he[spec.offsets[-1]:
+                    spec.offsets[-1] + spec.sizes[-1]].all()
+
+
+def test_orchestrator_routes_recipe_strategy():
+    """FLTask.agree_encryption_mask with strategy='recipe' builds a
+    partition that fully covers the first and last model leaves."""
+    from test_fl import tiny_task
+
+    task = tiny_task(n_clients=2)
+    task.agg_cfg = AggregatorConfig(p_ratio=0.1, strategy="recipe")
+    agg = task.agree_encryption_mask()
+    spec = agg.spec
+    mask = np.zeros(spec.total, dtype=bool)
+    mask[agg.part.enc_idx] = True
+    assert mask[spec.offsets[0]: spec.offsets[0] + spec.sizes[0]].all()
+    assert mask[spec.offsets[-1]: spec.offsets[-1] + spec.sizes[-1]].all()
+    assert 0 < agg.part.n_enc < spec.total

@@ -21,7 +21,11 @@ Checks (default mode — exit nonzero on any failure):
      REPRO_OBS / REPRO_OBS_TRACE plus a tools/round_report.py pointer,
      and the DESIGN.md §11 obs section;
   7. the autotuner stays documented: README `REPRO_HE_TUNE_CACHE` row +
-     `benchmarks.run tune` pointer, and the DESIGN.md §12 section.
+     `benchmarks.run tune` pointer, and the DESIGN.md §12 section;
+  8. the selective pipeline stays documented: README `benchmarks.run
+     selective` pointer + rendered BENCH_selective table + the
+     REPRO_WIRE_VERSION env row, and the DESIGN.md §13 section (mask
+     agreement -> partition -> wire -> merge, overhead accounting).
 
 `--write` regenerates the README tables in place between the
 BENCH_TABLES_START/END markers instead of failing on drift.
@@ -188,6 +192,43 @@ def render_bench_tables() -> str:
             f"{r['backend']} | {', '.join(bits)} | "
             f"{r['default_ms']:.2f} | {r['tuned_ms']:.2f} | "
             f"{r['speedup']:.2f}x | {r['candidates']} ({r['pruned']}) |")
+    out.append("")
+
+    sel_path = os.path.join(ROOT, "BENCH_selective.json")
+    sel = json.load(open(sel_path))
+    big = sel["models"][-1]
+    out.append(
+        f"**Selective encryption end to end** (`benchmarks/run.py "
+        f"selective`; {big['label']}, {big['n_params']/1e6:.1f}M params, "
+        f"{big['n_clients']} clients, N={sel['ctx']['n_poly']}, "
+        f"L={sel['ctx']['n_limbs']}, seeded uplink, plain codec "
+        f"`{sel['plain_codec']}`, mesh {sel['mesh']['data']} x "
+        f"{sel['mesh']['model']}; DESIGN.md §13):\n")
+    out.append("| strategy | p | cts | uplink B/client | encrypt s | "
+               "aggregate s | decrypt s | bytes vs p=1 | "
+               "enc+agg time vs p=1 |")
+    out.append("|----------|--:|----:|----------------:|----------:|"
+               "-----------:|----------:|-------------:|"
+               "--------------------:|")
+    for r in big["rows"]:
+        out.append(
+            f"| {r['strategy']} | {r['p']:.2f} | {r['n_cts']} | "
+            f"{r['uplink_B_per_client']:,} | {r['encrypt_s']:.3f} | "
+            f"{r['aggregate_s']:.3f} | {r['decrypt_s']:.3f} | "
+            f"{r['bytes_ratio_vs_p1']:.1f}x | "
+            f"{r['time_ratio_vs_p1']:.1f}x |")
+    out.append("")
+    out.append(
+        "**Extrapolated selective uplink at the paper's scales** (closed "
+        "form from the measured per-chunk / per-plain-param wire costs "
+        "above):\n")
+    out.append("| model | params | p | est uplink MB/client | vs p=1 |")
+    out.append("|-------|-------:|--:|---------------------:|-------:|")
+    for r in sel["extrapolation"]:
+        out.append(
+            f"| {r['scale']} | {r['n_params']/1e6:.0f}M | {r['p']:.2f} | "
+            f"{r['est_uplink_MB_per_client']:.1f} | "
+            f"{r['bytes_ratio_vs_p1']:.1f}x |")
     return "\n".join(out) + "\n"
 
 
@@ -313,6 +354,36 @@ def check_tune_docs() -> list[str]:
     return errors
 
 
+def check_selective_docs() -> list[str]:
+    """The selective pipeline must stay documented: README needs a
+    `benchmarks.run selective` pointer and the `REPRO_WIRE_VERSION` env
+    row (the wire knob the partitioned uplink rides on); DESIGN.md needs
+    the §13 section covering mask agreement -> partition -> wire -> merge
+    and the overhead accounting."""
+    errors = []
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    if "benchmarks.run selective" not in readme:
+        errors.append("README.md: selective docs no longer point at "
+                      "`benchmarks.run selective`")
+    if not any(ln.startswith("| `REPRO_WIRE_VERSION")
+               for ln in readme.splitlines()):
+        errors.append("README.md: missing the `REPRO_WIRE_VERSION` row in "
+                      "the 'Environment variables & flags' table")
+    design = open(os.path.join(ROOT, "DESIGN.md")).read()
+    sec = re.search(r"^## §13 .*?(?=\n## |\Z)", design,
+                    re.MULTILINE | re.DOTALL)
+    if not sec:
+        errors.append("DESIGN.md: missing the '## §13' selective-pipeline "
+                      "section")
+        return errors
+    for needed in ("agree_sensitivity", "build_mask", "MaskPartition",
+                   "plain_codec", "merge_by_mask", "overhead"):
+        if needed not in sec.group(0):
+            errors.append(f"DESIGN.md §13: selective section no longer "
+                          f"covers '{needed}'")
+    return errors
+
+
 def check_or_write_tables(write: bool) -> list[str]:
     path = os.path.join(ROOT, "README.md")
     text = open(path).read()
@@ -398,6 +469,7 @@ def main() -> int:
     errors += check_env_table()
     errors += check_obs_docs()
     errors += check_tune_docs()
+    errors += check_selective_docs()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
         errors += check_gold_kats()

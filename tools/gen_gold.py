@@ -5,7 +5,9 @@
     PYTHONPATH=src python tools/gen_gold.py --check    # verify only (CI)
 
 The vectors (tests/golden/ckks_kats.json) pin NTT fwd/inv, pk + seeded
-encrypt, keygen, and weighted_sum outputs for fixed keys/params on the
+encrypt, keygen, weighted_sum, and the selective partitioned-update path
+(fixed-mask uplink wire bytes, streamed aggregation, merged recovery)
+for fixed keys/params on the
 `ref` backend; tests/test_gold.py asserts every backend ("ref", "pallas",
 "pallas4") reproduces them bit-exactly.  Only regenerate after an
 INTENTIONAL stream/format change (e.g. a new sampling order) — the whole
