@@ -566,6 +566,16 @@ def bench_selective(smoke: bool = False):
     run_selective(smoke=smoke)
 
 
+def bench_serve(smoke: bool = False):
+    """Aggregation-service sustained updates/sec (benchmarks/serve.py):
+    10k simulated clients per round, partial quorum (seal at target,
+    stragglers dropped), background worker folding round r while round
+    r+1 submits; full mode writes BENCH_serve.json."""
+    from benchmarks.serve import run_serve
+
+    run_serve(smoke=smoke)
+
+
 ALL = {
     "table4": bench_table4,
     "table6": bench_table6,
@@ -583,6 +593,7 @@ ALL = {
     "tune": bench_tune,
     "roofline": bench_roofline,
     "selective": bench_selective,
+    "serve": bench_serve,
 }
 
 
@@ -615,7 +626,7 @@ def main() -> None:
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help="benchmark modes to run (default: all)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tune/selective modes: tiny sweep, no repo "
+                    help="tune/selective/serve modes: tiny sweep, no repo "
                          "artifacts (CI exercises the full code path)")
     args = ap.parse_args()
     names = args.modes or list(ALL)
@@ -624,7 +635,7 @@ def main() -> None:
         ap.error(f"unknown mode(s) {unknown}; choose from {list(ALL)}")
     for n in names:
         t0 = time.time()
-        if n in ("tune", "selective"):
+        if n in ("tune", "selective", "serve"):
             ALL[n](smoke=args.smoke)
         else:
             ALL[n]()

@@ -1,2 +1,2 @@
 from repro.ckpt.store import (CheckpointManager, save_checkpoint,
-                              restore_checkpoint, latest_step)
+                              restore_checkpoint, latest_step, read_manifest)

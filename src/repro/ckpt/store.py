@@ -13,11 +13,29 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import tempfile
 
 import jax
 import numpy as np
+
+# only exactly step_<digits> counts as a checkpoint: a crash-orphaned
+# .tmp_ckpt_* dir, a stray "step_final" note, or any other junk in the
+# checkpoint root must never break latest_step / rotation
+_STEP_DIR = re.compile(r"^step_(\d+)$")
+
+
+def _step_numbers(path: str) -> list[int]:
+    """Sorted step numbers of the well-formed step_<N> dirs under path."""
+    if not os.path.isdir(path):
+        return []
+    steps = []
+    for d in os.listdir(path):
+        m = _STEP_DIR.match(d)
+        if m and os.path.isdir(os.path.join(path, d)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
 
 
 def _flatten_with_names(tree):
@@ -51,11 +69,26 @@ def save_checkpoint(path: str, step: int, tree, extra: dict | None = None):
 
 
 def latest_step(path: str) -> int | None:
-    if not os.path.isdir(path):
+    """Highest step with a well-formed step_<N> dir, or None.  Ignores
+    orphaned temp dirs and non-numeric step_* strays (a crashed writer
+    must never wedge the next restore)."""
+    steps = _step_numbers(path)
+    return steps[-1] if steps else None
+
+
+def read_manifest(path: str, step: int | None = None) -> dict | None:
+    """Manifest dict of one checkpoint ({"step", "names", "extra"}), or
+    None when absent.  Lets a resuming service read its json round state
+    BEFORE it can construct the tree_like that restore_checkpoint needs
+    (the extra records which accumulator trees the npz payload holds)."""
+    step = latest_step(path) if step is None else step
+    if step is None:
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(path)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+    manifest = os.path.join(path, f"step_{step:08d}", "manifest.json")
+    if not os.path.exists(manifest):
+        return None
+    with open(manifest) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(path: str, tree_like, step: int | None = None):
@@ -89,10 +122,6 @@ class CheckpointManager:
         return restore_checkpoint(self.path, tree_like, step)
 
     def _rotate(self):
-        if not os.path.isdir(self.path):
-            return
-        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.path)
-                       if d.startswith("step_"))
-        for s in steps[: -self.keep]:
+        for s in _step_numbers(self.path)[: -self.keep]:
             shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
                           ignore_errors=True)

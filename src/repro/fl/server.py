@@ -101,19 +101,20 @@ class FLServer:
     def submit_async(self, r: ReceivedUpdate,
                      current_round: int) -> ProtectedUpdate | None:
         """Buffer an update; aggregate + flush when the buffer fills.
-        Staleness discount: w *= 0.5 ** (staleness / half_life)."""
+        Staleness discount: w *= 0.5 ** (staleness / half_life) — the
+        shared weight law in repro.serve.quorum (the aggregation service
+        uses the same expressions; tests pin both paths)."""
+        from repro.serve import quorum as serve_quorum
+
         self._buffer.append(r)
         if len(self._buffer) < self.buffer_size:
             return None
-        ws = []
-        for u in self._buffer:
-            stale = max(0, current_round - u.round_sent)
-            ws.append(u.n_samples * 0.5 ** (stale / self.staleness_half_life))
-        ws = np.asarray(ws, dtype=np.float64)
-        ws = ws / ws.sum()
+        ws = serve_quorum.staleness_weights(
+            [u.n_samples for u in self._buffer],
+            [u.round_sent for u in self._buffer],
+            current_round, self.staleness_half_life)
         out = self.agg.server_aggregate([u.update for u in self._buffer],
-                                        [float(w) for w in ws],
-                                        sharded=self.sharded)
+                                        ws, sharded=self.sharded)
         self._buffer.clear()
         self.rounds_aggregated += 1
         return out

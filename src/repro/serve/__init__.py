@@ -1,0 +1,29 @@
+"""repro.serve — the async encrypted aggregation service (DESIGN.md §14).
+
+The serving layer the ROADMAP's "async production aggregation service"
+item describes: a round state machine (`service.AggregationService`)
+that drives `wire.stream.StreamIngest` asynchronously — accepting
+round r+1's updates while round r finalizes — with partial-quorum
+finalization (`quorum.QuorumPolicy`), atomic rejection of faulty or
+late updates, and accumulator + budget-ledger + round-state
+checkpointing through `ckpt/store.py` so a `kill -9` mid-round resumes
+bit-exactly.  `faults.py` is the service's adversary: a deterministic
+injector for wire faults (drop / duplicate / truncate / garbage /
+delay / reorder) and crash points between service transitions, used by
+tests/test_serve.py and benchmarks/serve.py.
+"""
+from repro.serve.faults import (FAULT_MODES, CRASH_POINTS, FaultInjector,
+                                SimulatedCrash, corrupt_blob)
+from repro.serve.quorum import (QuorumPolicy, normalized_weights,
+                                staleness_weights)
+from repro.serve.service import (AggregationService, RoundState, SubmitResult,
+                                 ST_DONE, ST_FAILED, ST_FOLDING, ST_OPEN,
+                                 ST_SEALED)
+
+__all__ = [
+    "AggregationService", "RoundState", "SubmitResult",
+    "ST_OPEN", "ST_SEALED", "ST_FOLDING", "ST_DONE", "ST_FAILED",
+    "QuorumPolicy", "normalized_weights", "staleness_weights",
+    "FAULT_MODES", "CRASH_POINTS", "FaultInjector", "SimulatedCrash",
+    "corrupt_blob",
+]

@@ -204,6 +204,9 @@ class StreamIngest:
         # n_chunks of one update.
         self._m_resident = obs.gauge("wire_ingest_resident_chunks", **lab)
         self._m_peak = obs.gauge("wire_ingest_peak_chunk_buffers", **lab)
+        # updates rejected (and atomically rolled back) by ingest(): the
+        # aggregation service's fault accounting reads this series
+        self._m_rejected = obs.counter("wire_ingest_rejected_updates", **lab)
 
     # -- legacy counter views (registry-backed) ------------------------------
 
@@ -222,6 +225,10 @@ class StreamIngest:
     @property
     def peak_chunk_buffers(self) -> int:
         return int(self._m_peak.value)
+
+    @property
+    def rejected_updates(self) -> int:
+        return int(self._m_rejected.value)
 
     # -- internals ----------------------------------------------------------
 
@@ -399,6 +406,7 @@ class StreamIngest:
             if acc_was_uninit:
                 # the rejected chunks must not pin the limb/poly dims either
                 self._acc_ct = None
+            self._m_rejected.inc()
             if isinstance(e, wf.WireError):
                 raise
             # uniform rejection contract (fuzzed in tests/test_wire.py):
@@ -427,6 +435,68 @@ class StreamIngest:
             self.flush()
             self._fold_plain(np.asarray(upd.plain), "f32", 1.0, weight)
             self._m_clients.inc()
+
+    # -- checkpointing (repro.serve crash-safe resume) -----------------------
+
+    def export_state(self) -> tuple[dict, dict]:
+        """-> (arrays, meta): the full accumulator state as a
+        checkpointable pytree of numpy arrays plus a json-safe meta dict.
+
+        The split matches `ckpt.store.save_checkpoint(tree, extra)`:
+        arrays ride the npz payload, scalars the manifest.  Restoring via
+        `restore_state` and continuing is bit-exact — the modular
+        accumulator is exact integers and `acc_plain` is the literal f32
+        partial sum, so the resumed fold reproduces the uninterrupted
+        run's bits (tests/test_serve.py asserts it at every crash point).
+
+        Raises RuntimeError with unflushed chunks pending: flush() (or
+        ingest(), which flushes) before checkpointing.
+        """
+        if self._pending:
+            raise RuntimeError("cannot export StreamIngest state with "
+                               "unflushed chunks pending; call flush()")
+        idxs = sorted(self._acc_ct) if self._acc_ct else []
+        arrays = {
+            "chunk_idx": np.asarray(idxs, dtype=np.int32),
+            "acc_ct": (np.stack([np.asarray(self._acc_ct[i]) for i in idxs])
+                       if idxs else np.zeros((0, 2, 0, 0), dtype=np.uint32)),
+            "acc_plain": (np.asarray(self._acc_plain)
+                          if self._acc_plain is not None
+                          else np.zeros((0,), dtype=np.float32)),
+        }
+        meta = {
+            "in_scale": self._in_scale,
+            "has_plain": self._acc_plain is not None,
+            "clients": self.clients_ingested,
+            "bytes": self.bytes_ingested,
+            "launches": self.accum_launches,
+            "rejected": self.rejected_updates,
+        }
+        return arrays, meta
+
+    def restore_state(self, arrays: dict, meta: dict) -> None:
+        """Load a checkpointed accumulator (the export_state inverse) into
+        this EMPTY ingest; counters resume at their checkpointed values so
+        launch/byte accounting survives a restart."""
+        if self._acc_ct is not None or self._pending \
+                or self.clients_ingested:
+            raise RuntimeError("restore_state needs a fresh StreamIngest")
+        idxs = np.asarray(arrays["chunk_idx"]).tolist()
+        acc = np.asarray(arrays["acc_ct"])
+        if idxs:
+            self._n_limbs = int(acc.shape[-2])
+            self._n = int(acc.shape[-1])
+            self._acc_ct = {int(i): jnp.asarray(acc[j])
+                            for j, i in enumerate(idxs)}
+        if meta.get("has_plain"):
+            self._acc_plain = np.asarray(arrays["acc_plain"],
+                                         dtype=np.float32).copy()
+        if meta.get("in_scale") is not None:
+            self._in_scale = float(meta["in_scale"])
+        self._m_clients.inc(int(meta.get("clients", 0)))
+        self._m_bytes.inc(int(meta.get("bytes", 0)))
+        self._m_launches.inc(int(meta.get("launches", 0)))
+        self._m_rejected.inc(int(meta.get("rejected", 0)))
 
     def finalize(self) -> ProtectedUpdate:
         """-> aggregated ProtectedUpdate (ct scale = in_scale * delta).

@@ -1,0 +1,123 @@
+"""ckpt/store.py: save/restore round trips, rotation, crash hygiene.
+
+The aggregation service (repro/serve) trusts this store with mid-round
+accumulator state, so the crash corners get their own suite: a writer
+killed mid-checkpoint must leave latest_step/restore pointing at the last
+COMPLETE checkpoint, and junk in the checkpoint root (orphaned temp dirs,
+non-numeric step_* strays) must never wedge a restore.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.ckpt import store
+
+
+def tree(seed=0):
+    r = np.random.RandomState(seed)
+    return {"acc": r.randint(0, 2**32 - 1, size=(3, 2, 8)).astype(np.uint32),
+            "plain": r.randn(5).astype(np.float32),
+            "nested": {"w": r.randn(2, 2).astype(np.float64)}}
+
+
+def assert_tree_equal(a, b):
+    assert sorted(a) == sorted(b)
+    np.testing.assert_array_equal(a["acc"], b["acc"])
+    np.testing.assert_array_equal(a["plain"], b["plain"])
+    np.testing.assert_array_equal(a["nested"]["w"], b["nested"]["w"])
+
+
+def test_save_restore_roundtrip_bitexact(tmp_path):
+    t = tree()
+    extra = {"round": 3, "weights": [0.25, 0.75]}
+    store.save_checkpoint(str(tmp_path), 7, t, extra)
+    out, step, x = store.restore_checkpoint(str(tmp_path), tree(1))
+    assert step == 7 and x == extra
+    assert_tree_equal(out, t)
+    # dtypes survive (u32 residues must not round-trip through float)
+    assert out["acc"].dtype == np.uint32
+    assert out["plain"].dtype == np.float32
+
+
+def test_restore_absent_returns_nones(tmp_path):
+    assert store.restore_checkpoint(str(tmp_path), tree()) == (None,) * 3
+    assert store.latest_step(str(tmp_path)) is None
+    assert store.latest_step(str(tmp_path / "never_made")) is None
+    assert store.read_manifest(str(tmp_path)) is None
+
+
+def test_rotation_keeps_last_k(tmp_path):
+    mgr = store.CheckpointManager(str(tmp_path), keep=3)
+    for s in range(1, 8):
+        mgr.save(s, tree(s), {"s": s})
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == [f"step_{s:08d}" for s in (5, 6, 7)]
+    out, step, x = mgr.restore(tree())
+    assert step == 7 and x == {"s": 7}
+    assert_tree_equal(out, tree(7))
+
+
+def test_partial_write_crash_leaves_latest_intact(tmp_path):
+    """A writer killed mid-checkpoint leaves only a .tmp_ckpt_* dir; the
+    next reader must see the previous complete checkpoint untouched."""
+    store.save_checkpoint(str(tmp_path), 4, tree(4), {"ok": True})
+    # simulate the torn write: temp dir with a partial payload, no rename
+    torn = tmp_path / ".tmp_ckpt_torn"
+    torn.mkdir()
+    (torn / "payload.npz").write_bytes(b"\x00partial")
+    assert store.latest_step(str(tmp_path)) == 4
+    out, step, x = store.restore_checkpoint(str(tmp_path), tree())
+    assert step == 4 and x == {"ok": True}
+    assert_tree_equal(out, tree(4))
+    # rotation must also shrug at the orphan
+    mgr = store.CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(5, tree(5))
+    assert store.latest_step(str(tmp_path)) == 5
+
+
+@pytest.mark.parametrize("stray", ["step_final", "step_", "step_3b",
+                                   "step_00000009_old"])
+def test_latest_step_ignores_non_integer_step_dirs(tmp_path, stray):
+    store.save_checkpoint(str(tmp_path), 2, tree())
+    (tmp_path / stray).mkdir()
+    assert store.latest_step(str(tmp_path)) == 2
+    out, step, _ = store.restore_checkpoint(str(tmp_path), tree())
+    assert step == 2
+    assert_tree_equal(out, tree())
+
+
+def test_latest_step_ignores_step_named_files(tmp_path):
+    store.save_checkpoint(str(tmp_path), 1, tree())
+    (tmp_path / "step_00000099").write_text("not a dir")
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_read_manifest_latest_and_explicit(tmp_path):
+    store.save_checkpoint(str(tmp_path), 1, tree(), {"r": 1})
+    store.save_checkpoint(str(tmp_path), 2, tree(), {"r": 2})
+    assert store.read_manifest(str(tmp_path))["extra"] == {"r": 2}
+    m1 = store.read_manifest(str(tmp_path), step=1)
+    assert m1["extra"] == {"r": 1} and m1["step"] == 1
+    assert store.read_manifest(str(tmp_path), step=9) is None
+
+
+def test_save_overwrites_same_step_atomically(tmp_path):
+    store.save_checkpoint(str(tmp_path), 3, tree(0), {"v": "old"})
+    store.save_checkpoint(str(tmp_path), 3, tree(1), {"v": "new"})
+    out, step, x = store.restore_checkpoint(str(tmp_path), tree())
+    assert step == 3 and x == {"v": "new"}
+    assert_tree_equal(out, tree(1))
+    # exactly one complete step dir, no leftover temp dirs
+    entries = os.listdir(tmp_path)
+    assert entries == ["step_00000003"]
+
+
+def test_manifest_is_plain_json(tmp_path):
+    """The manifest must stay debuggable with nothing but a text editor."""
+    store.save_checkpoint(str(tmp_path), 5, tree(), {"round": 0})
+    with open(tmp_path / "step_00000005" / "manifest.json") as f:
+        m = json.load(f)
+    assert m["step"] == 5 and m["extra"] == {"round": 0}
+    assert sorted(m["names"]) == ["acc", "nested/w", "plain"]

@@ -229,6 +229,31 @@ def render_bench_tables() -> str:
             f"| {r['scale']} | {r['n_params']/1e6:.0f}M | {r['p']:.2f} | "
             f"{r['est_uplink_MB_per_client']:.1f} | "
             f"{r['bytes_ratio_vs_p1']:.1f}x |")
+    out.append("")
+
+    sv_path = os.path.join(ROOT, "BENCH_serve.json")
+    sv = json.load(open(sv_path))
+    c = sv["config"]
+    out.append(
+        f"**Async aggregation service** (`benchmarks/run.py serve`; "
+        f"{c['n_clients']:,} simulated clients/round, quorum target "
+        f"{c['target_clients']:,}, N={c['n_poly']}, L={c['n_limbs']}, "
+        f"{c['n_chunks']} chunks, {c['blob_bytes']:,} B/update, backend "
+        f"`{sv['backend']}`, worker-thread overlap on; DESIGN.md §14):\n")
+    out.append("| round | accepted | stragglers dropped | folded | "
+               "submit rate/s |")
+    out.append("|------:|---------:|-------------------:|-------:|"
+               "--------------:|")
+    for r in sv["rows"]:
+        out.append(
+            f"| {r['round']} | {r['accepted']:,} | "
+            f"{r['stragglers_dropped']:,} | {r['folded']:,} | "
+            f"{r['submit_rate']:,.0f} |")
+    out.append("")
+    out.append(f"Sustained end to end (submit + fold + finalize, "
+               f"{c['rounds']} rounds): "
+               f"**{sv['sustained_updates_per_s']:,.0f} updates/s** "
+               f"({sv['wall_s']:.1f}s wall).")
     return "\n".join(out) + "\n"
 
 
@@ -384,6 +409,40 @@ def check_selective_docs() -> list[str]:
     return errors
 
 
+def check_serve_docs() -> list[str]:
+    """The aggregation service must stay documented: README needs the
+    'Aggregation service quickstart' section with a runnable snippet and
+    `benchmarks.run serve` / tests/test_serve.py pointers; DESIGN.md
+    needs the §14 section covering the state machine, quorum semantics,
+    crash consistency, and the fault taxonomy."""
+    errors = []
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    if not re.search(r"^## Aggregation service quickstart", readme,
+                     re.MULTILINE):
+        errors.append("README.md: missing the 'Aggregation service "
+                      "quickstart' section")
+    if "benchmarks.run serve" not in readme:
+        errors.append("README.md: service docs no longer point at "
+                      "`benchmarks.run serve`")
+    if "tests/test_serve.py" not in readme:
+        errors.append("README.md: service docs no longer point at "
+                      "tests/test_serve.py")
+    design = open(os.path.join(ROOT, "DESIGN.md")).read()
+    sec = re.search(r"^## §14 .*?(?=\n## |\Z)", design,
+                    re.MULTILINE | re.DOTALL)
+    if not sec:
+        errors.append("DESIGN.md: missing the '## §14' aggregation-service "
+                      "section")
+        return errors
+    for needed in ("OPEN", "SEALED", "FOLDING", "FAILED", "min_clients",
+                   "REFOLD", "at-least-once", "SimulatedCrash",
+                   "export_state", "garbage"):
+        if needed not in sec.group(0):
+            errors.append(f"DESIGN.md §14: service section no longer "
+                          f"covers '{needed}'")
+    return errors
+
+
 def check_or_write_tables(write: bool) -> list[str]:
     path = os.path.join(ROOT, "README.md")
     text = open(path).read()
@@ -435,10 +494,11 @@ def _run_snippet(heading: str) -> list[str]:
 
 
 def run_quickstart() -> list[str]:
-    """Execute both README snippets: the encrypted-averaging quickstart and
-    the sharded-uplink quickstart (each is the first ```bash block after
-    its heading)."""
-    return _run_snippet(r"quickstart") + _run_snippet(r"sharded uplink")
+    """Execute the README snippets: the encrypted-averaging quickstart,
+    the sharded-uplink quickstart, and the aggregation-service quickstart
+    (each is the first ```bash block after its heading)."""
+    return (_run_snippet(r"quickstart") + _run_snippet(r"sharded uplink")
+            + _run_snippet(r"aggregation service"))
 
 
 def check_gold_kats() -> list[str]:
@@ -470,6 +530,7 @@ def main() -> int:
     errors += check_obs_docs()
     errors += check_tune_docs()
     errors += check_selective_docs()
+    errors += check_serve_docs()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
         errors += check_gold_kats()
