@@ -533,6 +533,124 @@ def bench_tune(smoke: bool = False):
                       "tuned_ms", "speedup", "candidates", "pruned"])
 
 
+def bench_uplink_hybrid(smoke: bool = False):
+    """Transcipher (hybrid-HE) thin-client uplink vs the seeded-CKKS
+    client: measured client-side encrypt wall-time, modeled client FLOPs,
+    and measured frame bytes, plus the bit-parity of the two aggregates
+    through StreamIngest (DESIGN.md §15).  Full mode writes
+    BENCH_uplink_hybrid.json (repo root); --smoke shrinks the shapes and
+    touches no repo artifacts.
+    """
+    import math
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import obs
+    from repro.core.ckks import cipher, encoding
+    from repro.core.ckks import params as ckks_params
+    from repro.core.ckks import transcipher as tc
+    from repro.wire import compress as wc
+    from repro.wire import stream as ws
+
+    if smoke:
+        n_poly, n_limbs, delta_bits, n_chunks, reps = 256, 2, 20, 2, 1
+    else:
+        n_poly, n_limbs, delta_bits, n_chunks, reps = 2048, 2, 24, 32, 5
+    ctx = ckks_params.make_context(n_poly=n_poly, n_limbs=n_limbs,
+                                   delta_bits=delta_bits)
+    sk, _pk = cipher.keygen(ctx, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    values = rng.randn(n_chunks, ctx.slots).astype(np.float32) * 0.05
+    plain = rng.randn(64).astype(np.float32)
+    vals_j = jnp.asarray(values)
+    key = jax.random.PRNGKey(7)
+    a_seed, cid, rnd = 9001, 0, 0
+
+    # modeled client arithmetic (documented, not measured): both paths pay
+    # the length-2N encode FFT (~5 n log2 n real flops); the seeded client
+    # additionally runs L forward NTTs per chunk (N/2 log2 N butterflies,
+    # ~8 int-ops each: one Montgomery modmul + two modadds) plus the RNS
+    # noise/rounding stack the model ignores — so the ratio is a floor.
+    fft_flops = 5.0 * (2 * n_poly) * math.log2(2 * n_poly)
+    ntt_flops = n_limbs * (n_poly / 2) * math.log2(n_poly) * 8
+    flops_seeded = n_chunks * (fft_flops + ntt_flops)
+    flops_masked = n_chunks * fft_flops
+
+    rows, per_derive = [], {}
+    for dname, derive in (("fold_chunk", wc.DERIVE_FOLD_CHUNK),
+                          ("ctr", wc.DERIVE_CTR)):
+        cm, sm = tc.provision(ctx, sk, key, a_seed, n_chunks, derive=derive)
+
+        def seeded_client():
+            return cipher.encrypt_values_seeded(ctx, sk, vals_j, key, a_seed,
+                                                derive=derive).data
+
+        def masked_client():
+            return tc.mask_values(ctx, cm, values)
+
+        t_seeded = _timeit(seeded_client, reps=reps)
+        t_masked = _timeit(masked_client, reps=reps)
+
+        # measured wire frames, both directions of the acceptance invariant
+        coeffs = jnp.asarray(encoding.encode_np(values, ctx))
+        ct_ref = cipher.encrypt_coeffs_seeded(ctx, sk, coeffs, key, a_seed,
+                                              derive=derive)
+        from repro.core.secure_agg import ProtectedUpdate
+        blob_seeded = ws.pack_update_frames(
+            ProtectedUpdate(ct=ct_ref, plain=jnp.asarray(plain)),
+            cid=cid, n_samples=1, rnd=rnd,
+            seeded=wc.seed_compress(ct_ref, a_seed, derive))
+        mc = wc.MaskedChunk(masked=masked_client(), a_seed=a_seed,
+                            scale=cm.scale, derive=derive)
+        blob_masked = ws.pack_masked_update_frames(
+            mc, wc.seed_compress(cm.seed_ct, cm.escrow_a_seed, derive),
+            plain, cid=cid, n_samples=1, rnd=rnd)
+
+        ing_a = ws.StreamIngest(ctx)
+        ing_a.ingest(blob_seeded, 1.0)
+        ing_b = ws.StreamIngest(ctx,
+                                transcipher_materials={(cid, rnd): sm})
+        ing_b.ingest(blob_masked, 1.0)
+        parity = bool(np.array_equal(
+            np.asarray(ing_a.finalize().ct.data),
+            np.asarray(ing_b.finalize().ct.data)))
+
+        r = {
+            "derive": dname,
+            "seeded_encrypt_ms": t_seeded * 1e3,
+            "masked_encrypt_ms": t_masked * 1e3,
+            "encrypt_speedup": t_seeded / t_masked,
+            "client_mflops_seeded": flops_seeded / 1e6,
+            "client_mflops_masked": flops_masked / 1e6,
+            "seeded_B": len(blob_seeded),
+            "masked_B": len(blob_masked),
+            "uplink_ratio": len(blob_masked) / len(blob_seeded),
+            "model_ct_B": tc.seeded_uplink_bytes(n_chunks, n_limbs, n_poly),
+            "model_masked_B": tc.masked_uplink_bytes(n_chunks, n_poly),
+            "bit_parity": parity,
+        }
+        assert parity, f"transcipher/seeded aggregate bits differ ({dname})"
+        rows.append(r)
+        per_derive[dname] = r
+
+    if not smoke:
+        root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+        with open(os.path.join(root, "BENCH_uplink_hybrid.json"), "w") as f:
+            json.dump({"bench": "uplink_hybrid",
+                       "provenance": obs.provenance(),
+                       "n_poly": n_poly, "n_limbs": n_limbs,
+                       "n_chunks": n_chunks, "delta_bits": delta_bits,
+                       "reps": reps, "per_derive": per_derive}, f, indent=2)
+            f.write("\n")
+
+    _rows("Hybrid (transcipher) uplink vs seeded CKKS client "
+          f"(N={n_poly}, L={n_limbs}, chunks={n_chunks}"
+          + (" [smoke — no artifacts]" if smoke
+             else "; BENCH_uplink_hybrid.json written") + ")",
+          rows)
+
+
 def bench_roofline():
     """Summarize dry-run artifacts (run repro.launch.dryrun first)."""
     art_dir = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -590,6 +708,7 @@ ALL = {
     "wire": bench_wire,
     "agg-sharded": bench_agg_sharded,
     "uplink-sharded": bench_uplink_sharded,
+    "uplink-hybrid": bench_uplink_hybrid,
     "tune": bench_tune,
     "roofline": bench_roofline,
     "selective": bench_selective,
@@ -622,7 +741,10 @@ def main() -> None:
           "      themselves via subprocess workers)\n"
           "  REPRO_WIRE_VERSION=1|2\n"
           "      pin the wire emit version (default 2; 1 = legacy layout\n"
-          "      for staged rollouts)")
+          "      for staged rollouts)\n"
+          "  REPRO_UPLINK_MODE=auto|full|seeded|transcipher\n"
+          "      default uplink path for FLClient.protect_and_pack\n"
+          "      (transcipher = thin-client hybrid-HE, DESIGN.md §15)")
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help="benchmark modes to run (default: all)")
     ap.add_argument("--smoke", action="store_true",
@@ -635,7 +757,7 @@ def main() -> None:
         ap.error(f"unknown mode(s) {unknown}; choose from {list(ALL)}")
     for n in names:
         t0 = time.time()
-        if n in ("tune", "selective", "serve"):
+        if n in ("tune", "selective", "serve", "uplink-hybrid"):
             ALL[n](smoke=args.smoke)
         else:
             ALL[n]()

@@ -88,16 +88,67 @@ def _gaussian_residues(key, shape, qs, sigma: float):
                                     jnp.asarray(qs)[:, None])  # [..., L, N]
 
 
-def _chunk_keys(key, start: int, count: int):
-    """Per-chunk PRNG keys for ciphertext chunks [start, start+count).
+# ---------------------------------------------------------------------------
+# per-chunk seed-derivation registry (wire-v2 derive ids, DESIGN.md §9.2)
+# ---------------------------------------------------------------------------
+#
+# A seeded ciphertext's public c1 = a stream is expanded per chunk from a
+# base PRNG key; the DERIVE id carried by wire-v2 SEEDED_CIPHERTEXT frames
+# names HOW chunk i's key is derived from (base, i).  Both sides — client
+# encrypt (here and in sharded.py) and server expand_a_rows — dispatch
+# through this registry, so adding an algorithm is one entry.  Only the
+# public a stream is derive-governed; the secret noise stream always uses
+# fold_in (it never crosses the wire).
 
-    Chunk i's key is fold_in(key, i) with i the GLOBAL chunk index, so any
-    contiguous slice of the chunk axis can re-derive exactly its own keys —
-    the property that lets the sharded engine split the batch across the
-    `data` mesh axis without changing a single sampled bit (DESIGN.md §9).
-    """
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
-        jnp.arange(start, start + count))
+DERIVE_FOLD_CHUNK = 1    # chunk i's key = fold_in(base, i)
+DERIVE_CTR = 2           # chunk i's key = [base_hi, base_lo + i] (counter)
+
+
+def _fold_chunk_keys(base, start, count: int):
+    """DERIVE_FOLD_CHUNK: key for chunk i is fold_in(base, i) with i the
+    GLOBAL chunk index, so any contiguous slice of the chunk axis can
+    re-derive exactly its own keys — the property that lets the sharded
+    engine split the batch across the `data` mesh axis without changing a
+    single sampled bit (DESIGN.md §9).  `start` may be a traced offset
+    (the sharded client passes axis_index * b_loc)."""
+    ids = jnp.asarray(start) + jnp.arange(count)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(ids)
+
+
+def _ctr_keys(base, start, count: int):
+    """DERIVE_CTR: chunk i's key is the raw uint32[2] block
+    [base_hi, base_lo + i] — a textbook counter-mode input block over the
+    base key's words (wrap is mod 2^32, matching the u32 wire id space).
+    Cheaper to derive than a fold_in chain (no hash per chunk) and equally
+    shard-invariant: the counter is the GLOBAL chunk index."""
+    base = jnp.asarray(base, dtype=jnp.uint32)
+    ctr = jnp.asarray(start, jnp.uint32) + jnp.arange(count,
+                                                      dtype=jnp.uint32)
+    hi = jnp.broadcast_to(base[0], ctr.shape)
+    return jnp.stack([hi, base[1] + ctr], axis=-1)
+
+
+DERIVE_KEYFNS = {DERIVE_FOLD_CHUNK: _fold_chunk_keys,
+                 DERIVE_CTR: _ctr_keys}
+DERIVES = tuple(sorted(DERIVE_KEYFNS))
+
+
+def derive_chunk_keys(base, start, count: int,
+                      derive: int = DERIVE_FOLD_CHUNK):
+    """Per-chunk PRNG keys for ciphertext chunks [start, start+count),
+    derived by the registered algorithm `derive`.  Unknown ids raise the
+    actionable registry error (the wire layer re-raises it as WireError)."""
+    fn = DERIVE_KEYFNS.get(derive)
+    if fn is None:
+        raise ValueError(
+            f"unknown seed-derivation id {derive}; this build implements "
+            f"{DERIVES} (DESIGN.md §9.2)")
+    return fn(base, start, count)
+
+
+def _chunk_keys(key, start, count: int):
+    """Noise-stream chunk keys: always fold_in (never wire-negotiated)."""
+    return _fold_chunk_keys(key, start, count)
 
 
 def _uniform_residues(key, shape, qs):
@@ -222,65 +273,73 @@ def encrypt_values(ctx: CkksContext, pk: dict, values, key) -> Ciphertext:
     return Ciphertext(data=data, scale=float(ctx.delta))
 
 
-def expand_a_rows(ctx: CkksContext, a_seed: int, start: int, count: int):
+def expand_a_rows(ctx: CkksContext, a_seed: int, start: int, count: int,
+                  derive: int = DERIVE_FOLD_CHUNK):
     """Deterministic uniform `a` rows [start, start+count) from a public seed.
 
-    Row i is expanded from fold_in(PRNGKey(a_seed), i) so a receiver can
-    regenerate any single chunk independently (streaming ingest never needs
-    the whole batch).  Returns u32[count, L, N] in NTT domain (uniform
-    residues are uniform in either domain; both sides just agree on this
-    convention, matching keygen's treatment of `a`).
+    Row i is expanded from derive_chunk_keys(PRNGKey(a_seed), ...)[i] —
+    the wire-negotiated derive algorithm — so a receiver can regenerate any
+    single chunk independently (streaming ingest never needs the whole
+    batch).  Returns u32[count, L, N] in NTT domain (uniform residues are
+    uniform in either domain; both sides just agree on this convention,
+    matching keygen's treatment of `a`).
     """
     base = jax.random.PRNGKey(int(a_seed))
-    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
-        jnp.arange(start, start + count))
+    keys = derive_chunk_keys(base, start, count, derive)
     return jax.vmap(
         lambda k: _uniform_residues(k, (ctx.n_poly,), ctx.tables.qs))(keys)
     # [count, L, N]
 
 
-def expand_a(ctx: CkksContext, a_seed: int, batch: int):
+def expand_a(ctx: CkksContext, a_seed: int, batch: int,
+             derive: int = DERIVE_FOLD_CHUNK):
     """Full-batch `a` expansion (rows 0..batch-1)."""
-    return expand_a_rows(ctx, a_seed, 0, batch)
+    return expand_a_rows(ctx, a_seed, 0, batch, derive)
 
 
 def encrypt_coeffs_seeded(ctx: CkksContext, sk: dict, m_coeff, key,
-                          a_seed: int, scale: float | None = None) -> Ciphertext:
+                          a_seed: int, scale: float | None = None,
+                          derive: int = DERIVE_FOLD_CHUNK) -> Ciphertext:
     """Secret-key encryption with seed-expandable c1 (uplink compression).
 
     ct = (c0, c1) with c1 = a = PRG(a_seed) and c0 = -(a s) + e + m, so the
     wire only needs (a_seed, c0) — half the fresh-ciphertext bytes.  Chunk
-    b's c1 row expands from fold_in(PRNGKey(a_seed), b): the wire-v2
-    DERIVE_FOLD_CHUNK algorithm (DESIGN.md §9.2), matched bit for bit by
-    expand_a_rows and by the sharded client.  The decryption identity
-    c0 + c1 s = m + e matches the public-key path, so seeded and pk
-    ciphertexts mix freely under the homomorphic ops.  `a_seed` must be
-    unique per (client, round); reuse leaks m1 - m2.
+    b's c1 row expands per the wire-v2 `derive` algorithm (the registry
+    above; DESIGN.md §9.2), matched bit for bit by expand_a_rows and by the
+    sharded client.  The decryption identity c0 + c1 s = m + e matches the
+    public-key path, so seeded and pk ciphertexts mix freely under the
+    homomorphic ops.  `a_seed` must be unique per (client, round); reuse
+    leaks m1 - m2.
     """
     scale = float(scale if scale is not None else ctx.delta)
     # PRNGKey is built host-side: a_seed is 64-bit on the wire, and the key
     # must match the server-side expand_a_rows stream exactly
     a_base = jax.random.PRNGKey(int(a_seed))
     data = _encrypt_seeded_graph(ctx, ops.backend_token(), sk["s_mont"],
-                                 m_coeff, key, a_base)
+                                 m_coeff, key, a_base, int(derive))
     return Ciphertext(data=data, scale=scale)
 
 
-@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+@functools.partial(jax.jit, static_argnames=("ctx", "token", "derive"))
 def _encrypt_seeded_graph(ctx: CkksContext, token, s_mont, m_coeff, key,
-                          a_base):
-    return _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base)
+                          a_base, derive: int = DERIVE_FOLD_CHUNK):
+    return _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base,
+                                    derive=derive)
 
 
 def _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base,
-                             chunk_start: int = 0):
+                             chunk_start: int = 0,
+                             derive: int = DERIVE_FOLD_CHUNK):
     """Shared trace of the seeded secret-key encrypt graph.
 
     Both streams are per-chunk (wire-v2 derivation, DESIGN.md §9):
-      c1 chunk i = uniform from fold_in(a_base, i)  — public, matches the
-          server-side expand_a_rows regeneration;
+      c1 chunk i = uniform from derive_chunk_keys(a_base, ...)[i] — public,
+          matches the server-side expand_a_rows regeneration for the SAME
+          derive id;
       e  chunk i = gaussian from fold_in(key, i)    — secret noise, one
-          (N,) draw per chunk so the stream is chunk-shard-invariant.
+          (N,) draw per chunk so the stream is chunk-shard-invariant (the
+          noise stream never crosses the wire, so it is not derive-
+          negotiated).
     """
     b = m_coeff.shape[0]
     n = ctx.n_poly
@@ -288,7 +347,7 @@ def _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base,
     sigma = ctx.error_sigma
     m = ops.ntt_fwd(m_coeff, ctx)
     a = jax.vmap(lambda k: _uniform_residues(k, (n,), qs))(
-        _chunk_keys(a_base, chunk_start, b))                 # [B, L, N]
+        derive_chunk_keys(a_base, chunk_start, b, derive))   # [B, L, N]
     e = ops.ntt_fwd(jax.vmap(
         lambda k: _gaussian_residues(k, (n,), qs, sigma))(
             _chunk_keys(key, chunk_start, b)), ctx)
@@ -297,26 +356,29 @@ def _seeded_body_from_coeffs(ctx, s_mont, m_coeff, key, a_base,
     return jnp.stack([c0, a], axis=-2)
 
 
-@functools.partial(jax.jit, static_argnames=("ctx", "token"))
+@functools.partial(jax.jit, static_argnames=("ctx", "token", "derive"))
 def _encrypt_seeded_values_graph(ctx: CkksContext, token, s_mont, values,
-                                 key, a_base):
+                                 key, a_base,
+                                 derive: int = DERIVE_FOLD_CHUNK):
     return _seeded_body_from_coeffs(ctx, s_mont,
                                     encoding.encode_jnp(values, ctx), key,
-                                    a_base)
+                                    a_base, derive=derive)
 
 
 def encrypt_values_seeded(ctx: CkksContext, sk: dict, values, key,
-                          a_seed: int) -> Ciphertext:
+                          a_seed: int,
+                          derive: int = DERIVE_FOLD_CHUNK) -> Ciphertext:
     """f32[B, slots] -> seeded secret-key ciphertext in ONE dispatch.
 
     Same wire convention as encrypt_coeffs_seeded (c1 = PRG(a_seed),
-    per-chunk DERIVE_FOLD_CHUNK expansion); the encode FFT runs inside the
-    jitted graph.  ShardedHe.encrypt_values_seeded is the multi-chip
-    version and produces identical bits.
+    per-chunk expansion by the negotiated `derive` id); the encode FFT runs
+    inside the jitted graph.  ShardedHe.encrypt_values_seeded is the
+    multi-chip version and produces identical bits.
     """
     a_base = jax.random.PRNGKey(int(a_seed))
     data = _encrypt_seeded_values_graph(ctx, ops.backend_token(),
-                                        sk["s_mont"], values, key, a_base)
+                                        sk["s_mont"], values, key, a_base,
+                                        int(derive))
     return Ciphertext(data=data, scale=float(ctx.delta))
 
 

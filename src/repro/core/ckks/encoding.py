@@ -42,9 +42,17 @@ def _root_indices(n_poly: int) -> np.ndarray:
 # numpy / float64 host path
 # ---------------------------------------------------------------------------
 
-def encode_np(values: np.ndarray, ctx: CkksContext, delta: float | None = None
-              ) -> np.ndarray:
-    """Real values [B, slots] -> coefficient-domain residues u32[B, L, N]."""
+def encode_centered(values: np.ndarray, ctx: CkksContext,
+                    delta: float | None = None) -> np.ndarray:
+    """Real values [B, slots] -> CENTERED integer coefficients i64[B, N].
+
+    The pre-RNS half of encode_np — FFT interpolation and delta scaling
+    with no modular reduction.  This is everything a transcipher thin
+    client computes (core/ckks/transcipher.py): no NTT, no per-limb
+    arithmetic.  `encode_np(v) == encode_centered(v) % qs` bit-exactly
+    (numpy's int64 `%` returns non-negative residues), which is the
+    transcipher bit-identity anchor.
+    """
     if values.ndim == 1:
         values = values[None]
     b = values.shape[0]
@@ -55,7 +63,13 @@ def encode_np(values: np.ndarray, ctx: CkksContext, delta: float | None = None
     buf = np.zeros((b, 2 * n), dtype=np.complex128)
     buf[:, idx] = values.astype(np.float64)
     c = (2.0 / n) * np.real(np.fft.fft(buf, axis=-1))[:, :n]
-    c_int = np.rint(c * delta).astype(np.int64)
+    return np.rint(c * delta).astype(np.int64)  # [B, N]
+
+
+def encode_np(values: np.ndarray, ctx: CkksContext, delta: float | None = None
+              ) -> np.ndarray:
+    """Real values [B, slots] -> coefficient-domain residues u32[B, L, N]."""
+    c_int = encode_centered(values, ctx, delta)
     qs = np.asarray(ctx.primes, dtype=np.int64)[None, :, None]
     return (c_int[:, None, :] % qs).astype(np.uint32)  # [B, L, N]
 

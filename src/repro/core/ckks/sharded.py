@@ -50,8 +50,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import obs
 from repro.core.ckks import encoding
-from repro.core.ckks.cipher import (Ciphertext, _gaussian_residues,
-                                    _ternary_residues, _uniform_residues)
+from repro.core.ckks.cipher import (DERIVE_FOLD_CHUNK, Ciphertext,
+                                    _gaussian_residues, _ternary_residues,
+                                    _uniform_residues, derive_chunk_keys)
 from repro.core.ckks.params import CkksContext, LimbTables
 from repro.kernels import ops, ref as _ref
 
@@ -200,20 +201,21 @@ class ShardedHe:
                                                  key))
         return Ciphertext(data=data, scale=scale)
 
-    def encrypt_values_seeded(self, sk: dict, values, key,
-                              a_seed: int) -> Ciphertext:
+    def encrypt_values_seeded(self, sk: dict, values, key, a_seed: int,
+                              derive: int = DERIVE_FOLD_CHUNK
+                              ) -> Ciphertext:
         """f32[B, slots] -> seeded secret-key ciphertext (uplink path) in
         ONE sharded dispatch with no collective.
 
         Same wire convention as cipher.encrypt_values_seeded: chunk b's
-        c1 row is PRG-expanded from fold_in(PRNGKey(a_seed), b) (wire-v2
-        derive id 1, DESIGN.md §9.2), so the wire layer ships (a_seed, c0)
-        at ~0.5x fresh-ciphertext bytes and a streaming server regenerates
-        each chunk independently.  Chunks shard over `data_axis`, limbs
-        over `model_axis`; the result is bit-identical to the
-        single-device path for any mesh shape — the noise stream is per
-        chunk, and the public `a` stream (whose draw shape includes L) is
-        drawn full-table per model shard and sliced, like keygen's `a`.
+        c1 row is PRG-expanded per the wire-v2 `derive` algorithm
+        (cipher.DERIVE_KEYFNS, DESIGN.md §9.2), so the wire layer ships
+        (a_seed, c0) at ~0.5x fresh-ciphertext bytes and a streaming
+        server regenerates each chunk independently.  Chunks shard over
+        `data_axis`, limbs over `model_axis`; the result is bit-identical
+        to the single-device path for any mesh shape — the noise stream is
+        per chunk, and the public `a` stream (whose draw shape includes L)
+        is drawn full-table per model shard and sliced, like keygen's `a`.
         `a_seed` must be unique per (client, round); reuse leaks m1 - m2.
         """
         self._check_limbs(self.ctx.n_limbs)
@@ -224,11 +226,14 @@ class ShardedHe:
             data = kl.done(_encrypt_seeded_values_graph(self, token,
                                                         sk["s_mont"],
                                                         values, key,
-                                                        a_base))
+                                                        a_base,
+                                                        int(derive)))
         return Ciphertext(data=data, scale=float(self.ctx.delta))
 
     def encrypt_coeffs_seeded(self, sk: dict, m_coeff, key, a_seed: int,
-                              scale: float | None = None) -> Ciphertext:
+                              scale: float | None = None,
+                              derive: int = DERIVE_FOLD_CHUNK
+                              ) -> Ciphertext:
         """u32[B, L, N] encoded residues -> seeded ciphertext; sharding,
         derivation, and uniqueness contract as encrypt_values_seeded."""
         self._check_limbs(m_coeff.shape[-2])
@@ -240,7 +245,8 @@ class ShardedHe:
             data = kl.done(_encrypt_seeded_coeffs_graph(self, token,
                                                         sk["s_mont"],
                                                         m_coeff, key,
-                                                        a_base))
+                                                        a_base,
+                                                        int(derive)))
         return Ciphertext(data=data, scale=scale)
 
     def decrypt_to_coeffs(self, sk: dict, ct: Ciphertext):
@@ -432,16 +438,18 @@ def _keygen_graph(eng: ShardedHe, token, key):
     return f(key, *table_arrays(ctx.tables))
 
 
-def _local_chunk_keys(eng: ShardedHe, key, b_loc: int):
+def _local_chunk_keys(eng: ShardedHe, key, b_loc: int,
+                      derive: int = DERIVE_FOLD_CHUNK):
     """Keys for this data-shard's chunk rows, derived from GLOBAL chunk ids.
 
     Shard d of the data axis owns the contiguous rows
-    [d * b_loc, (d + 1) * b_loc); fold_in(key, global_id) re-derives exactly
-    the keys the single-device trace would use for those rows — the whole
-    shard-count-invariance argument in one line (DESIGN.md §9.1)."""
+    [d * b_loc, (d + 1) * b_loc); derive_chunk_keys(key, global_offset, ..)
+    re-derives exactly the keys the single-device trace would use for those
+    rows — the whole shard-count-invariance argument in one line
+    (DESIGN.md §9.1).  Every registered derive algorithm keys on the global
+    chunk index, so the invariance holds per id."""
     start = jax.lax.axis_index(eng.data_axis) * b_loc
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
-        start + jnp.arange(b_loc))
+    return derive_chunk_keys(key, start, b_loc, derive)
 
 
 def _encrypt_body_sharded(eng: ShardedHe, pk0, pk1, m_coeff, key, tabs):
@@ -500,14 +508,17 @@ def _encrypt_values_graph(eng: ShardedHe, token, pk0, pk1, values, key):
 
 
 def _encrypt_seeded_body_sharded(eng: ShardedHe, s_mont, m_coeff, key,
-                                 a_base, tabs):
+                                 a_base, tabs,
+                                 derive: int = DERIVE_FOLD_CHUNK):
     """Per-shard seeded (secret-key) encrypt body.
 
     The public c1 = a stream must match the server-side expand_a_rows
-    regeneration bit for bit, and its draw shape includes L — so, like
-    keygen's uniform `a`, every model shard draws the FULL limb table per
-    chunk and slices its local limbs.  The secret noise draw is (N,) per
-    chunk and limb-free, so it broadcasts against the local primes."""
+    regeneration bit for bit — for the SAME wire-negotiated derive id —
+    and its draw shape includes L: so, like keygen's uniform `a`, every
+    model shard draws the FULL limb table per chunk and slices its local
+    limbs.  The secret noise draw is (N,) per chunk and limb-free (always
+    fold_in — never wire-negotiated), so it broadcasts against the local
+    primes."""
     ctx = eng.ctx
     b_loc, n = m_coeff.shape[0], ctx.n_poly
     sigma = float(ctx.error_sigma)
@@ -517,7 +528,7 @@ def _encrypt_seeded_body_sharded(eng: ShardedHe, s_mont, m_coeff, key,
     qs_full = np.asarray(ctx.tables.qs)
     m = ops.apply("ntt_fwd", t, m_coeff)
     a_full = jax.vmap(lambda k: _uniform_residues(k, (n,), qs_full))(
-        _local_chunk_keys(eng, a_base, b_loc))        # [b_loc, L_full, N]
+        _local_chunk_keys(eng, a_base, b_loc, derive))  # [b_loc, L_full, N]
     li = jax.lax.axis_index(eng.model_axis)
     a = jax.lax.dynamic_slice_in_dim(a_full, li * l_loc, l_loc, axis=1)
     e = ops.apply("ntt_fwd", t, jax.vmap(
@@ -528,12 +539,13 @@ def _encrypt_seeded_body_sharded(eng: ShardedHe, s_mont, m_coeff, key,
     return jnp.stack([c0, a], axis=-2)
 
 
-def _encrypt_seeded_shard_map(eng: ShardedHe):
+def _encrypt_seeded_shard_map(eng: ShardedHe,
+                              derive: int = DERIVE_FOLD_CHUNK):
     da, ma = eng.data_axis, eng.model_axis
 
     def body(s_mont, m_coeff, key, a_base, *tabs):
         return _encrypt_seeded_body_sharded(eng, s_mont, m_coeff, key,
-                                            a_base, tabs)
+                                            a_base, tabs, derive)
 
     return shard_map(
         body, mesh=eng.mesh,
@@ -542,24 +554,25 @@ def _encrypt_seeded_shard_map(eng: ShardedHe):
         out_specs=P(da, ma, None, None), check_rep=False)
 
 
-@functools.partial(jax.jit, static_argnames=("eng", "token"))
+@functools.partial(jax.jit, static_argnames=("eng", "token", "derive"))
 def _encrypt_seeded_coeffs_graph(eng: ShardedHe, token, s_mont, m_coeff,
-                                 key, a_base):
+                                 key, a_base,
+                                 derive: int = DERIVE_FOLD_CHUNK):
     t = eng.ctx.tables
     x, r = _pad_rows(m_coeff, eng.n_data)
-    out = _encrypt_seeded_shard_map(eng)(s_mont, x, key, a_base,
-                                         *table_arrays(t))
+    out = _encrypt_seeded_shard_map(eng, derive)(s_mont, x, key, a_base,
+                                                 *table_arrays(t))
     return out[:r]
 
 
-@functools.partial(jax.jit, static_argnames=("eng", "token"))
+@functools.partial(jax.jit, static_argnames=("eng", "token", "derive"))
 def _encrypt_seeded_values_graph(eng: ShardedHe, token, s_mont, values, key,
-                                 a_base):
+                                 a_base, derive: int = DERIVE_FOLD_CHUNK):
     m_coeff = encoding.encode_jnp(values, eng.ctx)
     t = eng.ctx.tables
     x, r = _pad_rows(m_coeff, eng.n_data)
-    out = _encrypt_seeded_shard_map(eng)(s_mont, x, key, a_base,
-                                         *table_arrays(t))
+    out = _encrypt_seeded_shard_map(eng, derive)(s_mont, x, key, a_base,
+                                                 *table_arrays(t))
     return out[:r]
 
 

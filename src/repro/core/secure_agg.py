@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dp, packing, selection
-from repro.core.ckks import cipher, encoding
+from repro.core.ckks import cipher, encoding, transcipher
 from repro.core.ckks.cipher import Ciphertext
 from repro.core.ckks.params import CkksContext
 from repro.core.packing import FlatSpec, MaskPartition
@@ -101,11 +101,14 @@ class SelectiveHEAggregator:
         return ProtectedUpdate(ct=ct, plain=plain)
 
     def client_protect_seeded(self, params, sk: dict, key, a_seed: int,
-                              sharded=None) -> ProtectedUpdate:
+                              sharded=None,
+                              derive: int = cipher.DERIVE_FOLD_CHUNK
+                              ) -> ProtectedUpdate:
         """client_protect via the seeded secret-key encrypt path: c1 is
         PRG(a_seed), so the wire layer (repro.wire) can ship (seed, c0) and
         halve uplink ciphertext bytes.  `a_seed` must be unique per
-        (client, round).
+        (client, round); `derive` picks the per-chunk seed-derivation id
+        (cipher.DERIVES, DESIGN.md §9.2) the wire will advertise.
 
         With `sharded`, the whole weights -> seeded-ciphertext graph is one
         multi-chip dispatch (ShardedHe.encrypt_values_seeded) producing the
@@ -115,13 +118,36 @@ class SelectiveHEAggregator:
         enc_vals, plain = packing.split_by_mask(vec, self.part)
         k_enc, k_dp = jax.random.split(key)
         if sharded is not None:
-            ct = sharded.encrypt_values_seeded(sk, enc_vals, k_enc, a_seed)
+            ct = sharded.encrypt_values_seeded(sk, enc_vals, k_enc, a_seed,
+                                               derive=derive)
         else:
             ct = cipher.encrypt_values_seeded(self.ctx, sk, enc_vals, k_enc,
-                                              a_seed)
+                                              a_seed, derive=derive)
         if self.cfg.dp_b > 0:
             plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
         return ProtectedUpdate(ct=ct, plain=plain)
+
+    def client_protect_transcipher(self, params,
+                                   cm: transcipher.ClientMaterials,
+                                   key) -> tuple[np.ndarray, Any]:
+        """Thin-client protect: mask the encrypted partition with the
+        provisioned keystream — no NTT, no RNS arithmetic on the client
+        (core/ckks/transcipher.py, DESIGN.md §15).
+
+        Returns (masked u32[n_chunks, N], plain); the wire layer frames
+        them (stream.pack_masked_update_frames) together with the escrow
+        seed ciphertext from `cm`.  `key` is split exactly like
+        client_protect_seeded's so an enabled dp_b adds the SAME plaintext
+        noise as the seeded path under the same key — the transcipher
+        round stays bit-comparable end to end."""
+        vec, _ = packing.flatten_params(params)
+        enc_vals, plain = packing.split_by_mask(vec, self.part)
+        _, k_dp = jax.random.split(key)
+        masked = transcipher.mask_values(self.ctx, cm,
+                                         np.asarray(enc_vals))
+        if self.cfg.dp_b > 0:
+            plain = dp.laplace_noise_vec(plain, k_dp, self.cfg.dp_b)
+        return masked, plain
 
     def client_recover(self, agg: ProtectedUpdate, sk: dict):
         """Decrypt + merge -> flat global vector."""

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,18 @@ from repro.wire import budget as wire_budget
 from repro.wire import compress as wire_compress
 from repro.wire import format as wire_format
 from repro.wire import stream as wire_stream
+
+
+UPLINK_MODES = ("auto", "full", "seeded", "transcipher")
+UPLINK_MODE_ENV = "REPRO_UPLINK_MODE"
+
+
+def uplink_a_seed(rnd: int, cid: int) -> int:
+    """The per-(client, round) public seed every uplink path keys its a
+    stream (and, via transcipher.provision's offsets, its keystream) from.
+    One shared definition so the client and the server-side provisioner
+    (serve/service.py) agree without negotiation."""
+    return rnd * 1_000_003 + cid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,32 +118,90 @@ class FLClient:
     def protect_and_pack(self, aggregator, local_params, *, rnd: int,
                          policy: wire_compress.WirePolicy,
                          pk: dict | None = None, sk: dict | None = None,
-                         key=None, sharded=None) -> bytes:
+                         key=None, sharded=None, mode: str | None = None,
+                         derive: int | None = None,
+                         transcipher_materials=None) -> bytes:
         """Protect the local update and serialize it for the uplink.
 
-        With policy.seed_ciphertexts and an available sk, the seeded
-        secret-key encrypt path is used and the wire carries (seed, c0) —
-        roughly half the ciphertext bytes.  With `sharded` (a
-        core.ckks.sharded.ShardedHe), the weights -> ciphertext graph runs
-        as one sharded dispatch over its mesh and — because the per-chunk
-        key derivation is shard-invariant (DESIGN.md §9) — the emitted
-        frames are byte-identical to the single-device client's.  Bytes
-        are accounted at the receiving end: the server ledgers this uplink
-        blob when it ingests it (FLServer.aggregate_wire); this client
-        ledgers the downlink it receives (receive_global).
+        `mode` picks the uplink path (default: the REPRO_UPLINK_MODE env
+        var, else "auto"):
+
+          * "auto"        — seeded when policy.seed_ciphertexts and sk is
+                            available, else full public-key ciphertexts.
+          * "full"        — public-key ciphertexts (requires pk).
+          * "seeded"      — secret-key seeded path; the wire carries
+                            (seed, c0), roughly half the ciphertext bytes.
+                            `derive` picks the per-chunk derivation id the
+                            frames advertise (DESIGN.md §9.2).
+          * "transcipher" — thin-client hybrid path (DESIGN.md §15): the
+                            wire carries keystream-masked coefficients (no
+                            client NTT, 1/L of the seeded ciphertext
+                            bytes) plus the escrow seed ciphertext from
+                            the pre-provisioned `transcipher_materials`
+                            (a transcipher.ClientMaterials for
+                            (cid, rnd); its a_seed must be
+                            uplink_a_seed(rnd, cid)).
+
+        With `sharded` (a core.ckks.sharded.ShardedHe), the weights ->
+        ciphertext graph runs as one sharded dispatch over its mesh and —
+        because the per-chunk key derivation is shard-invariant (DESIGN.md
+        §9) — the emitted frames are byte-identical to the single-device
+        client's.  Bytes are accounted at the receiving end: the server
+        ledgers this uplink blob when it ingests it
+        (FLServer.aggregate_wire); this client ledgers the downlink it
+        receives (receive_global).
         """
+        mode = mode if mode is not None \
+            else os.environ.get(UPLINK_MODE_ENV, "auto")
+        if mode not in UPLINK_MODES:
+            raise ValueError(f"unknown uplink mode {mode!r} "
+                             f"(from {UPLINK_MODE_ENV}?); "
+                             f"expected one of {UPLINK_MODES}")
+        if mode == "auto":
+            mode = "seeded" if policy.seed_ciphertexts and sk is not None \
+                else "full"
         key = key if key is not None else jax.random.PRNGKey(
             rnd * 100_003 + self.cid)
-        with obs.span("encrypt", cid=self.cid, round=rnd,
-                      seeded=bool(policy.seed_ciphertexts
-                                  and sk is not None)) as sp:
+        a_seed = uplink_a_seed(rnd, self.cid)
+        with obs.span("encrypt", cid=self.cid, round=rnd, mode=mode,
+                      seeded=mode == "seeded") as sp:
+            if mode == "transcipher":
+                cm = transcipher_materials
+                if cm is None:
+                    raise ValueError(
+                        "mode='transcipher' needs transcipher_materials (a "
+                        "core.ckks.transcipher.ClientMaterials provisioned "
+                        "for this (cid, round) — DESIGN.md §15)")
+                if int(cm.a_seed) != a_seed:
+                    raise ValueError(
+                        f"transcipher materials a_seed {cm.a_seed} != "
+                        f"uplink_a_seed({rnd}, {self.cid}) = {a_seed}; "
+                        f"provision per (client, round)")
+                masked, plain = aggregator.client_protect_transcipher(
+                    local_params, cm, key)
+                mc = wire_compress.MaskedChunk(
+                    masked=masked, a_seed=cm.a_seed, scale=cm.scale,
+                    chunk_offset=cm.chunk_offset, derive=cm.derive)
+                blob = wire_stream.pack_masked_update_frames(
+                    mc, wire_compress.seed_compress(cm.seed_ct,
+                                                    cm.escrow_a_seed,
+                                                    cm.derive),
+                    plain, cid=self.cid, n_samples=max(1, self.n_samples),
+                    rnd=rnd, plain_codec=policy.plain_codec)
+                sp.set(nbytes=len(blob))
+                return blob
             seeded = None
-            if policy.seed_ciphertexts and sk is not None:
-                a_seed = rnd * 1_000_003 + self.cid  # unique per (cid, round)
+            if mode == "seeded":
+                if sk is None:
+                    raise ValueError("mode='seeded' needs sk")
+                drv = derive if derive is not None \
+                    else wire_compress.DERIVE_FOLD_CHUNK
                 upd = aggregator.client_protect_seeded(local_params, sk, key,
                                                        a_seed,
-                                                       sharded=sharded)
-                seeded = wire_compress.seed_compress(upd.ct, a_seed)
+                                                       sharded=sharded,
+                                                       derive=drv)
+                seeded = wire_compress.seed_compress(upd.ct, a_seed,
+                                                     derive=drv)
             else:
                 upd = aggregator.client_protect(local_params, pk, key,
                                                 sharded=sharded)

@@ -52,13 +52,14 @@ import numpy as np
 
 from repro import obs as _obs
 from repro.kernels import he_agg as _he_agg
+from repro.kernels import lift as _lift
 from repro.kernels import ntt as _ntt
 from repro.kernels import pointwise as _pointwise
 from repro.kernels import ref as _ref
 from repro.kernels import tune as _tune
 
-OPS = ("ntt_fwd", "ntt_inv", "mul_add", "weighted_sum", "weighted_accum",
-       "weighted_accum_chunks")
+OPS = ("ntt_fwd", "ntt_inv", "mul_add", "mod_lift", "weighted_sum",
+       "weighted_accum", "weighted_accum_chunks")
 BACKENDS = ("ref", "pallas", "pallas4", "auto")
 
 
@@ -193,6 +194,15 @@ def _mul_add_pallas(t, x, y_mont, z, cfg=None):
                                     interpret=_interpret())
 
 
+def _mod_lift_ref(t, x, cfg=None):
+    return _ref.mod_lift_fused(x, t.qs)
+
+
+def _mod_lift_pallas(t, x, cfg=None):
+    return _lift.mod_lift_fused(x, t.qs, block_b=_blk(cfg),
+                                interpret=_interpret())
+
+
 def _weighted_sum_ref(t, cts, w_mont, cfg=None):
     return _ref.he_weighted_sum_fused(cts, w_mont, t.qs, t.qinv_negs)
 
@@ -235,6 +245,8 @@ _IMPL = {
     # backend assignment (same env canon as ref/pallas).
     "mul_add": {"ref": _mul_add_ref, "pallas": _mul_add_pallas,
                 "pallas4": _mul_add_pallas},
+    "mod_lift": {"ref": _mod_lift_ref, "pallas": _mod_lift_pallas,
+                 "pallas4": _mod_lift_pallas},
     "weighted_sum": {"ref": _weighted_sum_ref,
                      "pallas": _weighted_sum_pallas,
                      "pallas4": _weighted_sum_pallas},
@@ -252,14 +264,20 @@ _IMPL = {
 # Shapes are static under jit, so `auto` resolution is a trace-time
 # decision — the resolved (backend, config) is baked into the graph and
 # `backend_token()` carries the tuner generation to force retraces.
-_SHAPE_ARG = {"ntt_fwd": 0, "ntt_inv": 0, "mul_add": 0, "weighted_sum": 0,
-              "weighted_accum": 1, "weighted_accum_chunks": 1}
+_SHAPE_ARG = {"ntt_fwd": 0, "ntt_inv": 0, "mul_add": 0, "mod_lift": 0,
+              "weighted_sum": 0, "weighted_accum": 1,
+              "weighted_accum_chunks": 1}
 
 
-def _shape_dims(op, args):
+def _shape_dims(op, tables, args):
     """(N, L, B) of one dispatch — B is the flattened batch the kernel
     wrappers grid over (leading-axis rows for the chunk kernel)."""
     x = args[_SHAPE_ARG[op]]
+    if op == "mod_lift":
+        # the lift input is u32[..., N] with NO limb axis (the client never
+        # touched RNS); L is the table depth the dispatch was sliced to.
+        return x.shape[-1], int(tables.qs.shape[0]), \
+            int(math.prod(x.shape[:-1]))
     n, l = x.shape[-1], x.shape[-2]
     if op == "weighted_sum":
         b = math.prod(x.shape[1:-2])      # leading axis is the client count
@@ -284,13 +302,13 @@ def _variant_tables(tables, split):
     return _params.retable_ntt4(tables, split[0], split[1])
 
 
-def _resolve(op, args):
+def _resolve(op, tables, args):
     """(concrete backend, config|None) for one dispatch.  Explicit
     assignments keep cfg=None — byte-identical to the pre-autotuner call."""
     backend = _ASSIGN[op]
     if backend != "auto":
         return backend, None
-    n, l, b = _shape_dims(op, args)
+    n, l, b = _shape_dims(op, tables, args)
     return _tune.resolve(op, n, l, b, _interpret())
 
 
@@ -307,7 +325,7 @@ def _dispatch(op, tables, *args):
     runs are distinguishable (DESIGN.md §11).  `auto` resolves through
     the tuning cache first and stamps the resolved config into the span.
     """
-    backend, cfg = _resolve(op, args)
+    backend, cfg = _resolve(op, tables, args)
     if (cfg is not None and cfg.ntt4_split is not None
             and backend == "pallas4" and op in _tune.NTT_OPS):
         tables = _variant_tables(tables, cfg.ntt4_split)
@@ -394,6 +412,23 @@ def mul_add(x, y_mont, z, ctx):
         u32[..., L, N] normal-form result, one fused call over all limbs.
     """
     return _dispatch("mul_add", _tables(ctx, x.shape[-2]), x, y_mont, z)
+
+
+def mod_lift(x, n_limbs, ctx):
+    """Per-limb modular lift: residues of raw u32 rows across the limb grid.
+
+    Args:
+        x: u32[..., N] full-range 32-bit words with NO limb axis —
+            transcipher-masked coefficients or keystream pads
+            (DESIGN.md §15).
+        n_limbs: limb count L of the target ciphertext level.
+        ctx: CkksContext.
+
+    Returns:
+        u32[..., L, N] with out[..., l, :] = x mod q_l — the transcipher
+        server unmask's first step, feeding ntt_fwd.
+    """
+    return _dispatch("mod_lift", _tables(ctx, n_limbs), x)
 
 
 def weighted_sum(cts, w_mont, ctx):

@@ -304,6 +304,16 @@ def he_weighted_accum_chunks_fused(acc, cts, w_mont, qs, qinv_negs):
                          qs, qinv_negs)
 
 
+def mod_lift_fused(x, qs):
+    """Per-limb lift of raw u32 rows: out[..., l, :] = x[..., :] mod q_l.
+
+    x: u32[..., N] FULL-RANGE 32-bit words (no limb axis — transcipher-
+    masked coefficients or keystream pads); qs: u32[L].  Unlike the
+    Montgomery ops there is no < 2**30 operand precondition: uint32
+    remainder is exact over the whole range."""
+    return _u32(x)[..., None, :] % _col(qs)
+
+
 def mul_wide(a, b):
     """Full 32x32 -> 64-bit product as a (hi, lo) u32 pair."""
     a = _u32(a)

@@ -47,6 +47,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 
 # ---------------------------------------------------------------------------
 # launch-config defaults: the ONE table kernel block sizes route through
@@ -61,6 +62,7 @@ DEFAULT_BLOCK = {
     "ntt_fwd": 8,
     "ntt_inv": 8,
     "mul_add": 8,
+    "mod_lift": 8,
     "weighted_sum": 4,
     "weighted_accum": 8,
     "weighted_accum_chunks": 4,
@@ -88,7 +90,7 @@ def _roofline_constants() -> tuple[float, float]:
     try:
         from benchmarks.roofline import HBM_BW, PEAK_FLOPS
         return HBM_BW, PEAK_FLOPS
-    except Exception:
+    except ImportError:
         return 819e9, 197e12
 
 
@@ -216,7 +218,20 @@ def load_cache(path: str | None = None) -> int:
         with open(path) as f:
             doc = json.load(f)
         raw = doc.get("entries", {})
-    except (OSError, json.JSONDecodeError, AttributeError):
+    except FileNotFoundError:
+        # a named-but-not-yet-written cache is the normal first-run state
+        return 0
+    except (OSError, json.JSONDecodeError, AttributeError) as e:
+        # A cache that EXISTS but cannot be read (permissions, truncation,
+        # corruption, non-dict JSON) silently disabling tuning is the bug
+        # this guards: surface it once, visibly, and count it.
+        from repro import obs
+        obs.counter("tune_cache_load_errors_total").inc()
+        warnings.warn(
+            f"tuning cache {path!r} (from {CACHE_ENV}) could not be loaded"
+            f" ({e!r}); autotuned configs are disabled and every `auto`"
+            f" dispatch falls back to defaults — fix or delete the file",
+            RuntimeWarning, stacklevel=2)
         return 0
     accepted = 0
     for key, e in raw.items():
@@ -430,6 +445,9 @@ def _make_inputs(op: str, ctx, b: int, seed: int = 0):
                     size=(b, l)).astype(np.uint32))
     if op in ("ntt_fwd", "ntt_inv"):
         return (rand((b,)),)
+    if op == "mod_lift":
+        return (jnp.asarray(rng.randint(
+            0, 1 << 32, size=(b, ctx.n_poly)).astype(np.uint32)),)
     if op == "mul_add":
         return (rand((b,)), rand((b,)), rand((b,)))
     if op == "weighted_sum":

@@ -68,7 +68,7 @@ def lower_cell(arch: str, shape: str, mesh_name: str, tag: str = "",
         model = build_model(cfg, ax)
         params_abs = model.init_abstract()
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         if sp.kind == "train":
             batch = input_specs(cfg, shape)
             step = steps.jit_train_step(model, mesh, AdamWConfig(), batch)
@@ -87,11 +87,11 @@ def lower_cell(arch: str, shape: str, mesh_name: str, tag: str = "",
                                          param_mode=param_mode)
             lowered = step.lower(params_abs, cache, batch)
             tokens = sp.batch
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     return _analyze(compiled, cfg, sp.kind, tokens, n_dev, arch, shape,
                     mesh_name, t_lower, t_compile, tag)
@@ -106,14 +106,14 @@ def lower_he_agg(mesh_name: str, arch: str = "qwen1.5-0.5b",
         cfg.param_count(), p_ratio, n_clients, mesh.size)
     ins = spec.input_specs()
     with jax.sharding.set_mesh(mesh):
-        t0 = time.time()
+        t0 = time.perf_counter()
         step = fl_step.jit_he_agg_step(spec, mesh,
                                        [1.0 / n_clients] * n_clients)
         lowered = step.lower(ins["cts"], ins["plain"])
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     class _HECfg:
         name = f"he-agg[{arch}, p={p_ratio}]"
@@ -194,7 +194,7 @@ def run_cell(arch, shape, mesh_name, force=False, tag="",
     if os.path.exists(fn) and not force:
         print(f"SKIP (cached) {arch} {shape} {mesh_name}")
         return json.load(open(fn))
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         art = lower_cell(arch, shape, mesh_name, tag, param_mode=param_mode,
                          cfg_overrides=cfg_overrides)
@@ -210,7 +210,7 @@ def run_cell(arch, shape, mesh_name, force=False, tag="",
           f"comp={r['compute_s']*1e3:.1f}ms mem={r['memory_s']*1e3:.1f}ms "
           f"coll={r['collective_s']*1e3:.1f}ms dom={r['dominant']} "
           f"frac={r['roofline_fraction']:.2f} peakHBM={peak:.1f}GB "
-          f"({time.time()-t0:.0f}s)")
+          f"({time.perf_counter()-t0:.0f}s)")
     return art
 
 
@@ -231,12 +231,12 @@ def main():
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     if args.he_agg:
         for m in meshes:
-            t0 = time.time()
+            t0 = time.perf_counter()
             art = lower_he_agg(m, tag=args.tag)
             r = art["roofline"]
             print(f"OK he_agg {m} comp={r['compute_s']*1e3:.2f}ms "
                   f"mem={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
-                  f"dom={r['dominant']} ({time.time()-t0:.0f}s)")
+                  f"dom={r['dominant']} ({time.perf_counter()-t0:.0f}s)")
         return
     if args.all:
         cells = configs.all_cells()

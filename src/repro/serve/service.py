@@ -137,6 +137,13 @@ class AggregationService:
         ledger: optional wire.budget.BandwidthLedger; accepted uplink
             blobs are recorded per artifact class, and the records ride
             every checkpoint (a resume loses no accounted bytes).
+        transcipher_materials: optional {(cid, round):
+            transcipher.ServerMaterials} registry handed to every round's
+            StreamIngest — required before any thin-client (transcipher)
+            update can fold; unprovisioned masked updates are rejected at
+            fold time like any bad blob (DESIGN.md §15).  Mutable: the
+            provisioning path may add_transcipher_materials() while the
+            service runs.
     """
 
     _ids = itertools.count()
@@ -146,10 +153,12 @@ class AggregationService:
                  ckpt_keep: int = 3, ckpt_every_accepts: int = 0,
                  fold_batch: int = 32, clock=None,
                  faults: FaultInjector | None = None,
-                 ledger: wire_budget.BandwidthLedger | None = None):
+                 ledger: wire_budget.BandwidthLedger | None = None,
+                 transcipher_materials: dict | None = None):
         self.ctx = ctx
         self.quorum = quorum
         self.sharded = sharded
+        self.transcipher_materials = dict(transcipher_materials or {})
         self.fold_batch = int(fold_batch)
         if self.fold_batch < 1:
             raise ValueError("fold_batch must be >= 1")
@@ -184,6 +193,17 @@ class AggregationService:
         self._m_done = obs.counter("serve_rounds", status=ST_DONE, **lab)
         self._m_failed = obs.counter("serve_rounds", status=ST_FAILED, **lab)
         self._m_ckpts = obs.counter("serve_checkpoints", **lab)
+
+    def add_transcipher_materials(self, cid: int, rnd: int,
+                                  materials) -> None:
+        """Register one (cid, round)'s transcipher.ServerMaterials before
+        that client's masked update folds.  Also propagated into every
+        round ingest already in flight (each StreamIngest keeps its own
+        copy of the registry)."""
+        with self._lock:
+            self.transcipher_materials[(int(cid), int(rnd))] = materials
+            for ingest in self._ingests.values():
+                ingest.add_transcipher_materials(cid, rnd, materials)
 
     # -- introspection -------------------------------------------------------
 
@@ -383,7 +403,8 @@ class AggregationService:
         rs.weights = qr.normalized_weights(
             [rs.accepted[i]["n_samples"] for i in good])
         self._ingests[rs.rnd] = wire_stream.StreamIngest(
-            self.ctx, sharded=self.sharded)
+            self.ctx, sharded=self.sharded,
+            transcipher_materials=self.transcipher_materials)
 
     def _fold_some(self, rs: RoundState) -> None:
         ingest = self._ingests[rs.rnd]
@@ -646,7 +667,8 @@ class AggregationService:
             rs.refolds = int(rx["refolds"])
             if "ingest_meta" in rx:
                 ingest = wire_stream.StreamIngest(
-                    ctx, sharded=kwargs.get("sharded"))
+                    ctx, sharded=kwargs.get("sharded"),
+                    transcipher_materials=svc.transcipher_materials)
                 ingest.restore_state(tree[f"ingest_{rnd_s}"],
                                      rx["ingest_meta"])
                 svc._ingests[rnd] = ingest

@@ -59,15 +59,19 @@ COMPACT = WirePolicy(seed_ciphertexts=True, downlink_keep_limbs=0,
 # ---------------------------------------------------------------------------
 
 # Per-chunk seed-derivation algorithm ids (wire v2 SEEDED_CIPHERTEXT frames
-# carry one; v1 frames imply DERIVE_FOLD_CHUNK).  Defined here rather than
-# in wire/format.py because format.py imports SeededCiphertext from this
-# module; format re-exports them as the wire-facing names.
+# carry one; v1 frames imply DERIVE_FOLD_CHUNK).  The registry itself lives
+# in core/ckks/cipher.py (both encrypt and expansion dispatch through it);
+# re-exported here — and from here by wire/format.py — as the wire-facing
+# names, preserving the import layering (format.py imports SeededCiphertext
+# from this module).
 #
 # DERIVE_FOLD_CHUNK: chunk b's c1 row is the uniform-residue expansion of
-# fold_in(PRNGKey(seed), chunk_offset + b) — the algorithm implemented by
-# cipher.expand_a_rows and, identically, by the sharded client encrypt
-# (normative pseudocode: DESIGN.md §9.2).
-DERIVE_FOLD_CHUNK = 1
+# fold_in(PRNGKey(seed), chunk_offset + b).  DERIVE_CTR: chunk b's key is
+# the raw counter block [seed_hi, seed_lo + chunk_offset + b].  Normative
+# registry table: DESIGN.md §9.2.
+DERIVE_FOLD_CHUNK = cipher.DERIVE_FOLD_CHUNK
+DERIVE_CTR = cipher.DERIVE_CTR
+DERIVES = cipher.DERIVES
 
 
 @dataclasses.dataclass
@@ -76,11 +80,11 @@ class SeededCiphertext:
 
     c0: u32[B, L, N] (NTT domain); expand() regenerates c1 = PRG(seed) and
     returns the full in-memory Ciphertext.  `derive` names the per-chunk
-    seed-derivation algorithm (DERIVE_FOLD_CHUNK: chunk b's c1 row comes
-    from fold_in(PRNGKey(seed), chunk_offset + b)), so a streaming
-    receiver expands each arriving chunk independently (chunk_offset
-    tracks the index of c0's first row within the original update).  The
-    field rides in wire-v2 frames; v1 frames imply DERIVE_FOLD_CHUNK.
+    seed-derivation algorithm from the cipher.DERIVE_KEYFNS registry
+    (DESIGN.md §9.2), so a streaming receiver expands each arriving chunk
+    independently (chunk_offset tracks the index of c0's first row within
+    the original update).  The field rides in wire-v2 frames; v1 frames
+    imply DERIVE_FOLD_CHUNK.
     """
 
     c0: Any
@@ -94,14 +98,36 @@ class SeededCiphertext:
         return int(self.c0.shape[0])
 
     def expand(self, ctx: CkksContext) -> Ciphertext:
-        if self.derive != DERIVE_FOLD_CHUNK:
-            raise ValueError(
-                f"unknown seed-derivation id {self.derive}; this build "
-                f"implements {DERIVE_FOLD_CHUNK} (DESIGN.md §9.2)")
+        # dispatches through cipher.DERIVE_KEYFNS; an unknown id raises the
+        # registry's actionable error (DESIGN.md §9.2) before any expansion
         a = cipher.expand_a_rows(ctx, self.seed, self.chunk_offset,
-                                 self.n_chunks)
+                                 self.n_chunks, derive=self.derive)
         data = jnp.stack([jnp.asarray(self.c0), a], axis=-2)  # [B, L, 2, N]
         return Ciphertext(data=data, scale=self.scale)
+
+
+@dataclasses.dataclass
+class MaskedChunk:
+    """Wire form of a transcipher (hybrid-HE) uplink chunk: stream-cipher-
+    masked centered coefficients, NO ciphertext limbs (DESIGN.md §15).
+
+    masked: u32[B, N] — encode_centered(values) + keystream pad, exact by
+    the pad-window construction (core/ckks/transcipher.py).  `a_seed` and
+    `derive` name the public a stream the server expands for the unmasked
+    ciphertext (the same registry as seeded frames); `chunk_offset` is the
+    global index of the first masked row.  Only expressible in wire v2+
+    frames — there is no v1 layout to imply anything.
+    """
+
+    masked: Any
+    a_seed: int
+    scale: float
+    chunk_offset: int = 0
+    derive: int = DERIVE_CTR
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.masked.shape[0])
 
 
 def seed_compress(ct: Ciphertext, seed: int,
@@ -140,7 +166,12 @@ def quantize_plain(x, codec: str) -> tuple[np.ndarray, float]:
         return x.astype(np.float16), 1.0
     if codec == "i8":
         amax = float(np.max(np.abs(x))) if x.size else 0.0
-        scale = amax / 127.0 if amax > 0 else 1.0
+        scale = amax / 127.0
+        # guard the COMPUTED scale, not amax: a subnormal amax underflows
+        # amax/127 to 0.0 and x/scale would put NaN/inf on the wire.  An
+        # empty/all-zero/underflowing segment quantizes to zeros, scale 1.
+        if not np.isfinite(scale) or scale <= 0.0:
+            return np.zeros(x.shape, dtype=np.int8), 1.0
         return np.clip(np.rint(x / scale), -127, 127).astype(np.int8), scale
     raise ValueError(codec)
 

@@ -41,7 +41,8 @@ import numpy as np
 
 from repro.core.ckks.cipher import Ciphertext
 from repro.core.packing import MaskPartition
-from repro.wire.compress import DERIVE_FOLD_CHUNK, SeededCiphertext
+from repro.wire.compress import (DERIVE_CTR, DERIVE_FOLD_CHUNK,
+                                 DERIVES, MaskedChunk, SeededCiphertext)
 
 MAGIC = b"RPWR"
 VERSION = 2                      # default emit version
@@ -63,11 +64,18 @@ T_UPDATE_BEGIN = 0x06        # u32 cid, n_samples, round, n_chunks; u8 ct_kind
 T_CT_CHUNK = 0x07            # u32 chunk_idx + one nested one-chunk ct frame
 T_PLAIN_SEGMENT = 0x08       # u8 codec, f64 qscale + quantized array
 T_UPDATE_END = 0x09          # empty payload
+# transcipher (hybrid-HE) uplink frames (DESIGN.md §15); v2+ only — these
+# frame types postdate v1 and have no legacy layout to imply
+T_MASKED_CHUNK = 0x0A        # f64 scale, u64 a_seed, u32 chunk_offset,
+                             #     u8 derive + u32[B, N] masked coefficients
+T_TRANSCIPHER_SEED = 0x0B    # one nested SEEDED_CIPHERTEXT frame: the
+                             #     escrow encryption of the keystream seed
 
 # seed-derivation algorithm ids carried by v2 SEEDED_CIPHERTEXT frames
-# (DESIGN.md §9.2; DERIVE_FOLD_CHUNK lives in compress.py to avoid a
-# circular import and is re-exported here as the wire-facing name)
-DERIVES = (DERIVE_FOLD_CHUNK,)
+# (DESIGN.md §9.2).  The registry lives in core/ckks/cipher.py and is
+# re-exported through compress.py (import layering: this module imports
+# SeededCiphertext from there); DERIVES is the sorted tuple of known ids —
+# currently (DERIVE_FOLD_CHUNK, DERIVE_CTR) = (1, 2).
 
 _DTYPE_CODES = {
     np.dtype(np.uint32): 0, np.dtype(np.float32): 1, np.dtype(np.float16): 2,
@@ -300,6 +308,64 @@ def _parse_seeded_ciphertext(payload, version: int = 1) -> SeededCiphertext:
 
 
 # ---------------------------------------------------------------------------
+# transcipher uplink (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+
+def serialize_masked_chunk(mc: MaskedChunk,
+                           version: int | None = None) -> bytes:
+    """Masked transcipher chunk -> one frame.  v2+ only: the type postdates
+    v1, so down-serialization refuses rather than inventing a layout."""
+    version = EMIT_VERSION if version is None else version
+    if version < 2:
+        raise WireError(
+            "transcipher masked chunks are not expressible in wire v1 "
+            "frames; emit v2 (DESIGN.md §15)")
+    head = struct.pack("<dQI", float(mc.scale), int(mc.a_seed),
+                       int(mc.chunk_offset))
+    payload = head + struct.pack("<B", int(mc.derive)) \
+        + pack_array(np.asarray(mc.masked, dtype=np.uint32))
+    return frame(T_MASKED_CHUNK, payload, version=version)
+
+
+def _parse_masked_chunk(payload, version: int) -> MaskedChunk:
+    if version < 2:
+        raise WireError(
+            "masked transcipher chunk in a v1 frame; transcipher requires "
+            "wire v2 (DESIGN.md §15)")
+    scale, a_seed, chunk_offset = struct.unpack_from("<dQI", payload, 0)
+    off = struct.calcsize("<dQI")
+    (derive,) = struct.unpack_from("<B", payload, off)
+    off += 1
+    if derive not in DERIVES:
+        raise WireError(
+            f"unknown seed-derivation id {derive} in v{version} masked "
+            f"chunk; this build knows {DERIVES} (DESIGN.md §9.2)")
+    masked, _ = unpack_array(payload, off)
+    if masked.dtype != np.uint32 or masked.ndim != 2:
+        raise WireError(
+            f"masked chunk array must be u32[B, N], got "
+            f"{masked.dtype}[{masked.ndim}d]")
+    return MaskedChunk(masked=masked, a_seed=a_seed, scale=scale,
+                       chunk_offset=chunk_offset, derive=derive)
+
+
+def serialize_transcipher_seed(sct: SeededCiphertext,
+                               version: int | None = None) -> bytes:
+    """The escrow keystream-seed ciphertext -> one wrapper frame (nests a
+    normal seeded-ciphertext frame; v2+ only like every transcipher
+    frame)."""
+    version = EMIT_VERSION if version is None else version
+    if version < 2:
+        raise WireError(
+            "transcipher seed frames are not expressible in wire v1 "
+            "frames; emit v2 (DESIGN.md §15)")
+    return frame(T_TRANSCIPHER_SEED,
+                 serialize_seeded_ciphertext(sct, version=version),
+                 version=version)
+
+
+# ---------------------------------------------------------------------------
 # plain segment (quantized plaintext partition)
 # ---------------------------------------------------------------------------
 
@@ -423,6 +489,9 @@ _PARSERS = {
     T_PROTECTED_UPDATE: lambda p, ctx, v: _parse_update(p, ctx),
     T_KEYSET: lambda p, ctx, v: _parse_keyset(p),
     T_MASK_PARTITION: lambda p, ctx, v: _parse_partition(p),
+    T_MASKED_CHUNK: lambda p, ctx, v: _parse_masked_chunk(p, v),
+    # unwrap to the nested escrow seeded-ciphertext artifact
+    T_TRANSCIPHER_SEED: lambda p, ctx, v: deserialize(p, ctx, 0)[0],
 }
 
 

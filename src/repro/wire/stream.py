@@ -43,6 +43,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.ckks import encoding
+from repro.core.ckks import transcipher as _tc
 from repro.core.ckks.cipher import Ciphertext
 from repro.core.ckks.params import CkksContext
 from repro.core.secure_agg import ProtectedUpdate
@@ -54,6 +55,7 @@ _BEGIN = struct.Struct("<IIIIB")
 
 CT_FULL = 0
 CT_SEEDED = 1
+CT_TRANSCIPHER = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +65,7 @@ class UpdateMeta:
     round: int
     n_chunks: int
     seeded: bool
+    transcipher: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +123,48 @@ def pack_update_frames(upd: ProtectedUpdate, *, cid: int, n_samples: int,
     return b"".join(out)
 
 
+def pack_masked_update_frames(masked: _c.MaskedChunk,
+                              seed_ct: _c.SeededCiphertext, plain, *,
+                              cid: int, n_samples: int, rnd: int = 0,
+                              plain_codec: str = "f32",
+                              version: int | None = None) -> bytes:
+    """One transcipher client's masked update -> concatenated wire frames.
+
+    The thin-client analogue of pack_update_frames: UPDATE_BEGIN (kind =
+    CT_TRANSCIPHER) + the escrow TRANSCIPHER_SEED frame + one MASKED_CHUNK
+    per row nested in CT_CHUNK + PLAIN_SEGMENT + UPDATE_END.  Transcipher
+    frames are v2+ only — version=1 raises the serializer's WireError
+    (DESIGN.md §15).
+
+    Args:
+        masked: the full masked update (masked u32[n_chunks, N] plus the
+            a_seed/derive/scale/chunk_offset the server unmask needs).
+        seed_ct: the escrow seeded-ciphertext wire form of the keystream
+            seed (compress.seed_compress of ClientMaterials.seed_ct).
+        plain: the plaintext partition (selective encryption remainder).
+    """
+    n_chunks = masked.n_chunks
+    host = np.asarray(masked.masked, dtype=np.uint32)
+    out = [wf.frame(wf.T_UPDATE_BEGIN,
+                    _BEGIN.pack(cid, n_samples, rnd, n_chunks,
+                                CT_TRANSCIPHER),
+                    version=version),
+           wf.serialize_transcipher_seed(seed_ct, version=version)]
+    for b in range(n_chunks):
+        chunk = _c.MaskedChunk(masked=host[b:b + 1], a_seed=masked.a_seed,
+                               scale=masked.scale,
+                               chunk_offset=masked.chunk_offset + b,
+                               derive=masked.derive)
+        inner = wf.serialize_masked_chunk(chunk, version=version)
+        out.append(wf.frame(wf.T_CT_CHUNK, struct.pack("<I", b) + inner,
+                            version=version))
+    arr, qscale = _c.quantize_plain(np.asarray(plain), plain_codec)
+    out.append(wf.serialize_plain_segment(arr, plain_codec, qscale,
+                                          version=version))
+    out.append(wf.frame(wf.T_UPDATE_END, b"", version=version))
+    return b"".join(out)
+
+
 def peek_update_meta(blob: bytes) -> UpdateMeta:
     """Read only the UPDATE_BEGIN header (e.g. to compute FedAvg weights
     before a second ingest pass)."""
@@ -131,7 +176,8 @@ def peek_update_meta(blob: bytes) -> UpdateMeta:
     except struct.error as e:
         raise wf.WireError(f"short UPDATE_BEGIN payload: {e}") from e
     return UpdateMeta(cid=cid, n_samples=n_samples, round=rnd,
-                      n_chunks=n_chunks, seeded=kind == CT_SEEDED)
+                      n_chunks=n_chunks, seeded=kind == CT_SEEDED,
+                      transcipher=kind == CT_TRANSCIPHER)
 
 
 # ---------------------------------------------------------------------------
@@ -176,12 +222,17 @@ class StreamIngest:
 
     _ids = itertools.count()
 
-    def __init__(self, ctx: CkksContext, sharded=None):
+    def __init__(self, ctx: CkksContext, sharded=None,
+                 transcipher_materials: dict | None = None):
         """Args:
             ctx: CkksContext of the arriving ciphertexts.
             sharded: optional core.ckks.sharded.ShardedHe; when given,
                 flushes run as sharded graphs over its mesh (ready rows ->
                 data axis, limbs -> model axis), bit-identical results.
+            transcipher_materials: optional {(cid, round):
+                transcipher.ServerMaterials} registry; masked transcipher
+                updates from unprovisioned (cid, round) pairs are rejected
+                with an actionable WireError (DESIGN.md §15).
         """
         self.ctx = ctx
         self.sharded = sharded
@@ -189,6 +240,10 @@ class StreamIngest:
         self._acc_plain = None         # f32[n_plain]
         self._in_scale = None
         self._pending = []             # ready queue: (chunk_idx, data, w)
+        self._transcipher = dict(transcipher_materials or {})
+        # escrow keystream-seed ciphertexts received so far, keyed like the
+        # materials registry — the audit trail a key authority can decrypt
+        self.escrow_seeds: dict = {}
         # registry-backed instrumentation, one label set per ingest
         # instance (obs.REGISTRY.total("wire_ingest_...") aggregates
         # across instances for process-level telemetry)
@@ -229,6 +284,12 @@ class StreamIngest:
     @property
     def rejected_updates(self) -> int:
         return int(self._m_rejected.value)
+
+    def add_transcipher_materials(self, cid: int, rnd: int,
+                                  materials) -> None:
+        """Register one (cid, round)'s transcipher.ServerMaterials before
+        its masked update arrives (serve/service.py provisioning path)."""
+        self._transcipher[(int(cid), int(rnd))] = materials
 
     # -- internals ----------------------------------------------------------
 
@@ -299,6 +360,30 @@ class StreamIngest:
                 self._acc_ct[i] = out[j]
             self._note_decoded(-len(batch))
 
+    def _unmask_chunk(self, meta: UpdateMeta, mc: _c.MaskedChunk):
+        """Transcipher one arriving masked chunk into its seeded-equivalent
+        ciphertext (core/ckks/transcipher.server_unmask).  Runs inside the
+        ingest rollback scope: unprovisioned or mismatched materials reject
+        the whole update atomically."""
+        sm = self._transcipher.get((meta.cid, meta.round))
+        if sm is None:
+            raise wf.WireError(
+                f"no transcipher materials provisioned for client "
+                f"{meta.cid} round {meta.round}; register ServerMaterials "
+                f"(transcipher.provision) before ingest (DESIGN.md §15)")
+        if int(mc.a_seed) != int(sm.a_seed) \
+                or int(mc.derive) != int(sm.derive):
+            raise wf.WireError(
+                f"masked chunk parameters (a_seed={mc.a_seed}, "
+                f"derive={mc.derive}) do not match the provisioned "
+                f"materials (a_seed={sm.a_seed}, derive={sm.derive}) for "
+                f"client {meta.cid} round {meta.round}")
+        try:
+            return _tc.server_unmask(self.ctx, sm, mc.masked,
+                                     int(mc.chunk_offset))
+        except ValueError as e:
+            raise wf.WireError(f"transcipher unmask failed: {e}") from e
+
     def _fold_plain_decoded(self, plain: np.ndarray, weight: float) -> None:
         if self._acc_plain is None:
             self._acc_plain = np.zeros(plain.shape, dtype=np.float32)
@@ -342,6 +427,7 @@ class StreamIngest:
         chunks_seen: set[int] = set()
         plain_segments = []            # folded only after validation
         n_buffered = 0
+        escrow_added: list = []        # escrow keys this update introduced
         prev_in_scale = self._in_scale
         acc_was_uninit = self._acc_ct is None
         try:
@@ -350,7 +436,8 @@ class StreamIngest:
                     cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(
                         payload, 0)
                     meta = UpdateMeta(cid, n_samples, rnd, n_chunks,
-                                      kind == CT_SEEDED)
+                                      kind == CT_SEEDED,
+                                      kind == CT_TRANSCIPHER)
                 elif ftype == wf.T_CT_CHUNK:
                     if meta is None:
                         raise wf.WireError("CT_CHUNK before UPDATE_BEGIN")
@@ -363,11 +450,22 @@ class StreamIngest:
                         raise wf.WireError(f"duplicate chunk {chunk_idx}")
                     chunks_seen.add(chunk_idx)
                     inner, _ = wf.deserialize(payload, self.ctx, off=4)
-                    if isinstance(inner, _c.SeededCiphertext):
+                    if isinstance(inner, _c.MaskedChunk):
+                        inner = self._unmask_chunk(meta, inner)
+                    elif isinstance(inner, _c.SeededCiphertext):
                         inner = inner.expand(self.ctx)
                     self._buffer_chunk(chunk_idx, inner.data, inner.scale,
                                        w_mont)
                     n_buffered += 1
+                elif ftype == wf.T_TRANSCIPHER_SEED:
+                    if meta is None:
+                        raise wf.WireError(
+                            "TRANSCIPHER_SEED before UPDATE_BEGIN")
+                    sct, _ = wf.deserialize(payload, self.ctx, off=0)
+                    escrow_key = (meta.cid, meta.round)
+                    if escrow_key not in self.escrow_seeds:
+                        escrow_added.append(escrow_key)
+                    self.escrow_seeds[escrow_key] = sct
                 elif ftype == wf.T_PLAIN_SEGMENT:
                     # decode AND shape-validate inside the rollback scope —
                     # a wire-mutated dim must reject the whole update here;
@@ -402,6 +500,8 @@ class StreamIngest:
             if n_buffered:
                 del self._pending[len(self._pending) - n_buffered:]
                 self._note_decoded(-n_buffered)
+            for k in escrow_added:
+                self.escrow_seeds.pop(k, None)
             self._in_scale = prev_in_scale
             if acc_was_uninit:
                 # the rejected chunks must not pin the limb/poly dims either

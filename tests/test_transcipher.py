@@ -1,0 +1,354 @@
+"""Transcipher (hybrid-HE) uplink: the server's homomorphic unmask must be
+BIT-IDENTICAL to the seeded-CKKS encrypt path for the same noise key, per
+derive id and per backend — plus the thin-client bound validation, the
+escrow seed ciphertext, the mod_lift kernel contract, and the StreamIngest
+materials registry (DESIGN.md §15)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ckks import cipher, encoding
+from repro.core.ckks import params as ckks_params
+from repro.core.ckks import transcipher as tc
+from repro.kernels import ops
+from repro.wire import compress as wc
+from repro.wire import format as wf
+from repro.wire import stream as ws
+
+CTX = ckks_params.make_test_context(n_poly=256, n_limbs=2, delta_bits=20)
+SK, PK = cipher.keygen(CTX, jax.random.PRNGKey(0))
+DERIVES = (cipher.DERIVE_FOLD_CHUNK, cipher.DERIVE_CTR)
+
+
+@pytest.fixture(params=["ref", "pallas", "pallas4"])
+def backend(request):
+    old = {op: ops.get_backend(op) for op in ops.OPS}
+    ops.set_backend(request.param)
+    yield request.param
+    for op, name in old.items():
+        ops.set_backend(name, op=op)
+
+
+def _values(b=3, seed=0, scale=0.1):
+    rng = np.random.RandomState(seed)
+    return (rng.randn(b, CTX.slots) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the exactness anchor: encode_np == encode_centered % qs
+# ---------------------------------------------------------------------------
+
+
+def test_encode_centered_is_pre_rns_encode_np():
+    v = _values(b=4, seed=3, scale=2.0)
+    c_int = encoding.encode_centered(v, CTX)
+    qs = np.asarray(CTX.primes, dtype=np.int64)[None, :, None]
+    np.testing.assert_array_equal(
+        (c_int[:, None, :] % qs).astype(np.uint32),
+        encoding.encode_np(v, CTX))
+
+
+def test_mod_lift_matches_numpy_per_limb(backend):
+    rng = np.random.RandomState(1)
+    x = rng.randint(0, 1 << 32, size=(5, CTX.n_poly)).astype(np.uint32)
+    out = np.asarray(ops.mod_lift(jnp.asarray(x), CTX.n_limbs, CTX))
+    qs = np.asarray(CTX.primes, dtype=np.uint64)
+    for li, q in enumerate(qs):
+        np.testing.assert_array_equal(
+            out[:, li, :], (x.astype(np.uint64) % q).astype(np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity with the seeded path, per derive x backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("derive", DERIVES)
+def test_server_unmask_bit_identical_to_seeded(derive, backend):
+    v = _values()
+    key, a_seed = jax.random.PRNGKey(42), 777
+    coeffs = jnp.asarray(encoding.encode_np(v, CTX))
+    ct_ref = cipher.encrypt_coeffs_seeded(CTX, SK, coeffs, key, a_seed,
+                                          derive=derive)
+
+    cm, sm = tc.provision(CTX, SK, key, a_seed, v.shape[0], derive=derive)
+    masked = tc.mask_values(CTX, cm, v)
+    ct = tc.server_unmask(CTX, sm, masked, 0)
+    np.testing.assert_array_equal(np.asarray(ct.data),
+                                  np.asarray(ct_ref.data))
+    assert ct.scale == ct_ref.scale
+    # and the round decrypts: client values survive mask -> unmask -> dec
+    out = cipher.decrypt_values_np(CTX, SK, ct)
+    assert float(np.abs(out - v).max()) < 3e-3
+
+
+@pytest.mark.parametrize("derive", DERIVES)
+def test_server_unmask_spanned_rows_bit_identical(derive):
+    """Streaming receivers unmask arbitrary contiguous row slices: rows
+    [1, B) unmasked at chunk_idx=1 must equal the same rows of the full
+    unmask (per-chunk derivation is slice-invariant, DESIGN.md §9.2)."""
+    v = _values(b=4, seed=5)
+    key, a_seed = jax.random.PRNGKey(9), 31337
+    cm, sm = tc.provision(CTX, SK, key, a_seed, 4, derive=derive)
+    masked = tc.mask_values(CTX, cm, v)
+    whole = tc.server_unmask(CTX, sm, masked, 0)
+    part = tc.server_unmask(CTX, sm, masked[1:], 1)
+    np.testing.assert_array_equal(np.asarray(whole.data[1:]),
+                                  np.asarray(part.data))
+
+
+def test_escrow_ct_decrypts_to_keystream_seed():
+    key, a_seed = jax.random.PRNGKey(3), 12345
+    cm, _ = tc.provision(CTX, SK, key, a_seed, 2)
+    dig = np.asarray(cipher.decrypt_values_np(CTX, SK,
+                                              cm.seed_ct)).ravel()[:4]
+    rec = sum(int(round(float(d))) << (16 * i) for i, d in enumerate(dig))
+    assert rec == cm.keystream_seed
+    assert cm.keystream_seed == a_seed + tc.PAD_SEED_OFFSET
+    assert cm.escrow_a_seed == a_seed + tc.ESCROW_SEED_OFFSET
+
+
+# ---------------------------------------------------------------------------
+# validation: bound, shape, provisioned range
+# ---------------------------------------------------------------------------
+
+
+def test_mask_rejects_out_of_bound_coefficients():
+    cm, _ = tc.provision(CTX, SK, jax.random.PRNGKey(0), 1, 1)
+    big = np.zeros((1, CTX.n_poly), dtype=np.int64)
+    big[0, 0] = 1 << tc.BOUND_BITS
+    with pytest.raises(ValueError, match="delta"):
+        tc.mask_coeffs_centered(CTX, cm, big)
+    # the max encodable magnitude is fine
+    big[0, 0] = (1 << tc.BOUND_BITS) - 1
+    out = tc.mask_coeffs_centered(CTX, cm, big)
+    assert out.dtype == np.uint32
+
+
+def test_mask_rejects_chunk_count_mismatch():
+    cm, _ = tc.provision(CTX, SK, jax.random.PRNGKey(0), 1, 2)
+    with pytest.raises(ValueError, match="chunks"):
+        tc.mask_coeffs_centered(CTX, cm,
+                                np.zeros((3, CTX.n_poly), dtype=np.int64))
+
+
+def test_unmask_rejects_rows_outside_provisioned_range():
+    _, sm = tc.provision(CTX, SK, jax.random.PRNGKey(0), 1, 2)
+    rows = np.ones((2, CTX.n_poly), dtype=np.uint32)
+    with pytest.raises(ValueError, match="provisioned range"):
+        tc.server_unmask(CTX, sm, rows, 1)       # rows [1, 3) vs [0, 2)
+
+
+def test_pad_window_never_wraps():
+    pad = np.asarray(tc.expand_pad_rows(CTX.n_poly, 999, 0, 8))
+    assert pad.min() >= (1 << tc.BOUND_BITS)
+    assert pad.max() < (1 << 32) - (1 << tc.BOUND_BITS)
+
+
+# ---------------------------------------------------------------------------
+# stream ingest: materials registry, bit parity, atomic rejection
+# ---------------------------------------------------------------------------
+
+
+def _masked_blob(v, cm, plain, cid=1, rnd=0):
+    mc = wc.MaskedChunk(masked=tc.mask_values(CTX, cm, v), a_seed=cm.a_seed,
+                        scale=cm.scale, derive=cm.derive)
+    sct = wc.seed_compress(cm.seed_ct, cm.escrow_a_seed, cm.derive)
+    return ws.pack_masked_update_frames(mc, sct, plain, cid=cid,
+                                        n_samples=2, rnd=rnd)
+
+
+@pytest.mark.parametrize("derive", DERIVES)
+def test_stream_ingest_transcipher_bit_identical_to_seeded(derive, backend):
+    v, plain = _values(seed=8), np.arange(9, dtype=np.float32)
+    key, a_seed, cid, rnd = jax.random.PRNGKey(21), 1_000_003 * 0 + 1, 1, 0
+    coeffs = jnp.asarray(encoding.encode_np(v, CTX))
+    ct_ref = cipher.encrypt_coeffs_seeded(CTX, SK, coeffs, key, a_seed,
+                                          derive=derive)
+    from repro.core.secure_agg import ProtectedUpdate
+    blob_seeded = ws.pack_update_frames(
+        ProtectedUpdate(ct=ct_ref, plain=jnp.asarray(plain)), cid=cid,
+        n_samples=2, rnd=rnd, seeded=wc.seed_compress(ct_ref, a_seed,
+                                                      derive))
+    ing_a = ws.StreamIngest(CTX)
+    ing_a.ingest(blob_seeded, 0.5)
+    agg_a = ing_a.finalize()
+
+    cm, sm = tc.provision(CTX, SK, key, a_seed, v.shape[0], derive=derive)
+    blob = _masked_blob(v, cm, plain, cid=cid, rnd=rnd)
+    meta = ws.peek_update_meta(blob)
+    assert meta.transcipher and not meta.seeded
+    ing_b = ws.StreamIngest(CTX, transcipher_materials={(cid, rnd): sm})
+    ing_b.ingest(blob, 0.5)
+    agg_b = ing_b.finalize()
+    np.testing.assert_array_equal(np.asarray(agg_a.ct.data),
+                                  np.asarray(agg_b.ct.data))
+    np.testing.assert_array_equal(np.asarray(agg_a.plain),
+                                  np.asarray(agg_b.plain))
+    # the escrow seed ciphertext was stored for the key authority
+    esc = ing_b.escrow_seeds[(cid, rnd)].expand(CTX)
+    dig = np.asarray(cipher.decrypt_values_np(CTX, SK, esc)).ravel()[:4]
+    rec = sum(int(round(float(d))) << (16 * i) for i, d in enumerate(dig))
+    assert rec == cm.keystream_seed
+
+
+def test_stream_ingest_rejects_unprovisioned_transcipher_atomically():
+    v, plain = _values(seed=2), np.zeros(4, dtype=np.float32)
+    cm, sm = tc.provision(CTX, SK, jax.random.PRNGKey(5), 77, v.shape[0])
+    blob = _masked_blob(v, cm, plain, cid=3, rnd=1)
+    ing = ws.StreamIngest(CTX)            # no materials registered
+    with pytest.raises(wf.WireError, match="no transcipher materials"):
+        ing.ingest(blob, 1.0)
+    assert ing.rejected_updates == 1 and ing._acc_ct is None
+    assert not ing._pending and not ing.escrow_seeds
+    # late provisioning heals it
+    ing.add_transcipher_materials(3, 1, sm)
+    ing.ingest(blob, 1.0)
+    assert ing.finalize() is not None
+
+
+def test_stream_ingest_rejects_mismatched_materials():
+    import dataclasses
+    v, plain = _values(seed=4), np.zeros(4, dtype=np.float32)
+    cm, sm = tc.provision(CTX, SK, jax.random.PRNGKey(6), 88, v.shape[0])
+    blob = _masked_blob(v, cm, plain, cid=2, rnd=0)
+    bad = dataclasses.replace(sm, a_seed=sm.a_seed + 1)
+    ing = ws.StreamIngest(CTX, transcipher_materials={(2, 0): bad})
+    with pytest.raises(wf.WireError, match="do not match the provisioned"):
+        ing.ingest(blob, 1.0)
+    assert ing.rejected_updates == 1 and not ing.escrow_seeds
+
+
+def test_transcipher_frames_are_v2_only():
+    v = _values(b=1)
+    cm, _ = tc.provision(CTX, SK, jax.random.PRNGKey(7), 5, 1)
+    mc = wc.MaskedChunk(masked=tc.mask_values(CTX, cm, v),
+                        a_seed=cm.a_seed, scale=cm.scale, derive=cm.derive)
+    with pytest.raises(wf.WireError, match="v1"):
+        wf.serialize_masked_chunk(mc, version=1)
+    sct = wc.seed_compress(cm.seed_ct, cm.escrow_a_seed, cm.derive)
+    with pytest.raises(wf.WireError, match="v1"):
+        wf.serialize_transcipher_seed(sct, version=1)
+
+
+def test_masked_chunk_roundtrip_and_unknown_derive_rejected():
+    import dataclasses
+    v = _values(b=2)
+    cm, _ = tc.provision(CTX, SK, jax.random.PRNGKey(8), 6, 2)
+    mc = wc.MaskedChunk(masked=tc.mask_values(CTX, cm, v),
+                        a_seed=cm.a_seed, scale=cm.scale, chunk_offset=0,
+                        derive=cm.derive)
+    out, end = wf.deserialize(wf.serialize_masked_chunk(mc))
+    assert isinstance(out, wc.MaskedChunk)
+    np.testing.assert_array_equal(out.masked, np.asarray(mc.masked))
+    assert (out.a_seed, out.scale, out.chunk_offset, out.derive) == \
+        (mc.a_seed, mc.scale, mc.chunk_offset, mc.derive)
+    blob = wf.serialize_masked_chunk(dataclasses.replace(mc, derive=9))
+    with pytest.raises(wf.WireError, match="DESIGN.md"):
+        wf.deserialize(blob)
+
+
+# ---------------------------------------------------------------------------
+# fl client + aggregation service plumbing
+# ---------------------------------------------------------------------------
+
+
+class _NoModel:
+    """protect_and_pack never touches the model; FLClient.__init__ only
+    reads .loss_fn to build the (unused here) jitted local-train step."""
+    loss_fn = staticmethod(lambda params, batch: 0.0)
+
+
+class _NoStream:
+    def next_batch(self):
+        raise AssertionError("unused")
+
+
+def test_fl_client_transcipher_mode_matches_seeded_aggregate():
+    from repro.core.secure_agg import (AggregatorConfig,
+                                       SelectiveHEAggregator)
+    from repro.fl.client import FLClient, uplink_a_seed
+    from repro.wire.compress import LOSSLESS
+
+    rng = np.random.RandomState(0)
+    m = {"w": jnp.asarray(rng.randn(60, 10), jnp.float32)}
+    sens = np.abs(rng.randn(600))
+    agg = SelectiveHEAggregator.build(CTX, m, sens,
+                                      AggregatorConfig(p_ratio=0.4))
+
+    cid, rnd = 4, 1
+    cli = FLClient(cid, _NoModel(), _NoStream())
+    key = jax.random.PRNGKey(rnd * 100_003 + cid)
+    a_seed = uplink_a_seed(rnd, cid)
+    cm, sm = tc.provision(CTX, SK, jax.random.split(key)[0], a_seed,
+                          agg.part.n_chunks, derive=cipher.DERIVE_CTR)
+    blob_tc = cli.protect_and_pack(agg, m, rnd=rnd, policy=LOSSLESS, sk=SK,
+                                   mode="transcipher",
+                                   transcipher_materials=cm)
+    ing = ws.StreamIngest(CTX, transcipher_materials={(cid, rnd): sm})
+    ing.ingest(blob_tc, 1.0)
+    rec = agg.client_recover_params(ing.finalize(), SK)
+    err = float(jnp.abs(rec["w"] - m["w"]).max())
+    assert err < 1e-2
+
+    # missing/mismatched materials are caller errors, caught before the wire
+    with pytest.raises(ValueError, match="transcipher_materials"):
+        cli.protect_and_pack(agg, m, rnd=rnd, policy=LOSSLESS,
+                             mode="transcipher")
+    import dataclasses
+    wrong = dataclasses.replace(cm, a_seed=cm.a_seed + 1)
+    with pytest.raises(ValueError, match="uplink_a_seed"):
+        cli.protect_and_pack(agg, m, rnd=rnd, policy=LOSSLESS,
+                             mode="transcipher", transcipher_materials=wrong)
+
+
+def test_fl_client_uplink_mode_env_default(monkeypatch):
+    from repro.fl.client import FLClient
+
+    cli = FLClient(0, _NoModel(), _NoStream())
+    monkeypatch.setenv("REPRO_UPLINK_MODE", "bogus")
+    from repro.core.secure_agg import (AggregatorConfig,
+                                       SelectiveHEAggregator)
+    from repro.wire.compress import LOSSLESS
+    rng = np.random.RandomState(0)
+    m = {"w": jnp.asarray(rng.randn(10, 10), jnp.float32)}
+    agg = SelectiveHEAggregator.build(CTX, m, np.abs(rng.randn(100)),
+                                      AggregatorConfig(p_ratio=0.4))
+    with pytest.raises(ValueError, match="REPRO_UPLINK_MODE"):
+        cli.protect_and_pack(agg, m, rnd=0, policy=LOSSLESS, sk=SK)
+
+
+def test_aggregation_service_folds_transcipher_updates():
+    """A transcipher blob folds through the async service exactly like a
+    seeded one once materials are registered — and an unprovisioned one is
+    dropped atomically with the round renormalizing over the survivors."""
+    from repro.serve import quorum as qr
+    from repro.serve.service import AggregationService
+
+    v1, v2 = _values(seed=11), _values(seed=12)
+    plain = np.zeros(5, dtype=np.float32)
+    key = jax.random.PRNGKey(13)
+    cm1, sm1 = tc.provision(CTX, SK, key, 1_000_003 * 0 + 0, v1.shape[0])
+    cm2, sm2 = tc.provision(CTX, SK, jax.random.PRNGKey(14),
+                            1_000_003 * 0 + 1, v2.shape[0])
+    b1 = _masked_blob(v1, cm1, plain, cid=0, rnd=0)
+    b2 = _masked_blob(v2, cm2, plain, cid=1, rnd=0)
+
+    svc = AggregationService(
+        CTX, qr.QuorumPolicy(min_clients=1, target_clients=2),
+        transcipher_materials={(0, 0): sm1})   # cid 1 NOT provisioned
+    svc.add_transcipher_materials(1, 0, sm2)   # ...until here
+    rnd_id = svc.open_round()
+    assert svc.submit(b1).accepted and svc.submit(b2).accepted
+    svc.drain()
+    out = svc.result(rnd_id)
+    assert out is not None
+
+    # reference: plain StreamIngest over the same blobs and weights
+    ing = ws.StreamIngest(CTX, transcipher_materials={(0, 0): sm1,
+                                                      (1, 0): sm2})
+    ing.ingest(b1, 0.5)
+    ing.ingest(b2, 0.5)
+    np.testing.assert_array_equal(np.asarray(out.ct.data),
+                                  np.asarray(ing.finalize().ct.data))

@@ -62,6 +62,12 @@ def _inputs(op, ctx, b, seed=7):
         return (rand((b,)),)
     if op == "mul_add":
         return (rand((b,)), rand((b,)), rand((b,)))
+    if op == "mod_lift":
+        # full-range u32 words with no limb axis: the pre-RNS masked rows
+        # of the transcipher uplink (DESIGN.md §15)
+        return (jnp.asarray(rng.randint(
+            0, 1 << 32, size=(b, ctx.n_poly),
+            dtype=np.uint64).astype(np.uint32)),)
     if op == "weighted_sum":
         return (rand((3, b)), w[:3])
     if op == "weighted_accum":

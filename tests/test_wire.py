@@ -131,6 +131,28 @@ def _seeded_ct(b=2, seed=1, a_seed=77):
                                         jax.random.PRNGKey(seed), a_seed)
 
 
+def _seeded_ct_derive(derive, b=2, seed=1, a_seed=77):
+    v = np.random.RandomState(seed).randn(b, CTX.slots).astype(np.float32)
+    coeffs = encoding.encode_jnp(jnp.asarray(v), CTX)
+    return cipher.encrypt_coeffs_seeded(CTX, SK, coeffs,
+                                        jax.random.PRNGKey(seed), a_seed,
+                                        derive=derive)
+
+
+def _provisioned(a_seed=19, n_chunks=1, seed=6):
+    from repro.core.ckks import transcipher as tc
+    return tc.provision(CTX, SK, jax.random.PRNGKey(seed), a_seed, n_chunks)
+
+
+def _masked_chunk(cm, seed=6):
+    from repro.core.ckks import transcipher as tc
+    v = np.random.RandomState(seed).randn(cm.n_chunks,
+                                          CTX.slots).astype(np.float32)
+    return wc.MaskedChunk(masked=tc.mask_values(CTX, cm, v),
+                          a_seed=cm.a_seed, scale=cm.scale,
+                          derive=cm.derive)
+
+
 def test_v1_frames_roundtrip_through_v2_decoder_bitexact():
     """Every artifact emitted in the legacy v1 layout decodes bit-exactly
     on the current (v2-default) decoder."""
@@ -205,6 +227,59 @@ def test_v2_seeded_frame_carries_and_validates_derive():
         wf.serialize_seeded_ciphertext(bad, version=1)
 
 
+def test_derive_registry_consistent_across_layers():
+    """One registry (core/ckks/cipher.py), re-exported unchanged by the
+    wire layers — the negotiation tables can never drift apart."""
+    assert cipher.DERIVES == wc.DERIVES == wf.DERIVES == (1, 2)
+    assert wc.DERIVE_FOLD_CHUNK == cipher.DERIVE_FOLD_CHUNK == 1
+    assert wc.DERIVE_CTR == cipher.DERIVE_CTR == 2
+
+
+def test_v2_seeded_frame_roundtrips_derive_ctr_bitexact():
+    """DERIVE_CTR negotiation end to end at the frame level: the v2 frame
+    carries the id, the receiver's expand regenerates the exact ciphertext,
+    and the two derive families really produce different bits."""
+    ct = _seeded_ct_derive(wc.DERIVE_CTR, b=2, seed=2, a_seed=55)
+    sct = wc.seed_compress(ct, 55, derive=wc.DERIVE_CTR)
+    out, _ = wf.deserialize(wf.serialize_seeded_ciphertext(sct))
+    assert out.derive == wc.DERIVE_CTR
+    np.testing.assert_array_equal(np.asarray(out.expand(CTX).data),
+                                  np.asarray(ct.data))
+    ct_fold = _seeded_ct_derive(wc.DERIVE_FOLD_CHUNK, b=2, seed=2, a_seed=55)
+    assert not np.array_equal(np.asarray(ct.data), np.asarray(ct_fold.data))
+    # a v1 peer cannot be sent this stream — refuse, don't reinterpret
+    with pytest.raises(wf.WireError, match="not expressible"):
+        wf.serialize_seeded_ciphertext(sct, version=1)
+
+
+def test_derive_ctr_seeded_stream_recovers_fedavg():
+    """The negotiation matrix end to end: clients protect with
+    derive=DERIVE_CTR, the packed v2 stream round-trips through
+    StreamIngest, and FedAvg recovers; packing the same update for a v1
+    peer refuses."""
+    agg, m = make_agg()
+    n = 3
+    clients = [jax.tree_util.tree_map(lambda x, i=i: x + 0.1 * i, m)
+               for i in range(n)]
+    ing = ws.StreamIngest(CTX)
+    for i, c in enumerate(clients):
+        upd = agg.client_protect_seeded(c, SK, jax.random.PRNGKey(70 + i),
+                                        a_seed=900 + i,
+                                        derive=wc.DERIVE_CTR)
+        sct = wc.seed_compress(upd.ct, 900 + i, derive=wc.DERIVE_CTR)
+        blob = ws.pack_update_frames(upd, cid=i, n_samples=4, rnd=0,
+                                     seeded=sct)
+        with pytest.raises(wf.WireError, match="not expressible"):
+            ws.pack_update_frames(upd, cid=i, n_samples=4, rnd=0,
+                                  seeded=sct, version=1)
+        ing.ingest(blob, 1.0 / n)
+    rec = agg.client_recover_params(ing.finalize(), SK)
+    expect = jax.tree_util.tree_map(lambda *xs: sum(xs) / n, *clients)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree_util.tree_leaves(rec), jax.tree_util.tree_leaves(expect)))
+    assert err < 1e-2
+
+
 # ---------------------------------------------------------------------------
 # compress: seeded uplink, limb drop, plain quantization
 # ---------------------------------------------------------------------------
@@ -271,6 +346,53 @@ def test_plain_quantization_tolerance(codec, atol):
     assert float(np.abs(out - x).max()) <= atol + 1e-9
     if codec != "f32":
         assert arr.nbytes < x.nbytes
+
+
+@pytest.mark.parametrize("x", [
+    np.zeros(0, dtype=np.float32),               # empty segment
+    np.zeros(16, dtype=np.float32),              # all-zero segment
+], ids=["empty", "all-zero"])
+def test_i8_degenerate_segments_quantize_to_zeros_scale_one(x):
+    """Regression: amax == 0 made scale = 0 and x/scale put NaN on the
+    wire.  Degenerate segments must emit zeros with scale 1 instead."""
+    arr, qscale = wc.quantize_plain(x, "i8")
+    assert qscale == 1.0 and arr.dtype == np.int8 and not arr.any()
+    out = wc.dequantize_plain(arr, "i8", qscale)
+    assert np.isfinite(out).all() and not out.any()
+
+
+def test_i8_single_nonzero_and_subnormal_amax_stay_finite():
+    x = np.zeros(10, dtype=np.float32)
+    x[3] = 0.5
+    arr, qscale = wc.quantize_plain(x, "i8")
+    out = wc.dequantize_plain(arr, "i8", qscale)
+    assert np.isfinite(out).all()
+    assert float(np.abs(out - x).max()) <= 0.5 / 127 + 1e-9
+    # a subnormal amax must never produce NaN/inf on the wire, whichever
+    # branch (guard or normal quantization) it takes
+    tiny = np.full(8, 1e-42, dtype=np.float32)
+    arr, qscale = wc.quantize_plain(tiny, "i8")
+    assert np.isfinite(qscale) and qscale > 0.0
+    assert np.isfinite(arr.astype(np.float64)).all()
+    out = wc.dequantize_plain(arr, "i8", qscale)
+    assert np.isfinite(out).all()
+    assert float(np.abs(out - tiny).max()) <= 1e-42
+
+
+def test_i8_all_zero_plain_survives_update_stream():
+    """End to end: an all-zero plain partition under the i8 codec packs,
+    ingests, and aggregates to exact zeros (it used to poison the fold
+    with NaN)."""
+    agg, m = make_agg()
+    upd = agg.client_protect(m, PK, jax.random.PRNGKey(8))
+    zeroed = ProtectedUpdate(ct=upd.ct, plain=jnp.zeros_like(upd.plain))
+    blob = ws.pack_update_frames(zeroed, cid=0, n_samples=1,
+                                 plain_codec="i8")
+    ing = ws.StreamIngest(CTX)
+    ing.ingest(blob, 1.0)
+    out = ing.finalize()
+    assert np.isfinite(np.asarray(out.plain)).all()
+    assert not np.asarray(out.plain).any()
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +555,16 @@ def _fuzz_corpus() -> tuple:
     for v in (1, 2):
         blobs.append(wf.serialize_update(
             upd_s, seeded=wc.seed_compress(upd_s.ct, 9), version=v))
+    # the v2-only paths: DERIVE_CTR seeded frames and the transcipher
+    # (masked chunk + escrow seed) frames
+    sct_ctr = wc.seed_compress(
+        _seeded_ct_derive(wc.DERIVE_CTR, b=1, seed=4, a_seed=13), 13,
+        derive=wc.DERIVE_CTR)
+    blobs.append(wf.serialize_seeded_ciphertext(sct_ctr))
+    cm, _ = _provisioned(a_seed=19, n_chunks=1, seed=6)
+    blobs.append(wf.serialize_masked_chunk(_masked_chunk(cm, seed=6)))
+    blobs.append(wf.serialize_transcipher_seed(
+        wc.seed_compress(cm.seed_ct, cm.escrow_a_seed, cm.derive)))
     return tuple(bytes(b) for b in blobs)
 
 
@@ -512,6 +644,37 @@ def test_fuzz_stream_ingest_never_crashes():
             rejected += 1
     assert rejected > 0
     # after arbitrary rejections the ingest still accepts a clean update
+    ing.ingest(blob, 1.0)
+    assert ing.finalize() is not None
+
+
+def test_fuzz_transcipher_stream_ingest_never_crashes():
+    """Same property for the masked (transcipher) update stream: mutations
+    and truncations reject with WireError, leave no partial state, and the
+    ingest still accepts the clean blob afterwards."""
+    from repro.core.ckks import transcipher as tc
+    cm, sm = _provisioned(a_seed=19, n_chunks=2, seed=6)
+    v = np.random.RandomState(6).randn(2, CTX.slots).astype(np.float32)
+    mc = wc.MaskedChunk(masked=tc.mask_values(CTX, cm, v), a_seed=cm.a_seed,
+                        scale=cm.scale, derive=cm.derive)
+    sct = wc.seed_compress(cm.seed_ct, cm.escrow_a_seed, cm.derive)
+    blob = ws.pack_masked_update_frames(
+        mc, sct, np.zeros(4, np.float32), cid=0, n_samples=1, rnd=0)
+    rng = np.random.RandomState(3)
+    ing = ws.StreamIngest(CTX, transcipher_materials={(0, 0): sm})
+    rejected = 0
+    for _ in range(60):
+        b = bytearray(blob)
+        if rng.rand() < 0.5:
+            b = b[:rng.randint(0, len(blob))]
+        else:
+            b[rng.randint(0, len(b))] ^= 1 + rng.randint(0, 255)
+        try:
+            ing.ingest(bytes(b), 0.5)
+        except wf.WireError:
+            rejected += 1
+            assert not ing._pending
+    assert rejected > 0
     ing.ingest(blob, 1.0)
     assert ing.finalize() is not None
 

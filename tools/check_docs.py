@@ -25,7 +25,11 @@ Checks (default mode — exit nonzero on any failure):
   8. the selective pipeline stays documented: README `benchmarks.run
      selective` pointer + rendered BENCH_selective table + the
      REPRO_WIRE_VERSION env row, and the DESIGN.md §13 section (mask
-     agreement -> partition -> wire -> merge, overhead accounting).
+     agreement -> partition -> wire -> merge, overhead accounting);
+  9. the transcipher uplink stays documented: README `REPRO_UPLINK_MODE`
+     env row + thin-client quickstart + `benchmarks.run uplink-hybrid` /
+     tests/test_transcipher.py pointers, and the DESIGN.md §15 section
+     (encode_centered / mod_lift contract, frame + escrow semantics).
 
 `--write` regenerates the README tables in place between the
 BENCH_TABLES_START/END markers instead of failing on drift.
@@ -254,6 +258,31 @@ def render_bench_tables() -> str:
                f"{c['rounds']} rounds): "
                f"**{sv['sustained_updates_per_s']:,.0f} updates/s** "
                f"({sv['wall_s']:.1f}s wall).")
+    out.append("")
+
+    hy_path = os.path.join(ROOT, "BENCH_uplink_hybrid.json")
+    hy = json.load(open(hy_path))
+    out.append(
+        f"**Thin-client transcipher uplink vs seeded CKKS** "
+        f"(`benchmarks/run.py uplink-hybrid`; N={hy['n_poly']}, "
+        f"L={hy['n_limbs']}, {hy['n_chunks']} chunks, delta 2^"
+        f"{hy['delta_bits']}, backend `{hy['provenance']['backend']}`; "
+        "client sends masked i64 coefficients + one escrowed keystream "
+        "seed, server unmasks homomorphically — DESIGN.md §15):\n")
+    out.append("| derive | seeded encrypt ms | masked pack ms | "
+               "client speedup | seeded B | masked B | uplink ratio | "
+               "bit-parity |")
+    out.append("|--------|------------------:|---------------:|"
+               "---------------:|---------:|---------:|-------------:|"
+               ":----------:|")
+    for name in ("fold_chunk", "ctr"):
+        r = hy["per_derive"][name]
+        out.append(
+            f"| {name} | {r['seeded_encrypt_ms']:.2f} | "
+            f"{r['masked_encrypt_ms']:.2f} | "
+            f"{r['encrypt_speedup']:.2f}x | {r['seeded_B']:,} | "
+            f"{r['masked_B']:,} | {r['uplink_ratio']:.2f}x | "
+            f"{'yes' if r['bit_parity'] else 'NO'} |")
     return "\n".join(out) + "\n"
 
 
@@ -296,7 +325,8 @@ def check_wire_spec() -> list[str]:
     if spec_derives != tuple(wf.DERIVES):
         errors.append(f"DESIGN.md §9.2: derive ids {spec_derives} != "
                       f"wire/format.py {tuple(wf.DERIVES)}")
-    for needed in ("u8 derive", "fold_in", "chunk_offset + b"):
+    for needed in ("u8 derive", "fold_in", "chunk_offset + b",
+                   "DERIVE_CTR"):
         if needed not in text:
             errors.append(f"DESIGN.md §9.2: normative appendix no longer "
                           f"spells out '{needed}'")
@@ -443,6 +473,46 @@ def check_serve_docs() -> list[str]:
     return errors
 
 
+def check_transcipher_docs() -> list[str]:
+    """The transcipher uplink must stay documented: README needs the
+    `REPRO_UPLINK_MODE` env row, the thin-client quickstart section, and
+    `benchmarks.run uplink-hybrid` / tests/test_transcipher.py pointers;
+    DESIGN.md needs the §15 section covering the encode_centered /
+    mod_lift exactness contract, provisioning, and the frame + escrow
+    ingest semantics."""
+    errors = []
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    if not any(ln.startswith("| `REPRO_UPLINK_MODE")
+               for ln in readme.splitlines()):
+        errors.append("README.md: missing the `REPRO_UPLINK_MODE` row in "
+                      "the 'Environment variables & flags' table")
+    if not re.search(r"^## Thin-client transcipher uplink quickstart",
+                     readme, re.MULTILINE):
+        errors.append("README.md: missing the 'Thin-client transcipher "
+                      "uplink quickstart' section")
+    if "benchmarks.run uplink-hybrid" not in readme:
+        errors.append("README.md: transcipher docs no longer point at "
+                      "`benchmarks.run uplink-hybrid`")
+    if "tests/test_transcipher.py" not in readme:
+        errors.append("README.md: transcipher docs no longer point at "
+                      "tests/test_transcipher.py")
+    design = open(os.path.join(ROOT, "DESIGN.md")).read()
+    sec = re.search(r"^## §15 .*?(?=\n## |\Z)", design,
+                    re.MULTILINE | re.DOTALL)
+    if not sec:
+        errors.append("DESIGN.md: missing the '## §15' transcipher-uplink "
+                      "section")
+        return errors
+    for needed in ("encode_centered", "mod_lift", "MASKED_CHUNK",
+                   "TRANSCIPHER_SEED", "ClientMaterials", "ServerMaterials",
+                   "provision", "escrow", "uplink_a_seed",
+                   "add_transcipher_materials"):
+        if needed not in sec.group(0):
+            errors.append(f"DESIGN.md §15: transcipher section no longer "
+                          f"covers '{needed}'")
+    return errors
+
+
 def check_or_write_tables(write: bool) -> list[str]:
     path = os.path.join(ROOT, "README.md")
     text = open(path).read()
@@ -495,10 +565,12 @@ def _run_snippet(heading: str) -> list[str]:
 
 def run_quickstart() -> list[str]:
     """Execute the README snippets: the encrypted-averaging quickstart,
-    the sharded-uplink quickstart, and the aggregation-service quickstart
-    (each is the first ```bash block after its heading)."""
+    the sharded-uplink quickstart, the aggregation-service quickstart,
+    and the thin-client transcipher quickstart (each is the first
+    ```bash block after its heading)."""
     return (_run_snippet(r"quickstart") + _run_snippet(r"sharded uplink")
-            + _run_snippet(r"aggregation service"))
+            + _run_snippet(r"aggregation service")
+            + _run_snippet(r"thin-client transcipher"))
 
 
 def check_gold_kats() -> list[str]:
@@ -531,6 +603,7 @@ def main() -> int:
     errors += check_tune_docs()
     errors += check_selective_docs()
     errors += check_serve_docs()
+    errors += check_transcipher_docs()
     if not args.no_exec and not args.write:
         errors += run_quickstart()
         errors += check_gold_kats()
