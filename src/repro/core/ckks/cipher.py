@@ -101,7 +101,14 @@ def _gaussian_residues(key, shape, qs, sigma: float):
 # fold_in (it never crosses the wire).
 
 DERIVE_FOLD_CHUNK = 1    # chunk i's key = fold_in(base, i)
-DERIVE_CTR = 2           # chunk i's key = [base_hi, base_lo + i] (counter)
+DERIVE_CTR = 2           # chunk i's key = [h_hi, h_lo + i], h = one
+                         # fold_in hash of the base key (counter mode)
+
+# DERIVE_CTR domain-separation tag: every counter stream starts from
+# fold_in(base, _CTR_TAG), so base keys that differ in ANY bit map to
+# unrelated counter blocks (PRNGKey(s) and PRNGKey(s+1) differ only in
+# the low word — without the hash their streams would be shifted copies).
+_CTR_TAG = 0x435452      # "CTR"
 
 
 def _fold_chunk_keys(base, start, count: int):
@@ -116,16 +123,27 @@ def _fold_chunk_keys(base, start, count: int):
 
 
 def _ctr_keys(base, start, count: int):
-    """DERIVE_CTR: chunk i's key is the raw uint32[2] block
-    [base_hi, base_lo + i] — a textbook counter-mode input block over the
-    base key's words (wrap is mod 2^32, matching the u32 wire id space).
-    Cheaper to derive than a fold_in chain (no hash per chunk) and equally
-    shard-invariant: the counter is the GLOBAL chunk index."""
-    base = jnp.asarray(base, dtype=jnp.uint32)
+    """DERIVE_CTR: ONE fold_in hash of the base key (domain separation,
+    `_CTR_TAG`), then chunk i's key is the raw uint32[2] counter block
+    [h_hi, h_lo + i] over the hashed words (wrap is mod 2^32, matching the
+    u32 wire id space).  Still cheaper than a fold_in chain — one hash per
+    STREAM, not per chunk — and equally shard-invariant: the counter is
+    the GLOBAL chunk index.
+
+    The up-front hash is load-bearing: callers key streams from SEQUENTIAL
+    seeds (fl.client.uplink_a_seed packs rnd*1_000_003 + cid, so adjacent
+    clients' base keys differ only in the low word).  Counting over the
+    RAW words would make client cid's chunk i+1 key equal client cid+1's
+    chunk i key — the same uniform `a` (and pad) row reused across
+    different ciphertexts, the exact a_seed-reuse leak the seeded-path
+    docstrings warn about.  Hashing first maps nearby seeds to unrelated
+    counter blocks, so cross-stream collisions need a ~2^-64 birthday
+    coincidence instead of mere adjacency."""
+    h = jnp.asarray(jax.random.fold_in(base, _CTR_TAG), dtype=jnp.uint32)
     ctr = jnp.asarray(start, jnp.uint32) + jnp.arange(count,
                                                       dtype=jnp.uint32)
-    hi = jnp.broadcast_to(base[0], ctr.shape)
-    return jnp.stack([hi, base[1] + ctr], axis=-1)
+    hi = jnp.broadcast_to(h[0], ctr.shape)
+    return jnp.stack([hi, h[1] + ctr], axis=-1)
 
 
 DERIVE_KEYFNS = {DERIVE_FOLD_CHUNK: _fold_chunk_keys,

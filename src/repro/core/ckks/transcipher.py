@@ -12,8 +12,14 @@ output is BIT-IDENTICAL to the seeded-CKKS path (the acceptance
 invariant, pinned by tests/test_transcipher.py):
 
   offline (provisioner = any sk holder, per client x round):
+    seed    = FRESH SECRET keystream seed (64-bit), drawn from the
+              provisioner's secret noise PRNG key — never from the
+              wire-public a_seed (the pad must depend on secret material;
+              it reaches the client only inside ClientMaterials, i.e. out
+              of band, and auditors only via seed_ct)
     c0_zero = c0 of a seeded encryption of ZERO        (-a s + e, [B, L, N])
-    K       = keystream pad, uniform u32[B, N] in [2^30, 2^32 - 2^30)
+    K       = keystream pad = PRG(seed), uniform u32[B, N] in
+              [2^30, 2^32 - 2^30)
     D       = c0_zero - NTT(lift(K))                   (server material)
     seed_ct = tiny seeded CKKS encryption of the keystream seed's four
               u16 digits (1 chunk) under escrow_a_seed — the
@@ -65,24 +71,44 @@ from repro.kernels import ops
 BOUND_BITS = 30
 _PAD_LO = np.uint32(1 << BOUND_BITS)
 
-# seed-space partition on top of the caller's per-(client, round) a_seed:
-# the escrow ciphertext and the pad stream get their own disjoint 64-bit
-# seed regions so no PRNG stream is keyed twice (a_seed itself stays
-# < 2**40 in every caller — fl/client.py derives it as rnd*1e6 + cid).
+# the escrow ciphertext's own (public) a_seed lives in a region disjoint
+# from every caller-issued update a_seed, so no PUBLIC a stream is keyed
+# twice (a_seed itself stays < 2**40 in every caller — fl/client.py
+# derives it as rnd*1e6 + cid).  The keystream seed is NOT partitioned
+# from a_seed: it is fresh secret material (see provision) — deriving it
+# from any wire-public value would let a passive observer recompute the
+# pad and strip the mask.
 ESCROW_SEED_OFFSET = 1 << 40
-PAD_SEED_OFFSET = 1 << 41
+
+# fold_in tag under which provision() draws the secret keystream seed
+# from the noise key (disjoint from the per-chunk noise ids 0..B-1 and
+# the escrow-noise tag 0x5EED).
+_PAD_KEY_TAG = 0x5AD5EED
+
+
+def _pad_base_key(keystream_seed: int):
+    """The 64-bit keystream seed as raw threefry key words [hi, lo] —
+    what PRNGKey(seed) builds, but accepting the full u64 range (PRNGKey
+    overflows past 2^63, and secret seeds are uniform over 64 bits)."""
+    s = int(keystream_seed)
+    return jnp.array([(s >> 32) & 0xFFFFFFFF, s & 0xFFFFFFFF],
+                     dtype=jnp.uint32)
 
 
 def expand_pad_rows(n_poly: int, keystream_seed: int, start, count: int,
                     derive: int = DERIVE_CTR):
     """Keystream pad rows u32[count, N], uniform in [2^30, 2^32 - 2^30).
 
-    Per-chunk keys come from the SAME wire-negotiated derive registry as
-    the a stream (cipher.derive_chunk_keys), so pads are re-derivable for
-    any contiguous chunk slice — client and provisioner agree bit for bit,
+    `keystream_seed` is SECRET (provision() draws it from the
+    provisioner's noise key): everything else here — the derive registry,
+    the chunk indices — is public, so the seed is the only thing standing
+    between a wire observer and the pad.  Per-chunk keys come from the
+    SAME wire-negotiated derive registry as the a stream
+    (cipher.derive_chunk_keys), so pads are re-derivable for any
+    contiguous chunk slice — client and provisioner agree bit for bit,
     and streaming chunks need no global state.  The window is exactly
     [2^30, 3*2^30): lo + a uniform 31-bit draw."""
-    base = jax.random.PRNGKey(int(keystream_seed))
+    base = _pad_base_key(keystream_seed)
     keys = cipher.derive_chunk_keys(base, start, count, derive)
     hi = jnp.uint32(1 << 31)      # u32 literal: 2**31 overflows int32 args
     return jax.vmap(
@@ -103,7 +129,10 @@ def escrow_values(keystream_seed: int, ctx: CkksContext) -> np.ndarray:
 class ClientMaterials:
     """What a thin client holds for one (client, round): symmetric key
     material plus the pre-provisioned escrow ciphertext it forwards.
-    Contains NO secret-key material and requires NO NTT to use."""
+    Contains NO CKKS secret-key material and requires NO NTT to use.
+    `keystream_seed` is the symmetric SECRET: it must reach the client
+    over a confidential channel (the HHE setup phase), never the
+    aggregation wire — only its escrow ciphertext is ever serialized."""
 
     keystream_seed: int
     a_seed: int
@@ -132,15 +161,36 @@ class ServerMaterials:
 
 def provision(ctx: CkksContext, sk: dict, key, a_seed: int, n_chunks: int,
               *, chunk_offset: int = 0, derive: int = DERIVE_CTR,
-              scale: float | None = None
+              scale: float | None = None, keystream_seed: int | None = None
               ) -> tuple[ClientMaterials, ServerMaterials]:
-    """Offline HHE setup for one (client, round): derive the keystream
-    seed, build the server's unmask material D, and escrow-encrypt the
-    seed.  `key` is the noise PRNG key the SEEDED path would have used —
-    same key, same a_seed => the unmasked server ciphertext is bit-
-    identical to `encrypt_coeffs_seeded` (the tests' invariant)."""
+    """Offline HHE setup for one (client, round): draw a fresh SECRET
+    keystream seed, build the server's unmask material D, and
+    escrow-encrypt the seed.  `key` is the noise PRNG key the SEEDED path
+    would have used — same key, same a_seed => the unmasked server
+    ciphertext is bit-identical to `encrypt_coeffs_seeded` (the tests'
+    invariant).
+
+    The keystream seed is the pad's only secret: by default it is drawn
+    from `key` (which never crosses the wire), or the caller supplies one
+    established out of band (`keystream_seed=`).  It must NEVER be derived
+    from a_seed or any other wire-visible value — a_seed rides cleartext
+    in every MASKED_CHUNK frame, so a pad re-derivable from it would hand
+    the plaintext update to any passive observer.  It reaches the client
+    only inside ClientMaterials and auditors only via the escrow
+    ciphertext; ServerMaterials never contains it."""
     scale = float(scale if scale is not None else ctx.delta)
-    keystream_seed = int(a_seed) + PAD_SEED_OFFSET
+    if keystream_seed is None:
+        # four u16 digits from the secret noise key -> uniform 64-bit seed
+        # (the same digit decomposition escrow_values() encrypts)
+        digits = jax.random.randint(jax.random.fold_in(key, _PAD_KEY_TAG),
+                                    (4,), 0, 1 << 16)
+        keystream_seed = sum(int(d) << (16 * i)
+                             for i, d in enumerate(np.asarray(digits)))
+    keystream_seed = int(keystream_seed)
+    if not 0 <= keystream_seed < 1 << 64:
+        raise ValueError(
+            f"keystream_seed must fit the escrow encoding's 64 bits, got "
+            f"{keystream_seed}")
     escrow_a_seed = int(a_seed) + ESCROW_SEED_OFFSET
     l = ctx.n_limbs
     zeros = jnp.zeros((n_chunks, l, ctx.n_poly), dtype=jnp.uint32)

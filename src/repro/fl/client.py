@@ -30,9 +30,12 @@ UPLINK_MODE_ENV = "REPRO_UPLINK_MODE"
 
 def uplink_a_seed(rnd: int, cid: int) -> int:
     """The per-(client, round) public seed every uplink path keys its a
-    stream (and, via transcipher.provision's offsets, its keystream) from.
-    One shared definition so the client and the server-side provisioner
-    (serve/service.py) agree without negotiation."""
+    stream (and, via transcipher.provision's escrow offset, the escrow
+    frame's a stream) from.  One shared definition so the client and the
+    server-side provisioner (serve/service.py) agree without negotiation.
+    PUBLIC by design — the transcipher keystream seed is deliberately NOT
+    derived from it (transcipher.provision draws it from secret
+    material)."""
     return rnd * 1_000_003 + cid
 
 

@@ -56,6 +56,11 @@ _BEGIN = struct.Struct("<IIIIB")
 CT_FULL = 0
 CT_SEEDED = 1
 CT_TRANSCIPHER = 2
+_CT_KINDS = (CT_FULL, CT_SEEDED, CT_TRANSCIPHER)
+
+# escrow-rollback sentinel: "this (cid, round) had no escrow seed before
+# the update under ingest touched it"
+_ESCROW_MISSING = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -427,7 +432,8 @@ class StreamIngest:
         chunks_seen: set[int] = set()
         plain_segments = []            # folded only after validation
         n_buffered = 0
-        escrow_added: list = []        # escrow keys this update introduced
+        escrow_prev: dict = {}         # escrow keys this update touched
+                                       # -> prior value (or _ESCROW_MISSING)
         prev_in_scale = self._in_scale
         acc_was_uninit = self._acc_ct is None
         try:
@@ -435,6 +441,10 @@ class StreamIngest:
                 if ftype == wf.T_UPDATE_BEGIN:
                     cid, n_samples, rnd, n_chunks, kind = _BEGIN.unpack_from(
                         payload, 0)
+                    if kind not in _CT_KINDS:
+                        raise wf.WireError(
+                            f"unknown ct_kind {kind} in UPDATE_BEGIN; this "
+                            f"build implements {_CT_KINDS}")
                     meta = UpdateMeta(cid, n_samples, rnd, n_chunks,
                                       kind == CT_SEEDED,
                                       kind == CT_TRANSCIPHER)
@@ -450,6 +460,22 @@ class StreamIngest:
                         raise wf.WireError(f"duplicate chunk {chunk_idx}")
                     chunks_seen.add(chunk_idx)
                     inner, _ = wf.deserialize(payload, self.ctx, off=4)
+                    # the nested payload kind must MATCH the declared
+                    # ct_kind: dispatching on isinstance alone would let a
+                    # masked chunk slip into a seeded/full update (or vice
+                    # versa), misclassifying UpdateMeta and the ledger —
+                    # a wire-consistency violation, rejected atomically
+                    got = ("masked" if isinstance(inner, _c.MaskedChunk)
+                           else "seeded"
+                           if isinstance(inner, _c.SeededCiphertext)
+                           else "full")
+                    want = ("masked" if meta.transcipher
+                            else "seeded" if meta.seeded else "full")
+                    if got != want:
+                        raise wf.WireError(
+                            f"CT_CHUNK {chunk_idx} carries a {got} payload "
+                            f"but the update's declared ct_kind expects "
+                            f"{want}")
                     if isinstance(inner, _c.MaskedChunk):
                         inner = self._unmask_chunk(meta, inner)
                     elif isinstance(inner, _c.SeededCiphertext):
@@ -461,10 +487,20 @@ class StreamIngest:
                     if meta is None:
                         raise wf.WireError(
                             "TRANSCIPHER_SEED before UPDATE_BEGIN")
+                    if not meta.transcipher:
+                        raise wf.WireError(
+                            "TRANSCIPHER_SEED frame in a non-transcipher "
+                            "update (declared ct_kind is not "
+                            "CT_TRANSCIPHER)")
                     sct, _ = wf.deserialize(payload, self.ctx, off=0)
+                    if not isinstance(sct, _c.SeededCiphertext):
+                        raise wf.WireError(
+                            "TRANSCIPHER_SEED must nest a seeded-"
+                            f"ciphertext frame, got {type(sct).__name__}")
                     escrow_key = (meta.cid, meta.round)
-                    if escrow_key not in self.escrow_seeds:
-                        escrow_added.append(escrow_key)
+                    if escrow_key not in escrow_prev:
+                        escrow_prev[escrow_key] = self.escrow_seeds.get(
+                            escrow_key, _ESCROW_MISSING)
                     self.escrow_seeds[escrow_key] = sct
                 elif ftype == wf.T_PLAIN_SEGMENT:
                     # decode AND shape-validate inside the rollback scope —
@@ -500,8 +536,14 @@ class StreamIngest:
             if n_buffered:
                 del self._pending[len(self._pending) - n_buffered:]
                 self._note_decoded(-n_buffered)
-            for k in escrow_added:
-                self.escrow_seeds.pop(k, None)
+            # restore every escrow entry this update touched to its PRIOR
+            # value — a rejected re-submission must not leave its seed
+            # ciphertext shadowing the accepted one in the audit trail
+            for k, prev in escrow_prev.items():
+                if prev is _ESCROW_MISSING:
+                    self.escrow_seeds.pop(k, None)
+                else:
+                    self.escrow_seeds[k] = prev
             self._in_scale = prev_in_scale
             if acc_was_uninit:
                 # the rejected chunks must not pin the limb/poly dims either

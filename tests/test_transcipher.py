@@ -105,8 +105,49 @@ def test_escrow_ct_decrypts_to_keystream_seed():
                                               cm.seed_ct)).ravel()[:4]
     rec = sum(int(round(float(d))) << (16 * i) for i, d in enumerate(dig))
     assert rec == cm.keystream_seed
-    assert cm.keystream_seed == a_seed + tc.PAD_SEED_OFFSET
     assert cm.escrow_a_seed == a_seed + tc.ESCROW_SEED_OFFSET
+
+
+def test_keystream_seed_is_secret_not_wire_derivable():
+    """Regression (review): the pad seed must depend on the provisioner's
+    SECRET noise key — a seed derived from the wire-public a_seed would
+    let any passive observer recompute the pad and recover the plaintext
+    update as masked - K."""
+    a_seed = 12345
+    cm1, sm1 = tc.provision(CTX, SK, jax.random.PRNGKey(1), a_seed, 2)
+    cm2, _ = tc.provision(CTX, SK, jax.random.PRNGKey(2), a_seed, 2)
+    # same public inputs, different secret keys -> different pad seeds
+    assert cm1.keystream_seed != cm2.keystream_seed
+    assert 0 <= cm1.keystream_seed < 1 << 64
+    # and specifically NOT the old public derivation a_seed + 2^41
+    assert cm1.keystream_seed != a_seed + (1 << 41)
+    # the server's materials never contain the seed
+    assert not hasattr(sm1, "keystream_seed")
+    # out-of-band provisioning is honored verbatim (and range-checked)
+    cm3, _ = tc.provision(CTX, SK, jax.random.PRNGKey(1), a_seed, 2,
+                          keystream_seed=0xDEADBEEF)
+    assert cm3.keystream_seed == 0xDEADBEEF
+    with pytest.raises(ValueError, match="64 bits"):
+        tc.provision(CTX, SK, jax.random.PRNGKey(1), a_seed, 2,
+                     keystream_seed=1 << 64)
+
+
+def test_ctr_derive_streams_disjoint_for_sequential_seeds():
+    """Regression (review): uplink_a_seed issues SEQUENTIAL seeds, so
+    DERIVE_CTR must not give seed s's chunk b+1 the same key as seed
+    s+1's chunk b — counter mode over the raw PRNGKey words did exactly
+    that; the registry now hashes the base key once before counting."""
+    for s in (0, 777, 1_000_003):
+        k0 = np.asarray(cipher.derive_chunk_keys(
+            jax.random.PRNGKey(s), 0, 8, cipher.DERIVE_CTR))
+        k1 = np.asarray(cipher.derive_chunk_keys(
+            jax.random.PRNGKey(s + 1), 0, 8, cipher.DERIVE_CTR))
+        assert not (k0[:, None, :] == k1[None, :, :]).all(-1).any(), \
+            f"CTR chunk keys overlap between base seeds {s} and {s + 1}"
+    # ...and the expanded pad rows are likewise disjoint
+    p0 = np.asarray(tc.expand_pad_rows(CTX.n_poly, 500, 0, 4))
+    p1 = np.asarray(tc.expand_pad_rows(CTX.n_poly, 501, 0, 4))
+    assert not (p0[:, None, :] == p1[None, :, :]).all(-1).any()
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +259,76 @@ def test_stream_ingest_rejects_mismatched_materials():
     with pytest.raises(wf.WireError, match="do not match the provisioned"):
         ing.ingest(blob, 1.0)
     assert ing.rejected_updates == 1 and not ing.escrow_seeds
+
+
+def test_rejected_update_restores_prior_escrow_seed():
+    """Regression (review): a rejected re-submission for a (cid, round)
+    that already has an escrow seed must restore the PRIOR ciphertext —
+    not leave the rejected update's seed shadowing it in the audit
+    trail."""
+    import dataclasses
+    v, plain = _values(seed=21), np.zeros(4, dtype=np.float32)
+    cid, rnd = 6, 2
+    cm, sm = tc.provision(CTX, SK, jax.random.PRNGKey(15), 55, v.shape[0])
+    ing = ws.StreamIngest(CTX, transcipher_materials={(cid, rnd): sm})
+    ing.ingest(_masked_blob(v, cm, plain, cid=cid, rnd=rnd), 1.0)
+    before = ing.escrow_seeds[(cid, rnd)]
+    # a second update for the same key: different escrow seed ct, and a
+    # chunk a_seed that mismatches the materials -> rejected AFTER its
+    # TRANSCIPHER_SEED frame overwrote the escrow entry
+    bad_cm = dataclasses.replace(cm, a_seed=cm.a_seed + 1,
+                                 escrow_a_seed=cm.escrow_a_seed + 7)
+    with pytest.raises(wf.WireError, match="do not match the provisioned"):
+        ing.ingest(_masked_blob(v, bad_cm, plain, cid=cid, rnd=rnd), 1.0)
+    assert ing.escrow_seeds[(cid, rnd)].seed == before.seed
+    assert ing.finalize() is not None
+
+
+def test_chunk_kind_must_match_declared_ct_kind():
+    """Regression (review): a MaskedChunk nested in a CT_FULL/CT_SEEDED
+    update (or a seeded chunk in a CT_TRANSCIPHER one) is a
+    wire-consistency violation — rejected atomically, never silently
+    accepted under the wrong UpdateMeta classification."""
+    import struct
+    v = _values(b=1, seed=22)
+    cm, sm = tc.provision(CTX, SK, jax.random.PRNGKey(16), 66, 1)
+    mc = wc.MaskedChunk(masked=tc.mask_values(CTX, cm, v),
+                        a_seed=cm.a_seed, scale=cm.scale, derive=cm.derive)
+    arr, qscale = wc.quantize_plain(np.zeros(3, np.float32), "f32")
+
+    def blob(kind, inner):
+        return b"".join([
+            wf.frame(wf.T_UPDATE_BEGIN, ws._BEGIN.pack(1, 1, 0, 1, kind)),
+            wf.frame(wf.T_CT_CHUNK, struct.pack("<I", 0) + inner),
+            wf.serialize_plain_segment(arr, "f32", qscale),
+            wf.frame(wf.T_UPDATE_END, b"")])
+
+    masked_inner = wf.serialize_masked_chunk(mc)
+    key, a_seed = jax.random.PRNGKey(17), 66
+    ct = cipher.encrypt_values_seeded(CTX, SK, jnp.asarray(v), key, a_seed)
+    seeded_inner = wf.serialize_seeded_ciphertext(
+        wc.seed_compress(ct, a_seed, cipher.DERIVE_FOLD_CHUNK))
+    ing = ws.StreamIngest(CTX, transcipher_materials={(1, 0): sm})
+    for kind, inner in ((ws.CT_FULL, masked_inner),
+                        (ws.CT_SEEDED, masked_inner),
+                        (ws.CT_TRANSCIPHER, seeded_inner)):
+        with pytest.raises(wf.WireError, match="declared ct_kind"):
+            ing.ingest(blob(kind, inner), 1.0)
+    # unknown kind bytes and stray TRANSCIPHER_SEED frames reject too
+    with pytest.raises(wf.WireError, match="unknown ct_kind"):
+        ing.ingest(blob(7, seeded_inner), 1.0)
+    sct = wc.seed_compress(cm.seed_ct, cm.escrow_a_seed, cm.derive)
+    stray = b"".join([
+        wf.frame(wf.T_UPDATE_BEGIN, ws._BEGIN.pack(1, 1, 0, 1,
+                                                   ws.CT_SEEDED)),
+        wf.serialize_transcipher_seed(sct),
+        wf.frame(wf.T_CT_CHUNK, struct.pack("<I", 0) + seeded_inner),
+        wf.serialize_plain_segment(arr, "f32", qscale),
+        wf.frame(wf.T_UPDATE_END, b"")])
+    with pytest.raises(wf.WireError, match="non-transcipher"):
+        ing.ingest(stray, 1.0)
+    assert ing.rejected_updates == 5 and ing._acc_ct is None
+    assert not ing._pending and not ing.escrow_seeds
 
 
 def test_transcipher_frames_are_v2_only():
